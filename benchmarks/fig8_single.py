@@ -1,0 +1,60 @@
+"""Paper Fig. 8: single-instance throughput & latency, CoCoServe vs HFT vs
+vLLM, LLaMA2-13B and LLaMA2-70B, low (3-30) and high (31-50) RPS bands."""
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.workload import WorkloadConfig
+
+
+def run():
+    t0 = time.perf_counter()
+    out_rows = []
+    for model in ("llama2-13b", "llama2-70b"):
+        cfg = get_config(model)
+        n_dev = 4
+        print(f"# Fig 8 ({model}, single instance, 4 devices)")
+        print(f"{'rps':>4s} {'system':>10s} {'thr tok/s':>10s} "
+              f"{'latency s':>10s} {'slo':>5s}")
+        ratios = {"hft": ([], []), "vllm": ([], [])}
+        for rps in (5, 10, 20, 30, 40, 50):
+            res = {}
+            for system in ("hft", "vllm", "cocoserve"):
+                r = simulate(SimConfig(model=cfg, system=system,
+                                       n_devices=n_dev),
+                             WorkloadConfig(rps=rps, duration_s=10.0, seed=0))
+                res[system] = r
+                print(f"{rps:4d} {system:>10s} {r.throughput_tokens:10.0f} "
+                      f"{r.mean_latency:10.2f} "
+                      f"{r.slo_attainment(12.0):5.2f}")
+            c = res["cocoserve"]
+            for base in ("hft", "vllm"):
+                b = res[base]
+                # average ratios only inside the baseline's operating range
+                # (>=50% completion) — the paper compares functioning
+                # systems; beyond the HFT cliff the ratio is unbounded.
+                total = len(b.completed) + b.dropped
+                operating = total > 0 and len(b.completed) >= 0.5 * total
+                if not operating:
+                    continue
+                if np.isfinite(b.mean_latency) and b.mean_latency > 0:
+                    ratios[base][0].append(1 - c.mean_latency / b.mean_latency)
+                if b.throughput_tokens > 0:
+                    ratios[base][1].append(
+                        c.throughput_tokens / b.throughput_tokens)
+        for base, (lat, thr) in ratios.items():
+            if not lat:
+                continue
+            print(f"# {model} vs {base} (operating range): "
+                  f"latency -{np.mean(lat):.0%}, throughput x{np.mean(thr):.2f}")
+            out_rows.append((f"fig8_{model}_vs_{base}", 0.0,
+                             f"lat-{np.mean(lat):.0%}_thr{np.mean(thr):.2f}x"))
+    us = (time.perf_counter() - t0) * 1e6
+    out_rows[0] = (out_rows[0][0], us, out_rows[0][2])
+    return out_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""§Roofline: three-term roofline per (arch × shape × mesh) from the dry-run
+artifacts (launch/dryrun.py JSON dumps).
+
+  compute term    = FLOPs / (chips × 197 TFLOP/s bf16)
+  memory term     = bytes / (chips × 819 GB/s HBM)
+  collective term = per-device collective bytes / 50 GB/s ICI
+
+FLOPs/bytes caveat (measured, see EXPERIMENTS §Roofline): XLA's
+``cost_analysis`` counts a ``lax.scan`` body ONCE, so the raw numbers
+under-count the layer stack. We therefore report BOTH the raw HLO numbers
+and the analytic model numbers (architecture-exact, computed in
+launch/dryrun.model_flops_analytic); terms use the analytic FLOPs and a
+bytes model (params + cache + activation traffic). Collective bytes use the
+while-body-scaled parse from the same dry-run.
+"""
+import glob
+import json
+import os
+import time
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "dryrun_artifacts")
+
+
+def bytes_model(rec) -> float:
+    """Per-device HBM traffic per step: args (params+opt+cache) once, plus
+    activation traffic ~= 2 x analytic flops / (2 * d_model) * 2B (each MAC
+    row streams activations), folded into a simple 10% adder."""
+    arg = rec.get("per_device_arg_bytes", 0)
+    # decode/prefill write the cache once more; train writes grads+opt
+    return arg * 2.1
+
+
+def load(mesh="16x16"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def terms(rec):
+    chips = rec.get("n_devices", 256)
+    ana = rec.get("analytic", {})
+    flops = ana.get("model_flops_global", 0.0)
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = bytes_model(rec) / HBM_BW
+    coll = rec.get("collectives", {}) or {}
+    cbytes = sum(v.get("bytes_scaled", v.get("bytes", 0))
+                 for v in coll.values() if isinstance(v, dict))
+    t_coll = cbytes / ICI_BW
+    terms_ = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms_, key=terms_.get)
+    ratio = (ana.get("model_flops_6nd", 0.0) /
+             max(rec.get("cost_analysis", {}).get("flops", 0.0) * chips, 1.0))
+    return terms_, dom, cbytes, ratio
+
+
+def run():
+    t0 = time.perf_counter()
+    recs = load("16x16")
+    if not recs:
+        print("# no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --both-meshes` first")
+        return [("roofline", 0.0, "no_artifacts")]
+    print("# Roofline (single pod 16x16 = 256 chips; seconds per step)")
+    print(f"{'arch':18s} {'shape':12s} {'compute':>10s} {'memory':>10s} "
+          f"{'collect':>10s} {'bottleneck':>10s} {'6ND/HLO':>8s}")
+    doms = {}
+    for rec in recs:
+        if rec.get("status") != "ok":
+            if rec.get("status") == "skipped":
+                print(f"{rec['arch']:18s} {rec['shape']:12s} "
+                      f"{'(skipped: ' + rec.get('reason', '')[:40] + ')'}")
+            continue
+        t, dom, cb, ratio = terms(rec)
+        doms[dom] = doms.get(dom, 0) + 1
+        print(f"{rec['arch']:18s} {rec['shape']:12s} {t['compute']:10.2e} "
+              f"{t['memory']:10.2e} {t['collective']:10.2e} {dom:>10s} "
+              f"{min(ratio, 999):8.1f}")
+    print(f"# bottleneck histogram: {doms}")
+    us = (time.perf_counter() - t0) * 1e6
+    return [("roofline", us, f"bottlenecks={doms}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure (+ roofline and
+kernel micro-benches). Prints a final ``name,us_per_call,derived`` CSV."""
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablations, fig6_replication, fig8_single,
+                            fig9_memory, fig10_multi, fig11_robustness,
+                            kernels_bench, roofline, speedup_model,
+                            table1_modules, table2_scaling_cost)
+    suites = [
+        ("table1", table1_modules),
+        ("table2", table2_scaling_cost),
+        ("speedup_model", speedup_model),
+        ("fig6", fig6_replication),
+        ("fig8", fig8_single),
+        ("fig9", fig9_memory),
+        ("fig10", fig10_multi),
+        ("fig11", fig11_robustness),
+        ("ablations", ablations),
+        ("kernels", kernels_bench),
+        ("roofline", roofline),
+    ]
+    rows = []
+    failures = 0
+    for name, mod in suites:
+        print(f"\n===== {name} ({mod.__name__}) =====", flush=True)
+        t0 = time.time()
+        try:
+            rows.extend(mod.run() or [])
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            rows.append((name, 0.0, "ERROR"))
+        print(f"===== {name} done in {time.time()-t0:.1f}s =====", flush=True)
+
+    print("\n# ===== summary CSV =====")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

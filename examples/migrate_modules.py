@@ -1,0 +1,43 @@
+"""Module migration demo (§3.1/§3.3): move a layer's attention projections
+and the KV cache to a different placement and measure the cost — the
+fine-grained operation CoCoServe's scale-down Phase 1 performs.
+
+    PYTHONPATH=src XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python examples/migrate_modules.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import jax  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core import migration as M  # noqa: E402
+from repro.core.replication import replication_mesh  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+
+
+def main():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
+    cache = T.init_cache(cfg, 2, 64, "float32")
+    mesh = replication_mesh(8)
+
+    print("== migrate attention projections (compute-intensive module) ==")
+    params, cost = M.migrate_by_path(params, r"layers/attn", P(), mesh,
+                                     measure=True)
+    print(f"moved {cost.bytes_moved/1e6:.1f} MB, est {cost.est_seconds:.3f}s "
+          f"(ICI model), measured host {cost.measured_seconds*1e3:.1f} ms")
+
+    print("== migrate the KV cache (memory-intensive module) ==")
+    cache, cost = M.migrate_kv_cache(cache, P(), mesh, measure=True)
+    print(f"moved {cost.bytes_moved/1e6:.1f} MB, est {cost.est_seconds:.3f}s, "
+          f"measured host {cost.measured_seconds*1e3:.1f} ms")
+
+    print("(paper Table 2: 0.25-0.9 s per 1-40 layers at A100/NVLink scale)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""End-to-end serving driver (deliverable b): a real continuous-batching
+engine under a Poisson workload with the CoCoServe Monitor -> Controller
+closed loop making live scale-up/scale-down decisions.
+
+    PYTHONPATH=src python examples/serve_autoscale.py --requests 24 --rps 6
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,42 @@
+"""Config registry: ``get_config(arch_id)`` and the assigned input shapes."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+# arch id -> module name
+_REGISTRY = {
+    "minicpm3-4b": "minicpm3_4b",
+    "whisper-medium": "whisper_medium",
+    "zamba2-7b": "zamba2_7b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "chameleon-34b": "chameleon_34b",
+    "arctic-480b": "arctic_480b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "stablelm-12b": "stablelm_12b",
+    "mamba2-780m": "mamba2_780m",
+    "gemma-7b": "gemma_7b",
+    # the paper's own evaluation models
+    "llama2-13b": "llama2_13b",
+    "llama2-70b": "llama2_70b",
+}
+
+ASSIGNED_ARCHS = [k for k in _REGISTRY if not k.startswith("llama2")]
+
+
+def list_archs() -> list:
+    return list(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    mod = importlib.import_module(f"repro.configs.{_REGISTRY[name]}")
+    return mod.CONFIG
+
+
+__all__ = [
+    "ModelConfig", "InputShape", "INPUT_SHAPES",
+    "get_config", "list_archs", "ASSIGNED_ARCHS",
+]

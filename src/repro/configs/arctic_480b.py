@@ -1,0 +1,27 @@
+"""Snowflake Arctic (480B) — dense-MoE hybrid [hf:Snowflake/snowflake-arctic-base].
+
+35 layers, d_model=7168, 56 heads GQA kv=8, vocab=32000. 128 experts top-2
+with expert d_ff=4864, combined with a DENSE residual MLP in parallel
+(Arctic's dense-MoE hybrid design). 56 heads do not divide the 16-way model
+axis -> attention params replicate on `model`; experts shard 8/device.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    source="hf:Snowflake/snowflake-arctic-base",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=4864,
+    vocab_size=32000,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    num_experts=128,
+    num_experts_per_tok=2,
+    moe_dense_residual=True,
+    dense_residual_d_ff=4864,
+    sliding_window=8192,
+)

@@ -1,0 +1,256 @@
+"""Base configuration system for the repro framework.
+
+A single ``ModelConfig`` dataclass covers every assigned architecture family:
+dense (GQA/MQA/MLA attention, SwiGLU/GeGLU FFN), MoE (shared + routed
+experts), SSM (Mamba2/SSD), hybrid (Mamba2 + shared attention blocks),
+encoder-decoder (Whisper backbone) and early-fusion VLM (Chameleon backbone).
+
+Full-size configs are only ever *lowered* (ShapeDtypeStruct dry-runs); smoke
+tests instantiate ``cfg.reduced()`` variants.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """A workload shape: (kind, seq_len, global_batch)."""
+
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    # identity -----------------------------------------------------------
+    name: str
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
+    source: str  # citation for the geometry
+    # geometry -----------------------------------------------------------
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // num_heads
+    max_seq_len: int = 32_768
+    # attention ----------------------------------------------------------
+    attention_kind: str = "gqa"  # gqa | mla | none
+    rope_theta: float = 10_000.0
+    sliding_window: Optional[int] = None  # if set, SWA for decode variants
+    # MLA (minicpm3 / deepseek-style) -------------------------------------
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_head_dim: int = 0
+    qk_nope_head_dim: int = 0
+    v_head_dim: int = 0
+    # FFN ------------------------------------------------------------------
+    ffn_kind: str = "swiglu"  # swiglu | geglu | gelu (2-proj) | none
+    use_rope: bool = True     # False => sinusoidal absolute positions
+    use_qk_norm: bool = False
+    # MoE --------------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0  # qwen2-moe shared experts
+    moe_dense_residual: bool = False  # arctic: dense FFN in parallel with MoE
+    dense_residual_d_ff: int = 0
+    # SSM (mamba2 / SSD) ------------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_ngroups: int = 1  # B/C are per-group (shared across heads), as in SSD
+    ssm_conv_dim: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2-style): one shared attention block applied every k layers
+    hybrid_attn_every: int = 0  # 0 = not hybrid
+    # encoder-decoder (whisper backbone) ---------------------------------------
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 1_500  # whisper audio frames after conv stub
+    # VLM (chameleon early fusion) ----------------------------------------------
+    is_early_fusion_vlm: bool = False
+    image_token_count: int = 1_024  # VQ tokens per image (stubbed frontend)
+    # norms / misc -----------------------------------------------------------------
+    norm_kind: str = "rmsnorm"  # rmsnorm | layernorm
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    scale_embed: bool = False  # gemma: multiply embeddings by sqrt(d_model)
+    logit_softcap: float = 0.0
+    dtype: str = "bfloat16"
+
+    # ----------------------------------------------------------------- derived
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded so the logits shard cleanly on a 16-way model axis."""
+        return _round_up(self.vocab_size, 256)
+
+    def padded_experts(self, axis: int = 16) -> int:
+        if self.num_experts == 0:
+            return 0
+        return _round_up(self.num_experts, axis)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        if self.ssm_state == 0:
+            return 0
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.attention_kind == "none"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """True if the arch can serve long_500k (sub-quadratic path exists)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if self.is_encoder_decoder:
+            return False  # bounded decoder length by construction
+        return True  # dense/moe/vlm via sliding-window KV variant
+
+    # ------------------------------------------------------------ param count
+    def param_count(self) -> int:
+        """Analytic parameter count (unpadded vocab), used by tests/Table 1."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # embedding
+        if not self.tie_embeddings:
+            total += v * d  # lm head
+        per_layer = 0
+        # attention (per-layer; hybrids keep attention only in the shared block)
+        if self.attention_kind == "gqa" and self.hybrid_attn_every == 0:
+            hd = self.resolved_head_dim
+            per_layer += d * self.num_heads * hd          # Q
+            per_layer += 2 * d * self.num_kv_heads * hd   # K, V
+            per_layer += self.num_heads * hd * d          # O
+        elif self.attention_kind == "mla":
+            hd_qk = self.qk_rope_head_dim + self.qk_nope_head_dim
+            q_in = self.q_lora_rank if self.q_lora_rank else d
+            if self.q_lora_rank:
+                per_layer += d * self.q_lora_rank
+            per_layer += q_in * self.num_heads * hd_qk
+            per_layer += d * (self.kv_lora_rank + self.qk_rope_head_dim)
+            per_layer += self.kv_lora_rank * self.num_heads * (
+                self.qk_nope_head_dim + self.v_head_dim)
+            per_layer += self.num_heads * self.v_head_dim * d
+        # ffn -------------------------------------------------------------
+        if self.num_experts > 0:
+            expert = 3 * d * self.d_ff
+            per_layer += self.num_experts * expert
+            per_layer += self.num_shared_experts * expert
+            per_layer += d * self.num_experts  # router
+            if self.moe_dense_residual:
+                per_layer += 3 * d * self.dense_residual_d_ff
+        elif self.ffn_kind in ("swiglu", "geglu"):
+            per_layer += 3 * d * self.d_ff  # gate/up/down
+        elif self.ffn_kind == "gelu":
+            per_layer += 2 * d * self.d_ff  # up/down
+        # ssm ----------------------------------------------------------------
+        if self.ssm_state > 0:
+            di = self.ssm_d_inner
+            nh, g = self.ssm_heads, self.ssm_ngroups
+            per_layer += d * (2 * di + 2 * g * self.ssm_state + nh)  # in_proj(zxBCdt)
+            per_layer += self.ssm_conv_dim * (di + 2 * g * self.ssm_state)
+            per_layer += 2 * nh  # A_log, D
+            per_layer += di * d  # out_proj
+        per_layer += 2 * d  # norms
+        total += self.num_layers * per_layer
+        # hybrid shared attention block (zamba2): counted once (shared params)
+        if self.hybrid_attn_every > 0:
+            hd = self.resolved_head_dim
+            total += d * self.num_heads * hd + 2 * d * self.num_kv_heads * hd
+            total += self.num_heads * hd * d + 2 * d
+            if self.d_ff:  # shared block's MLP (zamba2)
+                total += 3 * d * self.d_ff
+        # encoder ------------------------------------------------------------
+        if self.is_encoder_decoder:
+            enc_layer = 4 * d * d + 2 * d * self.d_ff + 4 * d  # self-attn+mlp(gelu 2-proj)
+            dec_extra = 4 * d * d + 2 * d                      # cross-attn per dec layer
+            total += self.num_encoder_layers * enc_layer
+            total += self.num_layers * dec_extra
+        return total
+
+    # ------------------------------------------------------------ tp padding
+    def tp_padded(self, axis: int = 16) -> "ModelConfig":
+        """Head-padded variant enabling full tensor parallelism on a
+        ``axis``-way model dimension (beyond-paper optimization, EXPERIMENTS
+        §Perf): Q/O heads are zero-padded to a multiple of ``axis`` (padded
+        heads have zero output weight — exactly neutral) and KV heads are
+        REPLICATED up to ``axis`` (each group duplicated — identical math,
+        Megatron GQA style). head_dim is pinned so padding never changes it.
+        """
+        if self.attention_kind != "gqa" or self.num_heads == 0:
+            return self
+        hd = self.resolved_head_dim
+        H = _round_up(self.num_heads, axis)
+        rep = H // self.num_kv_heads
+        KV = self.num_kv_heads
+        if KV < axis and axis % KV == 0:
+            KV = axis
+        elif KV % axis != 0 and H % axis == 0:
+            KV = _round_up(KV, axis // math.gcd(KV, axis))
+        return dataclasses.replace(self, num_heads=H, num_kv_heads=KV,
+                                   head_dim=hd)
+
+    # -------------------------------------------------------------- reduced
+    def reduced(self) -> "ModelConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        d = min(self.d_model, 256)
+        heads = min(self.num_heads, 4) if self.num_heads else 0
+        kv = max(1, min(self.num_kv_heads, heads)) if heads else 0
+        changes = dict(
+            num_layers=2,
+            d_model=d,
+            num_heads=heads,
+            num_kv_heads=kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            vocab_size=min(self.vocab_size, 512),
+            head_dim=64 if self.head_dim else None,
+            max_seq_len=256,
+        )
+        if self.num_experts:
+            changes.update(num_experts=4,
+                           num_experts_per_tok=min(self.num_experts_per_tok, 2),
+                           num_shared_experts=min(self.num_shared_experts, 1),
+                           dense_residual_d_ff=min(self.dense_residual_d_ff, 256))
+        if self.ssm_state:
+            changes.update(ssm_state=16, ssm_head_dim=32, ssm_chunk=64)
+        if self.attention_kind == "mla":
+            changes.update(q_lora_rank=0, kv_lora_rank=64, qk_rope_head_dim=16,
+                           qk_nope_head_dim=16, v_head_dim=32, head_dim=None)
+        if self.hybrid_attn_every:
+            changes.update(hybrid_attn_every=2)
+        if self.is_encoder_decoder:
+            changes.update(num_encoder_layers=2, encoder_seq_len=32)
+        if self.sliding_window:
+            changes.update(sliding_window=64)
+        return dataclasses.replace(self, **changes)

@@ -1,0 +1,26 @@
+"""Chameleon-34B — early-fusion VLM backbone [arXiv:2405.09818].
+
+48 layers, d_model=8192, 64 heads GQA kv=8, d_ff=22016, vocab=65536 (text +
+VQ image tokens share one vocabulary — early fusion). QK-norm as in the
+paper. The VQ-VAE image tokenizer is a STUB: image tokens arrive as ids in
+the shared vocab, interleaved with text by ``input_specs()``.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    source="arXiv:2405.09818",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=65536,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    use_qk_norm=True,
+    is_early_fusion_vlm=True,
+    image_token_count=1024,
+    sliding_window=8192,
+)

@@ -1,0 +1,24 @@
+"""Gemma-7B — dense decoder with GeGLU and wide heads [arXiv:2403.08295].
+
+28 layers, d_model=3072, 16 heads MHA (the 2B sibling uses MQA), head_dim=256,
+d_ff=24576 (GeGLU), vocab=256000, tied embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-7b",
+    family="dense",
+    source="arXiv:2403.08295",
+    num_layers=28,
+    d_model=3072,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=256,
+    d_ff=24576,
+    vocab_size=256000,
+    attention_kind="gqa",
+    ffn_kind="geglu",
+    tie_embeddings=True,
+    scale_embed=True,
+    sliding_window=8192,
+)

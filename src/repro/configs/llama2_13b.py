@@ -1,0 +1,22 @@
+"""LLaMA2-13B — the paper's own primary evaluation model [arXiv:2307.09288].
+
+40 layers, d_model=5120, 40 heads MHA, d_ff=13824, vocab=32000. Used by
+benchmarks/table1_modules.py and the serving simulator to reproduce the
+paper's Figures 6/8/10/11 and Tables 1/2.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-13b",
+    family="dense",
+    source="arXiv:2307.09288",
+    num_layers=40,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=13824,
+    vocab_size=32000,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    sliding_window=8192,
+)

@@ -1,0 +1,20 @@
+"""LLaMA2-70B — the paper's large evaluation model [arXiv:2307.09288].
+
+80 layers, d_model=8192, 64 heads GQA kv=8, d_ff=28672, vocab=32000.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-70b",
+    family="dense",
+    source="arXiv:2307.09288",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32000,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    sliding_window=8192,
+)

@@ -1,0 +1,28 @@
+"""Mamba2-780M — attention-free SSM with state-space duality [arXiv:2405.21060].
+
+48 layers, d_model=1536, ssm_state=128, head_dim=64, expand=2
+(d_inner=3072, 48 SSD heads), vocab=50280. No attention, no FFN.
+
+CoCoServe applicability (DESIGN.md §4): layer replication/migration apply
+verbatim; the KV-cache-migration primitive maps to migrating the (much
+smaller) SSD recurrent state instead.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=48,
+    d_model=1536,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50280,
+    attention_kind="none",
+    ffn_kind="none",
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    tie_embeddings=True,
+)

@@ -1,0 +1,29 @@
+"""MiniCPM3-4B — dense decoder with Multi-head Latent Attention (MLA).
+
+Geometry per [hf:openbmb/MiniCPM3-4B]: 62 layers, d_model=2560, 40 heads
+(kv=40 logical — MLA compresses KV into a 256-d latent), d_ff=6400,
+vocab=73448. MLA ranks from the model card.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b",
+    family="dense",
+    source="hf:openbmb/MiniCPM3-4B",
+    num_layers=62,
+    d_model=2560,
+    num_heads=40,
+    num_kv_heads=40,
+    d_ff=6400,
+    vocab_size=73448,
+    attention_kind="mla",
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_rope_head_dim=32,
+    qk_nope_head_dim=64,
+    v_head_dim=64,
+    ffn_kind="swiglu",
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    sliding_window=8192,  # enables the long_500k SWA serving variant
+)

@@ -1,0 +1,25 @@
+"""Qwen1.5-MoE-A2.7B — fine-grained MoE [hf:Qwen/Qwen1.5-MoE-A2.7B].
+
+24 layers, d_model=2048, 16 heads MHA, vocab=151936. 60 routed experts
+top-4 (expert d_ff=1408) + 4 shared experts always on. 60 experts are padded
+to 64 for the 16-way expert shard; the router masks the padding to -inf.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=151936,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    num_experts=60,
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    sliding_window=8192,
+)

@@ -1,0 +1,21 @@
+"""StableLM-2-12B — dense decoder [hf:stabilityai/stablelm-2-1_6b family].
+
+40 layers, d_model=5120, 32 heads GQA kv=8, d_ff=13824, vocab=100352.
+(Full RoPE here; the released model uses partial rotary — noted deviation.)
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b",
+    family="dense",
+    source="hf:stabilityai/stablelm-2-1_6b",
+    num_layers=40,
+    d_model=5120,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=13824,
+    vocab_size=100352,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    sliding_window=8192,
+)

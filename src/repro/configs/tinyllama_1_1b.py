@@ -1,0 +1,21 @@
+"""TinyLlama-1.1B — llama2-architecture small model [arXiv:2401.02385].
+
+22 layers, d_model=2048, 32 heads GQA kv=4, d_ff=5632, vocab=32000.
+Primary correctness vehicle for the CoCoServe module-scaling path.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="tinyllama-1.1b",
+    family="dense",
+    source="arXiv:2401.02385",
+    num_layers=22,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=5632,
+    vocab_size=32000,
+    attention_kind="gqa",
+    ffn_kind="swiglu",
+    sliding_window=8192,
+)

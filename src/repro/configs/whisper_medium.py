@@ -1,0 +1,31 @@
+"""Whisper-medium — encoder-decoder audio backbone [arXiv:2212.04356].
+
+24 encoder + 24 decoder layers, d_model=1024, 16 heads (MHA), d_ff=4096
+(GELU 2-proj MLP), vocab=51865. The mel-spectrogram + conv frontend is a
+STUB: ``input_specs()`` supplies precomputed frame embeddings of shape
+(batch, 1500, d_model). LayerNorm + sinusoidal positions (no RoPE).
+
+long_500k is SKIPPED for this arch (enc-dec decoder is full-attention with a
+bounded target length by construction) — see DESIGN.md §4.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    attention_kind="gqa",
+    ffn_kind="gelu",
+    norm_kind="layernorm",
+    use_rope=False,
+    is_encoder_decoder=True,
+    num_encoder_layers=24,
+    encoder_seq_len=1500,
+    max_seq_len=448 * 74,  # decoder positions padded far beyond whisper's 448
+)

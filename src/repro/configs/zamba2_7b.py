@@ -1,0 +1,28 @@
+"""Zamba2-7B — hybrid Mamba2 backbone with a shared attention block
+[arXiv:2411.15242].
+
+81 Mamba2 layers, d_model=3584; one SHARED attention(+MLP) block (32 heads,
+d_ff=14336) is applied every ``hybrid_attn_every`` layers, reusing the same
+parameters each time (Zamba's signature trick). ssm_state=64, vocab=32000.
+Natively sub-quadratic -> runs long_500k.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    source="arXiv:2411.15242",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,            # shared block's MLP
+    vocab_size=32000,
+    attention_kind="gqa",  # kind of the shared block
+    ffn_kind="none",       # mamba layers carry no per-layer FFN
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    hybrid_attn_every=6,   # shared block applied every 6 mamba layers
+    tie_embeddings=True,
+)

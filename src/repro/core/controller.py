@@ -1,0 +1,87 @@
+"""Auto-Scaling Controller (§5): the closed control loop.
+
+Every tick it reads the Monitor and
+* triggers **scale-up** (Alg. 1) when the resource vacancy rate exceeds T_up,
+* triggers **scale-down** (Alg. 2) when the SLO violation rate exceeds
+  T_down (or an OOM was observed),
+then pushes the updated plan to the Scheduler via ``on_plan_change``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+from repro.core.cluster import Cluster
+from repro.core.monitor import Monitor
+from repro.core.plan import PlacementPlan
+from repro.core import scale_up as SU
+from repro.core import scale_down as SD
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    t_up: float = 0.35            # vacancy rate above which we scale up
+    t_down: float = 0.05          # SLO violation rate above which we scale down
+    gamma: float = 0.02           # Eq. 4 cluster constant
+    replica_size: float = 605e6   # r — one decoder layer (Table 1)
+    delta_bs: int = 5
+    cooldown_ticks: int = 2
+    dop: int = 2                  # max replication degree (paper default)
+    min_vacancy: float = 0.1      # eligibility floor for replica hosts
+
+
+class Controller:
+    def __init__(self, cfg: ControllerConfig, cluster: Cluster,
+                 plan: PlacementPlan, monitor: Monitor, *,
+                 batch_size: int = 16,
+                 is_violating: Optional[Callable] = None,
+                 on_plan_change: Optional[Callable] = None,
+                 commit_replica: Optional[Callable] = None):
+        self.cfg = cfg
+        self.cluster = cluster
+        self.plan = plan
+        self.monitor = monitor
+        self.batch_size = batch_size
+        self.is_violating = is_violating or (lambda plan, bs: False)
+        self.on_plan_change = on_plan_change or (lambda plan, bs: None)
+        self.commit_replica = commit_replica
+        self._cooldown = 0
+        self.log: List[str] = []
+
+    def tick(self) -> Optional[str]:
+        """One control period. Returns the action taken (or None)."""
+        if self._cooldown > 0:
+            self._cooldown -= 1
+            return None
+        snap = self.monitor.latest
+        if snap is None:
+            return None
+        action = None
+        violation = (self.monitor.slo_violation_rate() > self.cfg.t_down
+                     or snap.oom_events > 0)
+        if violation:
+            hot = self.monitor.hottest_device() or self.plan.home_device
+            res = SD.scale_down(
+                self.plan, self.cluster, src_device=hot,
+                is_violating=self.is_violating,
+                batch_size=self.batch_size, delta_bs=self.cfg.delta_bs,
+                mem_bound=self.monitor.is_memory_bound(hot))
+            self.plan = res.plan
+            self.batch_size = res.batch_size
+            action = f"scale-down[{'+'.join(res.actions) or 'noop'}]"
+        elif self.monitor.vacancy_rate() > self.cfg.t_up:
+            before = list(self.plan.p)
+            self.plan = SU.scale_up(
+                self.plan, self.cluster, gamma=self.cfg.gamma,
+                replica_size=self.cfg.replica_size,
+                max_degree=self.cfg.dop,
+                min_vacancy=self.cfg.min_vacancy,
+                commit=self.commit_replica)
+            if self.plan.p != before:
+                action = (f"scale-up[replicated {sum(self.plan.p) - sum(before)}"
+                          f" layer replicas]")
+        if action:
+            self.log.append(action)
+            self.on_plan_change(self.plan, self.batch_size)
+            self._cooldown = self.cfg.cooldown_ticks
+        return action

@@ -1,0 +1,75 @@
+"""Module migration — re-placement of parameters / caches (§3.1, §3.3).
+
+On SPMD hardware "move module M from device A to device B" becomes
+"re-shard/re-place M's arrays": a ``device_put`` with a new NamedSharding.
+The cost model (bytes moved / link bandwidth + per-op latency) reproduces
+the paper's Table 2 against our ICI constants; ``migrate_by_path`` performs
+the actual re-placement for any params/cache subtree matched by regex.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+import time
+from typing import Callable, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_PATH_JOIN = "/"
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationCost:
+    bytes_moved: int
+    est_seconds: float          # bytes / link_bw + fixed overhead
+    measured_seconds: Optional[float] = None
+
+
+def tree_bytes(tree, path_regex: str = ".*") -> int:
+    pat = re.compile(path_regex)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _PATH_JOIN.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                              for k in path)
+        if pat.search(key):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+def estimate_cost(bytes_moved: int, link_bandwidth: float,
+                  fixed_overhead_s: float = 0.24) -> float:
+    """Paper Table 2: ~0.25 s at 1 layer rising to ~0.9 s at 40 layers — a
+    large fixed setup cost plus a linear bytes/bandwidth term."""
+    return fixed_overhead_s + bytes_moved / link_bandwidth
+
+
+def migrate_by_path(tree, path_regex: str, new_spec, mesh: Mesh, *,
+                    link_bandwidth: float = 50e9, measure: bool = False):
+    """Re-place every leaf whose path matches ``path_regex`` with
+    NamedSharding(mesh, new_spec). Returns (new_tree, MigrationCost)."""
+    pat = re.compile(path_regex)
+    sh = NamedSharding(mesh, new_spec)
+    moved = 0
+
+    def maybe(path, leaf):
+        nonlocal moved
+        key = _PATH_JOIN.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                              for k in path)
+        if pat.search(key):
+            moved += leaf.size * leaf.dtype.itemsize
+            return jax.device_put(leaf, sh)
+        return leaf
+
+    t0 = time.perf_counter()
+    new_tree = jax.tree_util.tree_map_with_path(maybe, tree)
+    if measure:
+        jax.block_until_ready(new_tree)
+    dt = time.perf_counter() - t0 if measure else None
+    return new_tree, MigrationCost(moved, estimate_cost(moved, link_bandwidth),
+                                   dt)
+
+
+def migrate_kv_cache(cache, new_spec, mesh: Mesh, **kw):
+    """KV-cache migration (the paper's memory-intensive module, §3.3)."""
+    return migrate_by_path(cache, r"layers/", new_spec, mesh, **kw)

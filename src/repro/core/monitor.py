@@ -1,0 +1,73 @@
+"""Metrics Monitor (§5): rolling-window metric collection feeding the
+Controller. In the paper this reads NVML + engine timers; here it is fed by
+the serving simulator and/or the real Engine (tokens/s, latency, memory)."""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, List, Optional
+
+
+@dataclasses.dataclass
+class MetricsSnapshot:
+    t: float
+    rps: float = 0.0
+    tokens_per_s: float = 0.0
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    slo_violation_rate: float = 0.0
+    oom_events: int = 0
+    queue_len: int = 0
+    device_util: Optional[List[float]] = None       # 0..1 compute per device
+    device_mem_frac: Optional[List[float]] = None   # 0..1 memory per device
+
+
+class Monitor:
+    def __init__(self, window: int = 16):
+        self.history: Deque[MetricsSnapshot] = deque(maxlen=window)
+
+    def record(self, snap: MetricsSnapshot):
+        self.history.append(snap)
+
+    @property
+    def latest(self) -> Optional[MetricsSnapshot]:
+        return self.history[-1] if self.history else None
+
+    def mean(self, field: str) -> float:
+        vals = [getattr(s, field) for s in self.history
+                if getattr(s, field) is not None]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    def vacancy_rate(self) -> float:
+        """Cluster-wide COMPUTE vacancy (drives T_up in §5).
+
+        Deliberately compute-only: the paper's motivating waste is idle
+        computational fragments on memory-full devices (a 70B instance
+        spanning 4 GPUs leaves compute idle at low RPS) — replication can
+        still exploit them as long as a layer replica fits (per-device
+        free_mem gates that separately in Alg. 1).
+        """
+        snap = self.latest
+        if snap is None or not snap.device_util:
+            return 1.0
+        per_dev = [1.0 - u for u in snap.device_util]
+        return sum(per_dev) / len(per_dev)
+
+    def slo_violation_rate(self) -> float:
+        return self.mean("slo_violation_rate")
+
+    def hottest_device(self) -> Optional[int]:
+        snap = self.latest
+        if snap is None or not snap.device_util:
+            return None
+        load = [max(u, m) for u, m in
+                zip(snap.device_util, snap.device_mem_frac
+                    or [0.0] * len(snap.device_util))]
+        return max(range(len(load)), key=load.__getitem__)
+
+    def is_memory_bound(self, device_id: int) -> bool:
+        snap = self.latest
+        if snap is None or not snap.device_mem_frac:
+            return True
+        return (snap.device_mem_frac[device_id] >=
+                (snap.device_util or [0.0] * len(snap.device_mem_frac))[device_id])

@@ -1,0 +1,95 @@
+"""Module replication on an SPMD mesh — the TPU adaptation of §3.1.
+
+The paper replicates a layer onto extra GPUs and splits the batch between
+replicas (hooks scatter inputs / all-gather outputs). Under GSPMD the same
+dataflow is expressed as a *per-layer batch sharding constraint*: a layer
+with parallelism degree p_i computes with its batch split p_i ways; entering
+or leaving a replicated region makes XLA insert exactly the scatter /
+all-gather the paper describes. Degrees are quantized to powers of two and
+realized as prefixes of a factorized replication mesh (axes r0, r1, ...,
+each of size 2) — DESIGN.md §2 records this assumption change.
+
+``layer_hook_from_plan`` plugs into ``transformer.forward(unroll=True,
+layer_hook=...)`` so each unrolled layer carries its own constraint. The
+continuity property of Alg. 1 is therefore *observable*: plans with fewer
+device-set changes lower to HLO with fewer resharding collectives
+(``count_collectives`` below; asserted in tests/test_replication.py).
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.plan import PlacementPlan
+
+COLLECTIVE_RE = re.compile(
+    r'\b(all-gather(?:-start)?|all-reduce(?:-start)?|reduce-scatter|'
+    r'all-to-all|collective-permute(?:-start)?)\b')
+
+
+def replication_mesh(n_devices: int, devices=None) -> Mesh:
+    """Factorized mesh: axes ("r0","r1",...) each of size 2."""
+    k = int(math.log2(n_devices))
+    assert 2 ** k == n_devices, "replication mesh needs a power-of-2 devices"
+    devs = (devices if devices is not None else jax.devices())[:n_devices]
+    import numpy as np
+    arr = np.array(devs).reshape((2,) * k)
+    return Mesh(arr, tuple(f"r{i}" for i in range(k)))
+
+
+def quantize_degrees(p: Sequence[int], n_devices: int) -> List[int]:
+    """Round each p_i down to the nearest power of two <= n_devices."""
+    out = []
+    for pi in p:
+        q = 1
+        while q * 2 <= min(pi, n_devices):
+            q *= 2
+        out.append(q)
+    return out
+
+
+def batch_spec_for_degree(degree: int, mesh: Mesh) -> P:
+    """Batch axis sharded over the first log2(degree) replication axes."""
+    k = int(math.log2(degree))
+    if k == 0:
+        return P(None)
+    axes = tuple(mesh.axis_names[:k])
+    return P(axes)
+
+
+def layer_hook_from_plan(plan: PlacementPlan, mesh: Mesh, *,
+                         extra_dims: int = 2):
+    """Returns hook(i, x) -> x constrained to the layer's batch sharding.
+
+    ``extra_dims``: trailing activation dims left unsharded ([B,S,d] -> 2).
+    """
+    degrees = quantize_degrees(plan.p, mesh.devices.size)
+
+    def hook(i: int, x):
+        spec = batch_spec_for_degree(degrees[i], mesh)
+        full = P(*(tuple(spec) + (None,) * extra_dims))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, full))
+
+    return hook
+
+
+def count_collectives(hlo_text: str) -> dict:
+    """Histogram of collective ops in an HLO dump (lowered/compiled text)."""
+    out: dict = {}
+    for mword in COLLECTIVE_RE.finditer(hlo_text):
+        w = mword.group(1).replace("-start", "")
+        out[w] = out.get(w, 0) + 1
+    return out
+
+
+def replicate_params_for_plan(params, mesh: Mesh):
+    """Replicate parameters across the replication mesh (layer replication
+    shares weights — every replica owns a copy, matching the paper's memory
+    accounting in Table 2)."""
+    sh = NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(lambda x: jax.device_put(x, sh), params)

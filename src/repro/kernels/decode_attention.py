@@ -1,0 +1,96 @@
+"""Single-token decode attention against a long KV cache (Pallas).
+
+This is the memory-bound phase CoCoServe's migration targets (§3.3): per
+step the kernel streams the KV cache once through VMEM. Flash-decoding
+layout: grid (batch*kv_heads, k_blocks); the k-block axis is sequential and
+carries online-softmax state for the R=H/KV query heads that share each KV
+head. Per-request cache lengths come in as a scalar-prefetch operand (SMEM).
+
+Block shapes: [blk_k, D] K/V tiles (blk_k=128, MXU-aligned), the R×D query
+tile stays resident in VMEM across the whole stream.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+DEFAULT_BLK_K = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale, blk_k, n_k, kv_heads):
+    bk = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bk // kv_heads
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [R, D]
+    k = k_ref[0].astype(jnp.float32)                  # [blk_k, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [R, blk_k]
+    length = len_ref[b]
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    safe_m = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+    p = jnp.where(jnp.isinf(s), 0.0, jnp.exp(s - safe_m[:, None]))
+    alpha = jnp.where(jnp.isinf(m_prev), 0.0, jnp.exp(m_prev - safe_m))
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, lengths, *, blk_k: int = DEFAULT_BLK_K,
+                     interpret: bool = False):
+    """q: [B,H,D]; k,v: [B,KV,S,D]; lengths: [B] int32 -> [B,H,D]."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    rep = H // KV
+    blk_k = min(blk_k, S)
+    assert S % blk_k == 0, "pad cache length to a block multiple"
+    n_k = S // blk_k
+    scale = 1.0 / math.sqrt(D)
+    # group query heads by their kv head: [B*KV, R, D]
+    qg = q.reshape(B, KV, rep, D).reshape(B * KV, rep, D)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, blk_k=blk_k,
+                               n_k=n_k, kv_heads=KV)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, n_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths [B]
+            pl.BlockSpec((1, rep, D), lambda bk, ki: (bk, 0, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda bk, ki: (bk, ki, 0)),
+            pl.BlockSpec((1, blk_k, D), lambda bk, ki: (bk, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rep, D), lambda bk, ki: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, rep, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((rep, D), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+            pltpu.VMEM((rep,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg,
+      k.reshape(B * KV, S, D), v.reshape(B * KV, S, D))
+    return out.reshape(B, H, D)

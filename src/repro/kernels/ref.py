@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every kernel — independent implementations used by
+the allclose sweeps in tests/test_kernels.py and as the scan-path fallback."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_flash_attention(q, k, v, *, causal: bool = True):
+    """q: [B,H,Sq,D]; k,v: [B,KV,Sk,D] -> [B,H,Sq,D] (naive softmax)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    rep = H // KV
+    kh = jnp.repeat(k, rep, axis=1)
+    vh = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), Sk - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_decode_attention(q, k, v, lengths):
+    """q: [B,H,D]; k,v: [B,KV,S,D]; lengths: [B] -> [B,H,D]."""
+    B, H, D = q.shape
+    KV, S = k.shape[1], k.shape[2]
+    rep = H // KV
+    kh = jnp.repeat(k, rep, axis=1)
+    vh = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   kh.astype(jnp.float32)) / math.sqrt(D)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vh.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_ssd(x, dt, A, B, C, chunk=None, initial_state=None):
+    """Token-by-token SSD recurrence (independent of the chunked form).
+
+    x: [b,L,H,P]; dt: [b,L,H]; A: [H]; B,C: [b,L,G,N].
+    Returns (y [b,L,H,P], final_state [b,H,P,N]).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B, rep, axis=2).astype(f32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(f32)
+    h0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), f32))
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # [b,H,P], [b,H], [b,H,N], [b,H,N]
+        dA = jnp.exp(dtt * A[None, :])
+        h = h * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtt, Bt, xt.astype(f32))
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.astype(f32).transpose(1, 0, 2),
+          Bh.transpose(1, 0, 2, 3), Ch.transpose(1, 0, 2, 3))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    return y.astype(x.dtype), h_fin.astype(x.dtype)

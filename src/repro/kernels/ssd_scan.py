@@ -1,0 +1,122 @@
+"""Mamba2 SSD chunked scan (Pallas, TPU-targeted).
+
+State-space duality: within a chunk of Q tokens the quadratic (attention-
+like) dual form runs on the MXU; across chunks the recurrent state
+h [P, N] is carried in VMEM scratch along the sequential chunk axis.
+
+Grid: (batch*heads, n_chunks). Per step the kernel loads the chunk's
+x [Q, P], dt [Q], B/C [Q, N] tiles (the B/C index map folds the
+head-to-group mapping, G groups shared MQA-style), computes
+
+  intra:  y_diag = (C B^T ∘ L ∘ dt) x          (Q×Q on the MXU)
+  inter:  y_off  = (C h_prev) ∘ exp(dA_cs)
+  state:  h     <- h · exp(dA_sum) + Σ decay·dt·B⊗x
+
+with fp32 accumulation. Q defaults to 128 and P/N are 64/128 — the whole
+working set (3·Q·N + Q·P + P·N fp32) sits comfortably in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum_exp(dA):
+    """exp(segment-sum) lower-triangular [Q,Q] from dA [Q] (fp32)."""
+    Q = dA.shape[0]
+    cs = jnp.cumsum(dA)
+    out = cs[:, None] - cs[None, :]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    return jnp.where(mask, jnp.exp(out), 0.0)
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, hout_ref,
+                h_ref, *, n_chunks):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0].astype(jnp.float32)           # [Q, P]
+    dt = dt_ref[0, :, 0].astype(jnp.float32)         # [Q]
+    B = b_ref[0, :, 0].astype(jnp.float32)           # [Q, N]
+    C = c_ref[0, :, 0].astype(jnp.float32)           # [Q, N]
+    A = a_ref[0]                                     # scalar (this head)
+
+    dA = dt * A                                      # [Q]
+    dA_cs = jnp.cumsum(dA)                           # [Q]
+    # ---- intra-chunk quadratic form
+    L = _segsum_exp(dA)                              # [Q, Q]
+    CB = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())))  # [Q, Q]
+    scores = CB * L * dt[None, :]
+    y = jax.lax.dot(scores, x)                       # [Q, P]
+    # ---- contribution of the carried state
+    h_prev = h_ref[...]                              # [P, N]
+    y += jax.lax.dot_general(C * jnp.exp(dA_cs)[:, None], h_prev,
+                             (((1,), (1,)), ((), ())))
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+    # ---- state update
+    decay = jnp.exp(dA_cs[-1] - dA_cs)               # [Q]
+    wx = x * (decay * dt)[:, None]                   # [Q, P]
+    h_ref[...] = h_prev * jnp.exp(dA_cs[-1]) + \
+        jax.lax.dot_general(wx, B, (((0,), (0,)), ((), ())))  # [P, N]
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int = 128, initial_state=None, *,
+             interpret: bool = False):
+    """x: [b,L,H,P]; dt: [b,L,H]; A: [H]; B,C: [b,L,G,N] ->
+    (y [b,L,H,P], final_state [b,H,P,N]).
+
+    ``initial_state`` must be None (the kernel owns the scan from zero) —
+    the serving path streams prefill through the kernel in one call.
+    """
+    assert initial_state is None, "kernel path starts from h=0"
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    assert L % Q == 0, "pad L to a chunk multiple"
+    nc = L // Q
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=nc)
+
+    def xh_index(bh, ci):
+        return (bh // H, ci, bh % H, 0)
+
+    def bc_index(bh, ci):
+        return (bh // H, ci, (bh % H) // rep, 0)
+
+    y, h_fin = pl.pallas_call(
+        kernel,
+        grid=(b * H, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, ci: ((bh % H),)),      # A
+            pl.BlockSpec((1, Q, 1, P), xh_index),                # x
+            pl.BlockSpec((1, Q, 1), lambda bh, ci:
+                         (bh // H, ci, bh % H)),                 # dt
+            pl.BlockSpec((1, Q, 1, N), bc_index),                # B
+            pl.BlockSpec((1, Q, 1, N), bc_index),                # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, P), xh_index),
+            pl.BlockSpec((1, 1, P, N), lambda bh, ci:
+                         (bh // H, bh % H, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, L, H, P), x.dtype),
+            jax.ShapeDtypeStruct((b, H, P, N), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(A.astype(jnp.float32), x, dt.astype(jnp.float32), B, C)
+    return y, h_fin

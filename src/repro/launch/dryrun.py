@@ -1,0 +1,375 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- everything below may import jax -------------------------------------
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_archs
+from repro.models import transformer as T
+from repro.parallel import sharding as SH
+from repro.training import optimizer as OPT
+from repro.training import train as TR
+from repro.launch.mesh import make_production_mesh
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × input-shape) on the
+production meshes, with NO device allocation (ShapeDtypeStruct stand-ins).
+
+Per case it records: memory analysis, cost analysis (FLOPs / bytes), and the
+collective-op byte histogram parsed from the partitioned HLO — the §Roofline
+inputs. Artifacts land in ``dryrun_artifacts/`` as JSON.
+
+Skips (DESIGN.md §4): whisper-medium × long_500k (bounded enc-dec decoder).
+Dense/MoE/VLM archs run long_500k with the sliding-window ring cache.
+"""
+
+HLO_SHAPE_RE = re.compile(
+    r"=\s*\(?([a-z0-9]+)\[([\d,]*)\][^)]*?\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "pred": 1,
+               "s8": 1, "u8": 1, "f64": 8, "s64": 8, "u64": 8, "f8e4m3fn": 1}
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def collective_bytes(hlo_text: str, layer_trips: int = 1) -> dict:
+    """Per-device collective traffic by op kind, from partitioned HLO.
+
+    XLA reports a ``while`` (lax.scan) body ONCE — its collectives execute
+    once per trip. We attribute each collective to its enclosing
+    computation and scale those inside while-bodies by ``layer_trips``
+    (the dominant loop is the layer-stack scan; nested shorter scans are
+    conservatively scaled the same — documented in EXPERIMENTS §Roofline).
+    Returns {kind: {count, bytes, bytes_scaled}}.
+    """
+    # split into computations and find while-body names
+    comp_of_line = []
+    cur = "__top__"
+    body_names = set()
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+        comp_of_line.append((cur, line))
+        if " while(" in line or "= while(" in line or " while." in line:
+            for b in _BODY_RE.finditer(line):
+                body_names.add(b.group(1))
+
+    out = {}
+    for comp, line in comp_of_line:
+        m = HLO_SHAPE_RE.search(line)
+        if not m:
+            continue
+        dt, dims, kind = m.groups()
+        n = 1
+        for d in (dims.split(",") if dims else []):
+            if d:
+                n *= int(d)
+        b = n * DTYPE_BYTES.get(dt, 4)
+        scale = layer_trips if any(bn in comp for bn in body_names) or \
+            "while" in comp or "body" in comp else 1
+        ent = out.setdefault(kind, {"count": 0, "bytes": 0, "bytes_scaled": 0})
+        ent["count"] += 1
+        ent["bytes"] += b
+        ent["bytes_scaled"] += b * scale
+    return out
+
+
+def model_flops_analytic(cfg, shape) -> dict:
+    """Architecture-exact step FLOPs (global, fwd; train multiplies by 3).
+
+    MODEL_FLOPS uses the 6·N_active·D convention (2·N fwd + 4·N bwd per
+    token); attention-score FLOPs are reported separately.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        mult = 3.0  # fwd + bwd
+        ctx = S / 2
+    elif shape.kind == "prefill":
+        tokens = B * S
+        mult = 1.0
+        ctx = S / 2
+    else:  # decode: ONE token per request
+        tokens = B * 1
+        mult = 1.0
+        ctx = S
+        if cfg.sliding_window and cfg.family in ("dense", "moe", "vlm") \
+                and S > cfg.sliding_window:
+            ctx = cfg.sliding_window
+    n_total = cfg.param_count()
+    n_active = n_total
+    if cfg.num_experts:
+        expert = 3 * cfg.d_model * cfg.d_ff
+        routed_all = cfg.num_experts * expert * cfg.num_layers
+        active_routed = cfg.num_experts_per_tok * expert * cfg.num_layers
+        n_active = n_total - routed_all + active_routed
+    linear = 2.0 * n_active * tokens
+    attn_scores = 0.0
+    if cfg.attention_kind != "none":
+        hd = cfg.resolved_head_dim if cfg.attention_kind == "gqa" else \
+            (cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        n_attn_layers = (cfg.num_layers if cfg.hybrid_attn_every == 0
+                         else cfg.num_layers // cfg.hybrid_attn_every)
+        attn_scores = (4.0 * tokens * ctx * cfg.num_heads * hd
+                       * n_attn_layers)
+    ssd = 0.0
+    if cfg.ssm_state:
+        # state update + output contraction per token per head
+        ssd = (6.0 * tokens * cfg.ssm_heads * cfg.ssm_head_dim
+               * cfg.ssm_state * cfg.num_layers)
+    total = (linear + attn_scores + ssd) * mult
+    return {"model_flops_global": total,
+            "model_flops_6nd": 6.0 * n_active * tokens if shape.kind == "train"
+            else 2.0 * n_active * tokens,
+            "n_active": n_active, "tokens": tokens}
+
+
+def shaped(tree_structs, specs_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    return jax.tree_util.tree_map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        tree_structs, specs_tree)
+
+
+def input_specs(arch: str, shape_name: str, mesh, *, dtype="bfloat16",
+                rules_override=None, cfg_override=None):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every model input of (arch, shape) plus the step fn."""
+    cfg = cfg_override or get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    long_ctx = shape_name == "long_500k"
+    rules = (SH.long_context_rules(cfg, mesh) if long_ctx
+             else SH.rules_for(cfg, mesh))
+    if rules_override:
+        rules.update(rules_override)
+    rules["mesh"] = mesh  # needed by distributed ops (flash_decode, MoE a2a)
+    bspec = rules.get("batch")
+
+    params_s = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), dtype))
+    pspecs = SH.param_specs(cfg, params_s, rules, mesh)
+    params_in = shaped(params_s, pspecs, mesh)
+
+    kind = shape.kind
+    window = None
+    if kind == "train":
+        opt_s = jax.eval_shape(
+            lambda p: OPT.init_opt_state(p, moments_dtype="bfloat16"),
+            params_s)
+        ospecs = SH.opt_state_specs(pspecs)
+        opt_in = shaped(opt_s, ospecs, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        bspecs = SH.batch_specs(rules)
+        if cfg.family == "audio":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16)
+            bspecs = SH.batch_specs(rules, with_frames=True)
+        batch_in = shaped(batch, bspecs, mesh)
+        step = TR.make_train_step(cfg, OPT.OptimizerConfig(),
+                                  dispatch="auto", remat=True)
+        args = (params_in, opt_in, batch_in)
+        return cfg, rules, step, args
+
+    # serving shapes ------------------------------------------------------
+    if kind == "decode" and long_ctx and cfg.family in ("dense", "moe", "vlm"):
+        window = cfg.sliding_window
+        M = window
+    elif kind == "decode":
+        M = S
+    else:  # prefill
+        M = S
+    cache_s = jax.eval_shape(lambda: T.init_cache(cfg, B, M, dtype))
+    cspecs = SH.cache_specs(cache_s, rules)
+    cache_in = shaped(cache_s, cspecs, mesh)
+
+    if kind == "prefill":
+        tokens = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                      sharding=NamedSharding(mesh, P(bspec, None)))
+        frames_in = None
+        if cfg.family == "audio":
+            frames_in = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq_len, cfg.d_model), jnp.bfloat16,
+                sharding=NamedSharding(mesh, P(bspec, None, None)))
+
+        def step(params, tokens, cache, frames=None):
+            logits, new_cache, _ = T.forward(
+                params, cfg, tokens, mode="prefill", cache=cache,
+                encoder_input=frames, dispatch="auto")
+            return logits, new_cache
+
+        args = (params_in, tokens, cache_in) + (
+            (frames_in,) if frames_in is not None else ())
+        return cfg, rules, step, args
+
+    # decode: ONE new token against a seq_len-deep cache
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                  sharding=NamedSharding(mesh, P(bspec, None)))
+    positions = jax.ShapeDtypeStruct((B, 1), jnp.int32,
+                                     sharding=NamedSharding(mesh, P(bspec, None)))
+    w = window
+
+    def step(params, tokens, positions, cache):
+        logits, new_cache, _ = T.forward(
+            params, cfg, tokens, positions=positions, mode="decode",
+            cache=cache, window=w, dispatch="auto")
+        return logits, new_cache
+
+    return cfg, rules, step, (params_in, tokens, positions, cache_in)
+
+
+def should_skip(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.supports_long_decode:
+        return f"{arch} is encoder-decoder with a bounded decoder; long_500k skipped (DESIGN.md §4)"
+    return None
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             rules_override=None, cfg_override=None, tag: str = "") -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    case = f"{arch}__{shape_name}__{mesh_name}{tag}"
+    skip = should_skip(arch, shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if skip:
+        rec["status"] = "skipped"
+        rec["reason"] = skip
+        return _finish(rec, out_dir, case)
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        cfg, rules, step, args = input_specs(
+            arch, shape_name, mesh, rules_override=rules_override,
+            cfg_override=cfg_override)
+        with mesh:
+            with SH.use_rules(rules):
+                lowered = jax.jit(step).lower(*args)
+                t_lower = time.time() - t0
+                compiled = lowered.compile()
+                t_compile = time.time() - t0 - t_lower
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: getattr(ma, k) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+        except Exception as e:  # CPU backend may not support it
+            rec["memory_analysis"] = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                "flops": ca.get("flops", 0.0),
+                "bytes_accessed": ca.get("bytes accessed", 0.0),
+                "transcendentals": ca.get("transcendentals", 0.0),
+            }
+        except Exception as e:
+            rec["cost_analysis"] = {"error": str(e)}
+        try:
+            txt = compiled.as_text()
+            rec["collectives"] = collective_bytes(
+                txt, layer_trips=cfg.num_layers)
+            rec["hlo_ops"] = len(txt.splitlines())
+        except Exception as e:
+            rec["collectives"] = {"error": str(e)}
+        rec["analytic"] = model_flops_analytic(cfg, INPUT_SHAPES[shape_name])
+        rec["num_layers"] = cfg.num_layers
+        # per-device input footprint from shardings (proves it fits)
+        ndev = mesh.devices.size
+        arg_bytes = 0
+        for leaf in jax.tree_util.tree_leaves(args):
+            shard_elems = leaf.size
+            try:
+                sh = leaf.sharding
+                shard_elems = sh.shard_shape(leaf.shape)
+                n = 1
+                for d in shard_elems:
+                    n *= d
+                shard_elems = n
+            except Exception:
+                pass
+            arg_bytes += shard_elems * leaf.dtype.itemsize
+        rec["per_device_arg_bytes"] = int(arg_bytes)
+        rec["n_devices"] = int(ndev)
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return _finish(rec, out_dir, case)
+
+
+def _finish(rec, out_dir, case):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, case + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    status = rec.get("status")
+    extra = ""
+    if status == "ok":
+        ca = rec.get("cost_analysis", {})
+        extra = (f" flops={ca.get('flops', 0):.3g}"
+                 f" argGB/dev={rec['per_device_arg_bytes']/2**30:.2f}"
+                 f" compile={rec.get('compile_s')}s")
+    elif status == "error":
+        extra = " " + rec.get("error", "")[:160]
+    print(f"[dryrun] {case}: {status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="input shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_artifacts")
+    # beyond-paper optimization toggles (EXPERIMENTS.md §Perf)
+    ap.add_argument("--tp-pad", action="store_true",
+                    help="head padding / KV replication for TP alignment")
+    ap.add_argument("--moe-a2a", action="store_true",
+                    help="expert-parallel all-to-all MoE dispatch")
+    ap.add_argument("--flash-decode", action="store_true",
+                    help="distributed flash-decoding for seq-sharded caches")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else ASSIGNED_ARCHS
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rules_override = {}
+    tag = ""
+    if args.moe_a2a:
+        rules_override["moe_a2a"] = True
+        tag += "+moe_a2a"
+    if args.flash_decode:
+        rules_override["flash_decode"] = True
+        tag += "+flashdecode"
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            cfg_override = get_config(arch).tp_padded(16) if args.tp_pad \
+                else None
+            for mp in meshes:
+                rec = run_case(arch, shape, multi_pod=mp, out_dir=args.out,
+                               rules_override=rules_override or None,
+                               cfg_override=cfg_override,
+                               tag=tag + ("+tppad" if args.tp_pad else ""))
+                n_err += rec["status"] == "error"
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

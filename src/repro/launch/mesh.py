@@ -1,0 +1,19 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(n: int = None, axes=("data",)):
+    """Small CPU mesh for tests/examples (n real host devices)."""
+    devs = jax.devices()
+    n = n or len(devs)
+    shape = (n,) if len(axes) == 1 else None
+    return jax.make_mesh(shape, axes, devices=devs[:n])

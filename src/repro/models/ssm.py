@@ -1,0 +1,231 @@
+"""Mamba2 (SSD — state-space duality) mixer, pure-jnp chunked implementation.
+
+Layout follows the SSD paper [arXiv:2405.21060]: tokens are split into chunks
+of length Q; within a chunk the dual quadratic (attention-like) form is used,
+across chunks a recurrent state h [B, H, P, N] is carried. B/C projections
+are per-*group* (ngroups, shared across heads — the MQA analogue).
+
+TPU adaptation (DESIGN.md §5): the usual fused ``in_proj`` is split into
+per-part projections (z, x, B, C, dt) so the inner dimension can shard on the
+``model`` axis head-aligned (Megatron-style TP for SSMs); B/C are per-group
+and replicated. The depthwise conv is likewise per-part.
+
+``ssd_chunked`` is the reference the Pallas kernel (kernels/ssd_scan.py) is
+validated against; the model calls through an injectable ``ssd_fn``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.parallel.sharding import lshard
+
+
+def init_mamba2(cfg: ModelConfig, key, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    nh, g, N = cfg.ssm_heads, cfg.ssm_ngroups, cfg.ssm_state
+    K = cfg.ssm_conv_dim
+    ks = jax.random.split(key, 7)
+    conv = lambda k, ch: (jax.random.normal(k, (K, ch), jnp.float32)  # noqa: E731
+                          * 0.1).astype(dtype)
+    return {
+        "w_z": dense_init(ks[0], d, di, dtype),
+        "w_x": dense_init(ks[1], d, di, dtype),
+        "w_B": dense_init(ks[2], d, g * N, dtype),
+        "w_C": dense_init(ks[3], d, g * N, dtype),
+        "w_dt": dense_init(ks[4], d, nh, dtype),
+        "conv_x_w": conv(ks[5], di),
+        "conv_B_w": conv(ks[6], g * N),
+        "conv_C_w": conv(ks[6], g * N),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_b": jnp.zeros((g * N,), dtype),
+        "conv_C_b": jnp.zeros((g * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32) *
+                    (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001)))),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[3], di, d, dtype),
+    }
+
+
+def segsum(dA):
+    """Stable segment-sum: out[..., i, j] = sum_{j<k<=i} dA[..., k] (i >= j)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD scan (pure jnp reference).
+
+    x: [b, L, H, P]; dt: [b, L, H] (already softplus'd); A: [H] (negative);
+    B, C: [b, L, G, N]. Returns (y [b, L, H, P], final_state [b, H, P, N]).
+    """
+    b, L, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, L)
+    nc = -(-L // Q)
+    pad = nc * Q - L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    f32 = jnp.float32
+    xc = x.reshape(b, nc, Q, H, P).astype(f32)
+    dtc = dt.reshape(b, nc, Q, H).astype(f32)
+    Bc = B.reshape(b, nc, Q, G, N).astype(f32)
+    Cc = C.reshape(b, nc, Q, G, N).astype(f32)
+    dA = dtc * A[None, None, None, :]                       # [b,nc,Q,H]
+    dA_cs = jnp.cumsum(dA, axis=2)                          # [b,nc,Q,H]
+
+    # ---- intra-chunk (diagonal blocks): attention-like quadratic form
+    Lmat = jnp.exp(segsum(dA.transpose(0, 1, 3, 2)))        # [b,nc,H,Q,Q]
+    # scores[b,c,h,i,j] = C_i . B_j  (group broadcast to heads)
+    CB = jnp.einsum("bcigN,bcjgN->bcgij", Cc, Bc)
+    CB = jnp.repeat(CB, rep, axis=2)                        # [b,nc,H,Q,Q]
+    scores = CB * Lmat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xc)
+
+    # ---- chunk states: contribution of each chunk to the carried state
+    decay = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)            # [b,nc,Q,H]
+    Bh = jnp.repeat(Bc, rep, axis=3)                        # [b,nc,Q,H,N]
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        decay * dtc, Bh, xc)                # [b,nc,H,P,N]
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])               # [b,nc,H]
+    h0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((b, H, P, N), f32))
+
+    def step(h, inp):
+        st, cd = inp
+        h_out = h                                            # state BEFORE chunk
+        h = h * cd[:, :, None, None] + st
+        return h, h_out
+
+    (h_final, h_prev) = jax.lax.scan(
+        step, h0, (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                # [b,nc,H,P,N]
+
+    # ---- state -> output within each chunk
+    Ch = jnp.repeat(Cc, rep, axis=3)                        # [b,nc,Q,H,N]
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, h_prev, jnp.exp(dA_cs))
+    y = (y_diag + y_off).reshape(b, nc * Q, H, P)[:, :L]
+    return y.astype(x.dtype), h_final.astype(x.dtype)
+
+
+def ssd_decode_step(x, dt, A, B, C, state):
+    """Single-token recurrence: x [b,H,P], dt [b,H], B/C [b,G,N],
+    state [b,H,P,N] -> (y [b,H,P], new_state)."""
+    f32 = jnp.float32
+    G = B.shape[1]
+    H = x.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B.astype(f32), rep, axis=1)             # [b,H,N]
+    Ch = jnp.repeat(C.astype(f32), rep, axis=1)
+    dA = jnp.exp(dt.astype(f32) * A[None, :])               # [b,H]
+    new_state = (state.astype(f32) * dA[:, :, None, None]
+                 + jnp.einsum("bh,bhn,bhp->bhpn", dt.astype(f32), Bh,
+                              x.astype(f32)))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+def _gated_rmsnorm(y, z, scale, eps=1e-5):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    out = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + eps)
+    return (out * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def _causal_conv(xpart, w, b, conv_state=None):
+    """Depthwise causal conv over time. xpart [B,S,Ch]; w [K,Ch].
+
+    conv_state [B,K-1,Ch] (history) or None. Returns (out, new_state)."""
+    K = w.shape[0]
+    if conv_state is None:
+        hist = jnp.zeros((xpart.shape[0], K - 1, xpart.shape[2]), xpart.dtype)
+    else:
+        hist = conv_state
+    full = jnp.concatenate([hist, xpart], axis=1)
+    out = jnp.zeros(xpart.shape, dtype=jnp.float32)
+    S = xpart.shape[1]
+    for i in range(K):  # K is tiny (4): unrolled taps
+        out = out + full[:, i:i + S].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xpart.dtype)
+    new_state = full[:, full.shape[1] - (K - 1):]
+    return out, new_state
+
+
+def _project(p, x, cfg):
+    """Per-part projections + convs. x [B,S,d] -> (z, xs, Bm, Cm, dt_raw,
+    conv_states)."""
+    B_, S, _ = x.shape
+    z = jnp.einsum("bsd,dk->bsk", x, p["w_z"])
+    xh = jnp.einsum("bsd,dk->bsk", x, p["w_x"])
+    Bh = jnp.einsum("bsd,dk->bsk", x, p["w_B"])
+    Ch = jnp.einsum("bsd,dk->bsk", x, p["w_C"])
+    dt = jnp.einsum("bsd,dk->bsk", x, p["w_dt"])
+    z = lshard(z, "batch", None, "ssm_heads")
+    xh = lshard(xh, "batch", None, "ssm_heads")
+    return z, xh, Bh, Ch, dt
+
+
+def apply_mamba2(p, x, cfg: ModelConfig, *, state=None, ssd_fn=None):
+    """Full Mamba2 mixer over a sequence (train/prefill).
+
+    x: [B,S,d]. state: None or {"conv_x","conv_B","conv_C", "ssd"}.
+    Returns (out [B,S,d], new_state).
+    """
+    B_, S, _ = x.shape
+    di = cfg.ssm_d_inner
+    nh, g, N, P = cfg.ssm_heads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_head_dim
+    z, xh, Bh, Ch, dt = _project(p, x, cfg)
+    st = state or {}
+    xh, ncx = _causal_conv(xh, p["conv_x_w"], p["conv_x_b"], st.get("conv_x"))
+    Bh, ncB = _causal_conv(Bh, p["conv_B_w"], p["conv_B_b"], st.get("conv_B"))
+    Ch, ncC = _causal_conv(Ch, p["conv_C_w"], p["conv_C_b"], st.get("conv_C"))
+    xs = xh.reshape(B_, S, nh, P)
+    Bm = Bh.reshape(B_, S, g, N)
+    Cm = Ch.reshape(B_, S, g, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    fn = ssd_fn or ssd_chunked
+    y, final_state = fn(xs, dt, A, Bm, Cm, cfg.ssm_chunk, st.get("ssd"))
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B_, S, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC,
+                 "ssd": final_state}
+
+
+def apply_mamba2_decode(p, x, cfg: ModelConfig, *, state):
+    """Single-token decode: x [B,1,d] with state dict. O(1) in history."""
+    B_, S, _ = x.shape
+    di = cfg.ssm_d_inner
+    nh, g, N, P = cfg.ssm_heads, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_head_dim
+    z, xh, Bh, Ch, dt = _project(p, x, cfg)
+    xh, ncx = _causal_conv(xh, p["conv_x_w"], p["conv_x_b"], state["conv_x"])
+    Bh, ncB = _causal_conv(Bh, p["conv_B_w"], p["conv_B_b"], state["conv_B"])
+    Ch, ncC = _causal_conv(Ch, p["conv_C_w"], p["conv_C_b"], state["conv_C"])
+    xs = xh[:, 0].reshape(B_, nh, P)
+    Bm = Bh[:, 0].reshape(B_, g, N)
+    Cm = Ch[:, 0].reshape(B_, g, N)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_ssd = ssd_decode_step(xs, dt1, A, Bm, Cm, state["ssd"])
+    y = y + p["D"][None, :, None].astype(y.dtype) * xs
+    y = y.reshape(B_, 1, di)
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"])
+    return out, {"conv_x": ncx, "conv_B": ncB, "conv_C": ncC, "ssd": new_ssd}

@@ -1,0 +1,229 @@
+"""Logical-axis sharding rules — the SPMD embodiment of CoCoServe placement.
+
+Model code annotates activations with *logical* axes (``lshard(x, "batch",
+"seq", None)``); a rule table maps logical axes to mesh axes. The rule table
+is what a CoCoServe ``PlacementPlan`` compiles down to: module-level
+replication = batch-axis rules over a sub-group, migration = changing a
+parameter's spec. Rules are installed with ``use_rules`` (context manager).
+
+Per-arch fallbacks (DESIGN.md §5) are computed in :func:`rules_for`:
+architectures whose head counts don't divide the model axis replicate
+attention on ``model`` and shard only FFN/experts/vocab.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+_state = threading.local()
+
+
+def current_rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[dict]):
+    prev = current_rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def spec_for(logical_axes, rules=None) -> P:
+    rules = rules if rules is not None else current_rules()
+    if rules is None:
+        return P()
+    return P(*[rules.get(a) if a else None for a in logical_axes])
+
+
+def lshard(x, *logical_axes):
+    """Annotate activation x with logical axes; no-op outside a rule context."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec_for(logical_axes, rules))
+
+
+# ---------------------------------------------------------------- rule tables
+def _divides(n: int, axis_size: int) -> bool:
+    return n > 0 and n % axis_size == 0
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, *, batch_axes=None) -> dict:
+    """Logical->mesh rules for an arch on a mesh (the baseline placement)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_ax = "model" if "model" in sizes else None
+    m = sizes.get("model", 1)
+    if batch_axes is None:
+        batch_axes = tuple(a for a in ("pod", "data") if a in sizes)
+    d = sizes.get("data", 1)
+    # experts shard over `data` (expert parallelism) so that d_ff can shard
+    # over `model` at the same time — required for arctic-480b to fit HBM.
+    E = cfg.padded_experts()
+    experts_ax = ("data" if (E and E % d == 0 and "data" in sizes)
+                  else (model_ax if E and E % m == 0 else None))
+    rules = {
+        "batch": batch_axes if len(batch_axes) > 1 else (batch_axes[0] if batch_axes else None),
+        "seq": None,
+        "vocab": model_ax,
+        "ffn": model_ax if _divides(cfg.d_ff, m) or cfg.d_ff == 0 else None,
+        "experts": experts_ax,
+        "d_model": None,
+        "cache_seq": None,
+    }
+    # attention heads shard on `model` only when both H and KV divide (or KV
+    # replicates cleanly): Megatron-style GQA needs H % m == 0.
+    heads_ok = _divides(cfg.num_heads, m)
+    rules["heads"] = model_ax if heads_ok else None
+    kv_ok = heads_ok and (_divides(cfg.num_kv_heads, m) or m % cfg.num_kv_heads == 0) \
+        if cfg.num_kv_heads else False
+    rules["kv_heads"] = model_ax if (heads_ok and _divides(cfg.num_kv_heads, m)) else None
+    # ssm heads
+    rules["ssm_heads"] = model_ax if _divides(cfg.ssm_heads, m) else None
+    # KV-cache fallback: when KV heads cannot shard on `model` (GQA with
+    # kv % m != 0, MLA latent caches, arctic's 56 heads), shard the cache's
+    # sequence dim there instead — required to fit HBM at 32k contexts.
+    if cfg.attention_kind != "none" and rules["kv_heads"] is None:
+        rules["cache_seq"] = model_ax
+    return rules
+
+
+def long_context_rules(cfg: ModelConfig, mesh: Mesh) -> dict:
+    """batch=1 decode: shard the cache sequence dim over `data` instead."""
+    rules = rules_for(cfg, mesh, batch_axes=())
+    rules["batch"] = None
+    rules["cache_seq"] = "data"
+    return rules
+
+
+# ----------------------------------------------------------- parameter specs
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params, rules: dict, mesh: Mesh):
+    """PartitionSpec tree for a params pytree (by name pattern).
+
+    Leading stacked-layer dims are replicated; routed-expert weights shard
+    their leading E dim on the `experts` rule; Mamba in/out projections stay
+    replicated in the baseline (mixed channel layout - see DESIGN.md section 5
+    and EXPERIMENTS.md Perf for the sharded variant).
+    """
+    m = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    E = cfg.padded_experts()
+
+    def ax_ok(logical, dim):
+        mesh_ax = rules.get(logical)
+        return mesh_ax if (mesh_ax and dim % m == 0) else None
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        nd, shape = leaf.ndim, leaf.shape
+        lead = lambda n: [None] * (nd - n)  # noqa: E731
+        routed = ("shared" not in ps and "residual" not in ps
+                  and cfg.num_experts > 0)
+        if re.search(r"(w_gate|w_up)$", ps) and routed \
+                and nd >= 3 and shape[-3] == E:
+            return P(*(lead(3) + [rules.get("experts"), None,
+                                  ax_ok("ffn", shape[-1])]))
+        if re.search(r"w_down$", ps) and routed and nd >= 3 and shape[-3] == E:
+            return P(*(lead(3) + [rules.get("experts"),
+                                  ax_ok("ffn", shape[-2]), None]))
+        if re.search(r"(w_gate|w_up)$", ps):
+            return P(*(lead(2) + [None, ax_ok("ffn", shape[-1])]))
+        if re.search(r"w_down$", ps):
+            return P(*(lead(2) + [ax_ok("ffn", shape[-2]), None]))
+        if re.search(r"embed$", ps):
+            return P(ax_ok("vocab", shape[0]), None)
+        if re.search(r"lm_head$", ps):
+            return P(None, ax_ok("vocab", shape[1]))
+        if re.search(r"(wq|wq_b)$", ps):
+            return P(*(lead(3) + [None, ax_ok("heads", shape[-2]), None]))
+        if re.search(r"(wk|wv|wk_b|wv_b)$", ps):
+            return P(*(lead(3) + [None, ax_ok("kv_heads", shape[-2]), None]))
+        if re.search(r"wo$", ps):
+            return P(*(lead(2) + [ax_ok("heads", cfg.num_heads), None]))
+        # --- Mamba2 per-part projections (head-aligned TP, DESIGN.md §5)
+        if re.search(r"(w_z|w_x)$", ps):
+            return P(*(lead(2) + [None, ax_ok("ssm_heads", shape[-1])]))
+        if re.search(r"w_dt$", ps):
+            return P(*(lead(2) + [None, ax_ok("ssm_heads", shape[-1])]))
+        if re.search(r"conv_x_w$", ps):
+            return P(*(lead(2) + [None, ax_ok("ssm_heads", shape[-1])]))
+        if re.search(r"(conv_x_b|norm_scale)$", ps):
+            return P(*(lead(1) + [ax_ok("ssm_heads", shape[-1])]))
+        if re.search(r"out_proj$", ps):
+            return P(*(lead(2) + [ax_ok("ssm_heads", shape[-2]), None]))
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+
+def shard_params(params, specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, specs)
+
+
+# ------------------------------------------------------------- cache specs
+def cache_specs(cache_shapes, rules: dict):
+    """PartitionSpec tree for a serving cache (from jax.eval_shape of
+    init_cache). Dispatch by leaf name + rank (hybrid block states carry an
+    extra leading dim)."""
+    b = rules.get("batch")
+    seq = rules.get("cache_seq")
+    kvh = rules.get("kv_heads")
+    ssh = rules.get("ssm_heads")
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        nd = leaf.ndim
+        name = ps.rsplit("/", 1)[-1]
+        cross = "cross" in ps
+        if name in ("k", "v"):
+            s = None if cross else seq
+            return P(None, b, s, kvh, None)
+        if name in ("c", "kr"):
+            return P(None, b, seq, None)
+        if name == "conv_x":
+            return P(*([None] * (nd - 3) + [b, None, ssh]))
+        if name in ("conv_B", "conv_C"):
+            return P(*([None] * (nd - 3) + [b, None, None]))
+        if name == "ssd":
+            return P(*([None] * (nd - 4) + [b, ssh, None, None]))
+        if name == "positions":
+            return P(b, seq)
+        if name == "length":
+            return P(b)
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def batch_specs(rules: dict, with_frames: bool = False):
+    b = rules.get("batch")
+    out = {"tokens": P(b, None), "labels": P(b, None), "mask": P(b, None)}
+    if with_frames:
+        out["frames"] = P(b, None, None)
+    return out
+
+
+def opt_state_specs(pspecs):
+    """Optimizer-state specs mirror the parameter specs (step is scalar)."""
+    return {"step": P(), "mu": pspecs, "nu": pspecs}

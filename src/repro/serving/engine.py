@@ -1,0 +1,186 @@
+"""Continuous-batching inference engine (real JAX execution).
+
+Iteration-level scheduling in the Orca/vLLM style: a fixed pool of batch
+slots; new requests are prefilled individually (batch=1) and inserted into a
+free slot; every engine step decodes all active slots in one fused
+``decode_step``. Inactive slots decode garbage that is masked out — the
+standard static-batch trick that keeps the jitted step shape-stable.
+
+This engine is exercised with reduced configs in tests/examples; the
+full-scale serving path is proven via the dry-run (launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serving import kvcache as KV
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # [S] int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0        # 0 => greedy
+    top_k: int = 0                  # 0 => full distribution
+    seed: int = 0
+    # filled by the engine
+    generated: list = dataclasses.field(default_factory=list)
+    slot: Optional[int] = None
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finish_time is not None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 128, dtype="float32", swa: bool = False,
+                 encoder_input_fn: Optional[Callable] = None,
+                 prefill_chunk: int = 0, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = KV.cache_capacity(cfg, max_len, swa=swa)
+        self.logical_max = max_len
+        self.window = cfg.sliding_window if swa else None
+        self.dtype = dtype
+        self.encoder_input_fn = encoder_input_fn
+        self.prefill_chunk = prefill_chunk  # 0 = one-shot prefill
+        self.cache = T.init_cache(cfg, max_batch, self.max_len, dtype)
+        self.active: Dict[int, Request] = {}   # slot -> request
+        self.queue: List[Request] = []
+        self.clock = 0.0
+        self._step_count = 0
+
+        cfg_ = cfg
+        window = self.window
+
+        @jax.jit
+        def _prefill(params, tokens, cache, enc):
+            return T.forward(params, cfg_, tokens, mode="prefill",
+                             cache=cache, window=window, encoder_input=enc)
+
+        @jax.jit
+        def _decode(params, tokens, positions, cache):
+            return T.forward(params, cfg_, tokens, positions=positions,
+                             mode="decode", cache=cache, window=window)
+
+        @jax.jit
+        def _extend(params, tokens, positions, cache):
+            # multi-token continuation (chunked prefill tail chunks)
+            return T.forward(params, cfg_, tokens, positions=positions,
+                             mode="decode", cache=cache, window=window)
+
+        self._prefill = _prefill
+        self._decode = _decode
+        self._extend = _extend
+
+    # ------------------------------------------------------------- sampling
+    def _sample(self, req: Request, logits_row) -> int:
+        V = self.cfg.vocab_size
+        logits = logits_row[:V]
+        if req.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        rng = np.random.default_rng(
+            req.seed * 1_000_003 + len(req.generated))
+        lg = np.asarray(logits, np.float64) / req.temperature
+        if req.top_k:
+            kth = np.partition(lg, -req.top_k)[-req.top_k]
+            lg = np.where(lg >= kth, lg, -np.inf)
+        p = np.exp(lg - lg.max())
+        p /= p.sum()
+        return int(rng.choice(V, p=p))
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request):
+        req.submit_time = self.clock
+        self.queue.append(req)
+
+    def _free_slots(self):
+        return [s for s in range(self.max_batch) if s not in self.active]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            req.slot = slot
+            S = len(req.prompt)
+            rcache = T.init_cache(self.cfg, 1, self.max_len, self.dtype)
+            enc = None
+            if self.cfg.family == "audio":
+                enc = (self.encoder_input_fn(req) if self.encoder_input_fn
+                       else jnp.zeros((1, self.cfg.encoder_seq_len,
+                                       self.cfg.d_model), jnp.float32))
+            chunk = self.prefill_chunk or S
+            first = min(chunk, S)
+            logits, rcache, _ = self._prefill(
+                self.params, jnp.asarray(req.prompt[:first], jnp.int32)[None],
+                rcache, enc)
+            off = first
+            while off < S:  # chunked prefill: bound per-iteration work
+                n = min(chunk, S - off)
+                toks = jnp.asarray(req.prompt[off:off + n], jnp.int32)[None]
+                pos = jnp.arange(off, off + n, dtype=jnp.int32)[None]
+                logits, rcache, _ = self._extend(self.params, toks, pos,
+                                                 rcache)
+                off += n
+            nxt = self._sample(req, logits[0])
+            req.generated.append(nxt)
+            req.first_token_time = self.clock
+            self.cache = KV.insert_request(self.cache, slot, rcache, S)
+            self.active[slot] = req
+
+    # ------------------------------------------------------------------ step
+    def step(self, dt: float = 1.0):
+        """One engine iteration: admit from queue, one decode step for all
+        active slots, retire finished requests."""
+        self.clock += dt
+        self._admit()
+        if not self.active:
+            return
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        lengths = np.asarray(jax.device_get(self.cache["length"]))
+        positions = np.zeros((B, 1), np.int32)
+        for slot, req in self.active.items():
+            tokens[slot, 0] = req.generated[-1]
+            positions[slot, 0] = lengths[slot]
+        logits, self.cache, _ = self._decode(
+            self.params, jnp.asarray(tokens), jnp.asarray(positions),
+            self.cache)
+        self._step_count += 1
+        finished = []
+        for slot, req in list(self.active.items()):
+            tok = self._sample(req, logits[slot])
+            req.generated.append(tok)
+            hit_eos = req.eos_id is not None and tok == req.eos_id
+            full = len(req.generated) >= req.max_new_tokens
+            over = int(positions[slot, 0]) + 2 >= self.logical_max
+            if hit_eos or full or over:
+                req.finish_time = self.clock
+                finished.append(req)
+                self.cache = KV.evict_request(self.cache, slot)
+                del self.active[slot]
+        return finished
+
+    def run_until_done(self, max_steps: int = 10_000):
+        out = []
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            fin = self.step() or []
+            out.extend(fin)
+            steps += 1
+        return out

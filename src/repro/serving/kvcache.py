@@ -1,0 +1,93 @@
+"""KV-cache utilities: capacity planning, byte accounting, slot updates.
+
+The cache pytrees themselves come from ``models.transformer.init_cache``;
+this module adds the serving-level bookkeeping: how big a cache is (the
+quantity CoCoServe's migration/scale-down reasons about), ring-buffer
+capacity for sliding-window archs, and per-slot insertion of a freshly
+prefilled request into a batched cache (continuous batching).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def cache_capacity(cfg: ModelConfig, logical_len: int, *, swa: bool = False):
+    """Rows to allocate per request: full length, or the ring window."""
+    if swa and cfg.sliding_window:
+        return min(logical_len, cfg.sliding_window)
+    return logical_len
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """Per-token per-request KV bytes across all layers (Table 1 analysis)."""
+    if cfg.family == "ssm":
+        return 0  # O(1) state, no per-token growth
+    hd = cfg.resolved_head_dim
+    if cfg.attention_kind == "mla":
+        per_layer = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    else:
+        per_layer = 2 * cfg.num_kv_heads * hd
+    if cfg.family == "hybrid":
+        nb = cfg.num_layers // cfg.hybrid_attn_every
+        return nb * 2 * cfg.num_kv_heads * hd * dtype_bytes
+    n = cfg.num_layers
+    return n * per_layer * dtype_bytes
+
+
+def state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> int:
+    """O(1) recurrent-state bytes per request (SSM/hybrid archs)."""
+    if cfg.ssm_state == 0:
+        return 0
+    P, N = cfg.ssm_head_dim, cfg.ssm_state
+    ch = cfg.ssm_d_inner + 2 * cfg.ssm_ngroups * N
+    per_layer = (cfg.ssm_conv_dim - 1) * ch + cfg.ssm_heads * P * N
+    return cfg.num_layers * per_layer * dtype_bytes
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(cache))
+
+
+def insert_request(cache, slot: int, request_cache, length: int):
+    """Insert a single-request (batch=1) prefilled cache into batch ``slot``.
+
+    Both caches must come from the same (cfg, max_len). Batched leaves have
+    the batch at axis 1 for stacked layers ([L,B,...]) and axis 0 for the
+    top-level fields ([B,...]); we detect by matching against the request
+    leaf's shape.
+    """
+    def put(dst, src):
+        # batch axis = first axis where src has size 1 and all other dims
+        # line up. (With max_batch == 1 shapes are equal and the first
+        # size-1 axis wins — the whole cache belongs to slot 0, so a full
+        # overwrite is correct.)
+        for ax in range(dst.ndim):
+            if src.shape[ax] == 1 and \
+                    dst.shape[:ax] == src.shape[:ax] and \
+                    dst.shape[ax + 1:] == src.shape[ax + 1:]:
+                idx = [slice(None)] * dst.ndim
+                idx[ax] = slice(slot, slot + 1)
+                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+        raise ValueError(f"cannot align {src.shape} into {dst.shape}")
+
+    new = jax.tree_util.tree_map(put, cache, request_cache)
+    new["length"] = cache["length"].at[slot].set(length)
+    if "positions" in cache:
+        new["positions"] = cache["positions"].at[slot].set(
+            request_cache["positions"][0])
+    return new
+
+
+def evict_request(cache, slot: int):
+    """Reset a slot (request finished): zero length, re-poison positions."""
+    new = dict(cache)
+    new["length"] = cache["length"].at[slot].set(0)
+    if "positions" in cache:
+        new["positions"] = cache["positions"].at[slot].set(T.BIG_POS)
+    return new

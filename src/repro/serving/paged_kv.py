@@ -1,0 +1,156 @@
+"""Paged KV cache — block-table memory management (the vLLM mechanism the
+paper benchmarks against, §2.1/§6).
+
+Layout: a global pool of fixed-size blocks per layer,
+``k/v: [L, n_blocks, block_size, KV, hd]``, plus a per-request block table
+``[B, max_blocks]`` of pool indices (-1 = unallocated). Allocation is
+on-demand per ``block_size`` tokens, so memory scales with *actual* tokens
+(the paged-KV property that prevents the HFT static-reservation OOMs), and
+freeing a request returns whole blocks to the pool — fragmentation is
+bounded by ``block_size - 1`` tokens per request.
+
+The gather/scatter forms below are the pure-jnp oracle for the paged
+decode-attention Pallas kernel (kernels/paged_decode.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class PagedState:
+    """Device arrays + host-side free list for one engine."""
+    k: jnp.ndarray            # [L, n_blocks, bs, KV, hd]
+    v: jnp.ndarray
+    block_tables: np.ndarray  # [B, max_blocks] int32 host array (-1 empty)
+    lengths: np.ndarray       # [B] int32 host array
+    free: List[int]
+    block_size: int
+
+    @property
+    def n_blocks(self) -> int:
+        return self.k.shape[1]
+
+    def blocks_in_use(self) -> int:
+        return self.n_blocks - len(self.free)
+
+    def utilization(self) -> float:
+        """Fraction of allocated slots actually holding tokens (1 - frag)."""
+        used_blocks = self.blocks_in_use()
+        if used_blocks == 0:
+            return 1.0
+        toks = int(self.lengths.sum())
+        return toks / (used_blocks * self.block_size)
+
+
+def init_paged(cfg: ModelConfig, max_batch: int, n_blocks: int,
+               block_size: int = 16, dtype="bfloat16",
+               max_len: int = 4096) -> PagedState:
+    dtype = jnp.dtype(dtype)
+    hd = cfg.resolved_head_dim
+    L, KV = cfg.num_layers, cfg.num_kv_heads
+    max_blocks = -(-max_len // block_size)
+    shape = (L, n_blocks, block_size, KV, hd)
+    return PagedState(
+        k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+        block_tables=np.full((max_batch, max_blocks), -1, np.int32),
+        lengths=np.zeros((max_batch,), np.int32),
+        free=list(range(n_blocks)), block_size=block_size)
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+def allocate(state: PagedState, slot: int, n_tokens: int):
+    """Ensure ``slot`` has blocks for lengths[slot] + n_tokens tokens."""
+    need_total = int(state.lengths[slot]) + n_tokens
+    have = int((state.block_tables[slot] >= 0).sum())
+    need_blocks = -(-need_total // state.block_size) - have
+    if need_blocks > len(state.free):
+        raise OutOfBlocks(
+            f"need {need_blocks} blocks, {len(state.free)} free")
+    for i in range(need_blocks):
+        state.block_tables[slot, have + i] = state.free.pop()
+
+
+def free_slot(state: PagedState, slot: int):
+    for b in state.block_tables[slot]:
+        if b >= 0:
+            state.free.append(int(b))
+    state.block_tables[slot] = -1
+    state.lengths[slot] = 0
+
+
+def write_tokens(state: PagedState, slot: int, k_new, v_new):
+    """Append k/v for S new tokens of one request.
+
+    k_new/v_new: [L, S, KV, hd]. Requires allocate() first. Returns the
+    updated (functional) device arrays stored back into ``state``.
+    """
+    S = k_new.shape[1]
+    start = int(state.lengths[slot])
+    bs = state.block_size
+    # target (block, offset) per token
+    pos = np.arange(start, start + S)
+    blocks = state.block_tables[slot, pos // bs]
+    offs = pos % bs
+    bidx = jnp.asarray(blocks, jnp.int32)
+    oidx = jnp.asarray(offs, jnp.int32)
+    # scatter: k[:, blocks[t], offs[t]] = k_new[:, t]
+    state.k = state.k.at[:, bidx, oidx].set(k_new)
+    state.v = state.v.at[:, bidx, oidx].set(v_new)
+    state.lengths[slot] = start + S
+    return state
+
+
+def gather_request(state: PagedState, slot: int, max_len: int):
+    """Materialize a request's KV as dense [L, max_len, KV, hd] (oracle /
+    fallback path; the paged kernel reads blocks directly)."""
+    bs = state.block_size
+    n_blk = -(-max_len // bs)
+    tbl = state.block_tables[slot, :n_blk]
+    tbl = np.where(tbl >= 0, tbl, 0)
+    k = state.k[:, jnp.asarray(tbl, jnp.int32)]      # [L, n_blk, bs, KV, hd]
+    v = state.v[:, jnp.asarray(tbl, jnp.int32)]
+    L, _, _, KV, hd = state.k.shape
+    k = k.reshape(L, n_blk * bs, KV, hd)[:, :max_len]
+    v = v.reshape(L, n_blk * bs, KV, hd)[:, :max_len]
+    return k, v
+
+
+def paged_attention_ref(q, state: PagedState, slots, *, layer: int):
+    """Pure-jnp paged decode attention for a batch of slots.
+
+    q: [B, H, hd]; returns [B, H, hd]. Oracle for kernels/paged_decode.py.
+    """
+    import math
+    B, H, hd = q.shape
+    KV = state.k.shape[3]
+    bs = state.block_size
+    rep = H // KV
+    outs = []
+    for b, slot in enumerate(slots):
+        length = int(state.lengths[slot])
+        n_blk = max(1, -(-length // bs))
+        tbl = jnp.asarray(
+            np.where(state.block_tables[slot, :n_blk] >= 0,
+                     state.block_tables[slot, :n_blk], 0), jnp.int32)
+        k = state.k[layer, tbl].reshape(n_blk * bs, KV, hd)
+        v = state.v[layer, tbl].reshape(n_blk * bs, KV, hd)
+        kh = jnp.repeat(k, rep, axis=1)
+        vh = jnp.repeat(v, rep, axis=1)
+        s = jnp.einsum("hd,shd->hs", q[b].astype(jnp.float32),
+                       kh.astype(jnp.float32)) / math.sqrt(hd)
+        mask = jnp.arange(n_blk * bs) < length
+        s = jnp.where(mask[None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        outs.append(jnp.einsum("hs,shd->hd", w, vh.astype(jnp.float32)))
+    return jnp.stack(outs).astype(q.dtype)

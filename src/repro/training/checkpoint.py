@@ -1,0 +1,61 @@
+"""Checkpointing: pytree <-> msgpack on disk (host-gathered).
+
+Layout: one ``<step>.ckpt`` file holding {path: (dtype, shape, bytes)} plus a
+JSON-ish meta dict. Simple, dependency-light, good enough for the example
+drivers; a production deployment would swap in a sharded async writer.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        out[key] = leaf
+    return out
+
+
+def save(path: str, tree, meta: dict | None = None):
+    flat = _flatten(tree)
+    payload = {"__meta__": meta or {}}
+    for k, v in flat.items():
+        arr = np.asarray(jax.device_get(v))
+        payload[k] = {"dtype": str(arr.dtype), "shape": list(arr.shape),
+                      "data": arr.tobytes()}
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def load(path: str, like=None):
+    """Load a checkpoint. With ``like`` (a template pytree), restores the
+    tree structure and device dtypes; otherwise returns a flat dict."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    meta = payload.pop("__meta__", {})
+    arrays = {k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])
+              for k, v in payload.items()}
+    if like is None:
+        return arrays, meta
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(arrays)
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_order = []
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    for path, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        leaves_order.append(jnp.asarray(arrays[key], dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves_order), meta

@@ -1,0 +1,90 @@
+"""AdamW with decoupled weight decay + warmup-cosine schedule (pure pytree).
+
+No optax dependency in this environment — this is a minimal, fully-featured
+implementation: bias-corrected moments, decoupled decay (skipping norms /
+biases / scalars), global-norm clipping, and a warmup-cosine LR schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, moments_dtype="float32"):
+    """``moments_dtype="bfloat16"`` halves optimizer memory (8-bit-Adam-style
+    compromise) — used for the >100B MoE dry-runs to fit HBM."""
+    dt = jnp.dtype(moments_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def _decay_mask(params):
+    """True where weight decay applies (2D+ matrices only)."""
+    return jax.tree_util.tree_map(lambda p: p.ndim >= 2, params)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * scale), grads)
+    else:
+        grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g,
+                                state["mu"], grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                                state["nu"], grads)
+    sf = jnp.asarray(step, jnp.float32)
+    bc1 = 1 - b1 ** sf
+    bc2 = 1 - b2 ** sf
+    lr = lr_at(cfg, step)
+    decay = _decay_mask(params)
+
+    def upd(p, m, v, d):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + jnp.where(d, cfg.weight_decay, 0.0) * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu, decay)
+    new_state = {"step": step, "mu": mu, "nu": nu}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

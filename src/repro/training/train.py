@@ -1,0 +1,90 @@
+"""Loss and train-step construction (with remat and MoE aux loss)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.training import optimizer as OPT
+
+
+def lm_loss(logits, labels, mask=None):
+    """Next-token cross-entropy; labels already shifted by the pipeline."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(ll)
+    return -(ll * mask).sum() / jnp.clip(mask.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ModelConfig, *, aux_weight: float = 0.01,
+                 dispatch: str = "auto", remat: bool = False):
+    def loss_fn(params, batch):
+        logits, _, aux = T.forward(
+            params, cfg, batch["tokens"], mode="train",
+            encoder_input=batch.get("frames"), dispatch=dispatch, remat=remat)
+        loss = lm_loss(logits, batch["labels"], batch.get("mask"))
+        total = loss + aux_weight * aux
+        return total, {"loss": loss, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OPT.OptimizerConfig, *,
+                    aux_weight: float = 0.01, dispatch: str = "auto",
+                    remat: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Pure function of its inputs — suitable for jit with in/out shardings
+    (see launch/dryrun.py and launch/train.py).
+    """
+    loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, dispatch=dispatch,
+                           remat=remat)
+
+    def train_step(params, opt_state, batch):
+        (total, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, om = OPT.apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = dict(parts, total_loss=total, **om)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_train_step_accum(cfg: ModelConfig, opt_cfg: OPT.OptimizerConfig, *,
+                          accum_steps: int, aux_weight: float = 0.01,
+                          dispatch: str = "auto", remat: bool = False):
+    """Gradient-accumulation train step: the batch's leading dim is split
+    into ``accum_steps`` microbatches scanned sequentially — the standard
+    way to fit large global batches per step without more HBM.
+
+    batch tensors must have global_batch % accum_steps == 0.
+    """
+    loss_fn = make_loss_fn(cfg, aux_weight=aux_weight, dispatch=dispatch,
+                           remat=remat)
+
+    def train_step(params, opt_state, batch):
+        def micro(carry, mb):
+            gsum, lsum = carry
+            (total, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb)
+            gsum = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            return (gsum, lsum + total), None
+
+        micros = jax.tree_util.tree_map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                *x.shape[1:]), batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0.0)),
+                                       micros)
+        grads = jax.tree_util.tree_map(lambda g: g / accum_steps, gsum)
+        params, opt_state, om = OPT.apply_updates(opt_cfg, params, grads,
+                                                  opt_state)
+        return params, opt_state, dict(total_loss=lsum / accum_steps, **om)
+
+    return train_step

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 host device;
+multi-device behaviour is exercised via subprocesses (test_distributed.py)
+and the dry-run (launch/dryrun.py sets its own flag)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,66 @@
+"""Config registry: geometry, param counts, reduced variants."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_archs
+
+# nominal sizes (billions) with loose tolerance; geometry is from the
+# assignment so "name" sizes are only approximate for some entries
+NOMINAL_B = {
+    "minicpm3-4b": (3.4, 4.9),
+    "whisper-medium": (0.6, 1.0),
+    "zamba2-7b": (5.5, 8.0),          # assigned 81L geometry
+    "tinyllama-1.1b": (0.95, 1.25),
+    "chameleon-34b": (29, 38),
+    "arctic-480b": (430, 520),
+    "qwen2-moe-a2.7b": (12, 16),      # total params (A2.7 = active)
+    "stablelm-12b": (10.5, 13.5),
+    "mamba2-780m": (0.68, 0.88),
+    "gemma-7b": (7.5, 9.5),
+    "llama2-13b": (11.5, 14.5),
+    "llama2-70b": (62, 76),
+}
+
+
+def test_registry_complete():
+    assert len(ASSIGNED_ARCHS) == 10
+    assert len(list_archs()) == 12  # + the paper's two llama models
+    assert len(INPUT_SHAPES) == 4
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    lo, hi = NOMINAL_B[arch]
+    count = cfg.param_count() / 1e9
+    assert lo <= count <= hi, f"{arch}: {count:.2f}B not in [{lo},{hi}]"
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_reduced_is_small(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers == 2
+    assert r.d_model <= 512
+    assert r.padded_experts() <= 16 and (r.num_experts in (0, 4))
+    assert r.param_count() < 30e6
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_padded_vocab_divisible(arch):
+    cfg = get_config(arch)
+    assert cfg.padded_vocab % 256 == 0
+    assert cfg.padded_vocab >= cfg.vocab_size
+
+
+def test_input_shapes_exact():
+    s = INPUT_SHAPES
+    assert (s["train_4k"].seq_len, s["train_4k"].global_batch) == (4096, 256)
+    assert (s["prefill_32k"].seq_len, s["prefill_32k"].global_batch) == (32768, 32)
+    assert (s["decode_32k"].seq_len, s["decode_32k"].global_batch) == (32768, 128)
+    assert (s["long_500k"].seq_len, s["long_500k"].global_batch) == (524288, 1)
+
+
+def test_long_decode_support_flags():
+    assert not get_config("whisper-medium").supports_long_decode
+    assert get_config("mamba2-780m").supports_long_decode
+    assert get_config("zamba2-7b").supports_long_decode
+    assert get_config("gemma-7b").supports_long_decode  # via sliding window

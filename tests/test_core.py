@@ -1,0 +1,211 @@
+"""CoCoServe core: plan invariants, speedup model (Eqs. 1-4), Algorithm 1/2,
+controller loop — with hypothesis property tests on the key invariants."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.cluster import Cluster
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.monitor import MetricsSnapshot, Monitor
+from repro.core.plan import PlacementPlan
+from repro.core.scale_down import scale_down, sort_evictees
+from repro.core.scale_up import scale_up, sort_candidates_by_continuity
+from repro.core.speedup import (SpeedupModelConfig, gamma_of, speedup,
+                                speedup_homo, t_of, w_of)
+
+
+# --------------------------------------------------------------------- plan
+def test_plan_basics():
+    p = PlacementPlan.initial(8)
+    assert p.p == [1] * 8
+    assert p.continuity_breaks() == 0
+    p.add_replica(2, 1)
+    p.add_replica(3, 1)
+    assert p.p[2] == p.p[3] == 2
+    assert p.continuity_breaks() == 2      # enter at 2, leave after 3
+    p.add_replica(5, 1)
+    assert p.continuity_breaks() == 4      # two separate runs
+    assert p.evict_replica(5, 1)
+    assert p.continuity_breaks() == 2
+
+
+def test_plan_migration_tracking():
+    p = PlacementPlan.initial(4)
+    p.migrate(1, "kv_cache", 2)
+    p.migrate(2, "layer", 3)
+    assert p.device_set(2) == (3,)
+    assert 2 in p.layers_on_device(3)
+    assert set(p.devices_used()) == {0, 2, 3}
+
+
+# ------------------------------------------------------------------ speedup
+@given(st.lists(st.integers(1, 8), min_size=1, max_size=64),
+       st.floats(0.0, 0.5))
+@settings(max_examples=60, deadline=None)
+def test_speedup_homo_bounds(p, gamma):
+    """1 <= S_homo(P) <= 1/gamma-ish and S(P0) == 1."""
+    s = speedup_homo(p, gamma)
+    assert s >= 1.0 - 1e-9 or max(p) == 1
+    assert speedup_homo([1] * len(p), gamma) == pytest.approx(1.0)
+
+
+@given(st.lists(st.integers(1, 8), min_size=2, max_size=32),
+       st.integers(0, 31), st.floats(0.01, 0.3))
+@settings(max_examples=60, deadline=None)
+def test_speedup_homo_monotone_in_p(p, idx, gamma):
+    """Increasing any p_i never decreases S_homo (Eq. 4 monotonicity)."""
+    idx = idx % len(p)
+    s0 = speedup_homo(p, gamma)
+    p2 = list(p)
+    p2[idx] += 1
+    assert speedup_homo(p2, gamma) >= s0 - 1e-12
+
+
+def test_eq3_vs_eq4_consistency():
+    """For contiguous full replication the exact Eq. 3 speedup and the
+    homogeneous Eq. 4 closed form should roughly agree."""
+    cluster = Cluster.homogeneous(4)
+    m = SpeedupModelConfig(d_model=5120, seq_len=256, batch_size=16)
+    g = gamma_of(cluster, m)
+    plan = PlacementPlan.initial(40)
+    for i in range(40):
+        for d in (1, 2, 3):
+            plan.add_replica(i, d)
+    s3 = speedup(plan, m, cluster)
+    s4 = speedup_homo(plan.p, g)
+    assert s3 > 2.0 and s4 > 2.0
+    assert abs(s3 - s4) / s3 < 0.5
+
+
+def test_t_of_rewards_continuity():
+    """Fragmented plans must pay more communication than contiguous ones
+    with the same replica count (the paper's continuity principle)."""
+    cluster = Cluster.homogeneous(2)
+    m = SpeedupModelConfig(d_model=4096, seq_len=256, batch_size=16)
+    contiguous = PlacementPlan.initial(16)
+    fragmented = PlacementPlan.initial(16)
+    for i in range(4):
+        contiguous.add_replica(i, 1)        # layers 0-3
+        fragmented.add_replica(i * 4, 1)    # layers 0,4,8,12
+    assert contiguous.continuity_breaks() < fragmented.continuity_breaks()
+    assert t_of(contiguous, m, cluster) < t_of(fragmented, m, cluster)
+
+
+# ------------------------------------------------------------------- Alg. 1
+def test_scale_up_monotone_improvement():
+    cluster = Cluster.homogeneous(4)
+    plan = PlacementPlan.initial(40)
+    out = scale_up(plan, cluster, gamma=0.05, replica_size=605e6)
+    assert speedup_homo(out.p, 0.05) >= speedup_homo(plan.p, 0.05)
+    assert max(out.p) <= 2  # default dop cap
+
+
+def test_scale_up_respects_capacity():
+    cluster = Cluster.homogeneous(4, mem_gb=2.0)  # room for ~3 layers
+    plan = PlacementPlan.initial(40)
+    out = scale_up(plan, cluster, gamma=0.05, replica_size=605e6)
+    per_dev = {}
+    for layer, reps in out.replicas.items():
+        for d in reps:
+            per_dev[d] = per_dev.get(d, 0) + 1
+    for d, n in per_dev.items():
+        assert n <= int(2.0 * 1024**3 // 605e6)
+
+
+def test_scale_up_skips_home_device():
+    cluster = Cluster.homogeneous(2)
+    out = scale_up(PlacementPlan.initial(8), cluster, gamma=0.05,
+                   replica_size=1e6)
+    for reps in out.replicas.values():
+        assert 0 not in reps
+
+
+def test_continuity_sort_prefers_run_extension():
+    plan = PlacementPlan.initial(16)
+    for i in (4, 5, 6):
+        plan.add_replica(i, 1)
+    cands = sort_candidates_by_continuity(plan, 1, 4)
+    assert set(cands[:2]) == {3, 7}  # extend the 4-6 run first
+
+
+@given(st.integers(2, 6), st.integers(8, 48))
+@settings(max_examples=20, deadline=None)
+def test_scale_up_never_worsens(n_dev, n_layers):
+    cluster = Cluster.homogeneous(n_dev)
+    plan = PlacementPlan.initial(n_layers)
+    g = 0.05
+    out = scale_up(plan, cluster, gamma=g, replica_size=605e6)
+    assert speedup_homo(out.p, g) >= 1.0
+
+
+# ------------------------------------------------------------------- Alg. 2
+def test_scale_down_phases_in_order():
+    cluster = Cluster.homogeneous(4)
+    plan = PlacementPlan.initial(8)
+    plan.add_replica(0, 0)   # a replica on the hot device to evict
+    calls = {"n": 0}
+
+    def is_violating(p, bs):
+        calls["n"] += 1
+        return calls["n"] < 3  # resolves on the 3rd check
+
+    res = scale_down(plan, cluster, src_device=0, is_violating=is_violating,
+                     batch_size=16)
+    assert res.resolved
+    assert any(a.startswith("migrate") for a in res.actions)
+
+
+def test_scale_down_batch_reduction_last_resort():
+    cluster = Cluster.homogeneous(1)   # nowhere to migrate
+    plan = PlacementPlan.initial(4)
+    state = {"bs": None}
+
+    def is_violating(p, bs):
+        state["bs"] = bs
+        return bs > 6
+
+    res = scale_down(plan, cluster, src_device=0, is_violating=is_violating,
+                     batch_size=16, delta_bs=5)
+    assert res.resolved
+    assert res.batch_size <= 6
+    assert any("reduce batch" in a for a in res.actions)
+
+
+def test_sort_evictees_prefers_isolated_replicas():
+    plan = PlacementPlan.initial(16)
+    for i in (2, 3, 4, 10):
+        plan.add_replica(i, 1)
+    order = sort_evictees(plan, 1)
+    assert order[0] == 10  # the isolated replica goes first
+
+
+# --------------------------------------------------------------- controller
+def _mk_controller(viol=0.0, util=0.1):
+    cluster = Cluster.homogeneous(4)
+    plan = PlacementPlan.initial(16)
+    mon = Monitor()
+    mon.record(MetricsSnapshot(
+        t=0.0, slo_violation_rate=viol,
+        device_util=[util] * 4, device_mem_frac=[0.3, 0.1, 0.1, 0.1]))
+    ctrl = Controller(ControllerConfig(replica_size=605e6), cluster, plan,
+                      mon, is_violating=lambda p, bs: False)
+    return ctrl
+
+
+def test_controller_scales_up_when_vacant():
+    ctrl = _mk_controller(viol=0.0, util=0.1)
+    action = ctrl.tick()
+    assert action and action.startswith("scale-up")
+    assert sum(ctrl.plan.p) > 16
+
+
+def test_controller_scales_down_on_violation():
+    ctrl = _mk_controller(viol=0.5, util=0.95)
+    action = ctrl.tick()
+    assert action and action.startswith("scale-down")
+
+
+def test_controller_cooldown():
+    ctrl = _mk_controller(viol=0.0, util=0.1)
+    assert ctrl.tick() is not None
+    assert ctrl.tick() is None  # cooling down

@@ -1,0 +1,256 @@
+"""Multi-device behaviour via subprocesses (8 forced host devices).
+
+Covers the paper-critical properties that need a real multi-device mesh:
+* replication correctness — a per-layer batch-sharding plan produces
+  numerically identical results to the unconstrained model;
+* continuity — fragmented plans lower to MORE resharding collectives than
+  contiguous ones with the same replica count (§3.1 / Alg. 1's objective);
+* migration — re-placement moves the expected bytes and keeps values.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_py(body: str) -> str:
+    code = "import os\n" \
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=8'\n" \
+        + textwrap.dedent(body)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=420)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+def test_replicated_plan_matches_baseline():
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.core.plan import PlacementPlan
+    from repro.core import replication as R
+
+    cfg = get_config('tinyllama-1.1b').reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), 'float32')
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                                cfg.vocab_size)
+    base, _, _ = T.forward(params, cfg, tokens, mode='train')
+
+    mesh = R.replication_mesh(8)
+    plan = PlacementPlan.initial(cfg.num_layers)
+    plan.add_replica(0, 1)          # p_0 = 2
+    for d in (1, 2, 3):
+        plan.add_replica(1, d)      # p_1 = 4
+    hook = R.layer_hook_from_plan(plan, mesh)
+    params_r = R.replicate_params_for_plan(params, mesh)
+    with mesh:
+        out2, _, _ = jax.jit(lambda p, t: T.forward(
+            p, cfg, t, mode='train', unroll=True, layer_hook=hook))(
+            params_r, tokens)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(out2),
+                               rtol=2e-4, atol=2e-4)
+    print('REPLICATION_OK')
+    """)
+    assert "REPLICATION_OK" in out
+
+
+def test_continuity_reduces_collectives():
+    out = run_py("""
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.core.plan import PlacementPlan
+    from repro.core import replication as R
+
+    cfg = get_config('tinyllama-1.1b').reduced()
+    # use more layers to make fragmentation visible
+    import dataclasses
+    cfg = dataclasses.replace(cfg, num_layers=8)
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), 'float32'))
+    tokens = jax.ShapeDtypeStruct((8, 16), jnp.int32)
+    mesh = R.replication_mesh(8)
+
+    def count(plan):
+        hook = R.layer_hook_from_plan(plan, mesh)
+        with mesh:
+            lowered = jax.jit(lambda p, t: T.forward(
+                p, cfg, t, mode='train', unroll=True, layer_hook=hook)
+                ).lower(params, tokens)
+            txt = lowered.compile().as_text()
+        return sum(v['count'] if isinstance(v, dict) else v
+                   for v in R.count_collectives(txt).values())
+
+    contiguous = PlacementPlan.initial(8)
+    fragmented = PlacementPlan.initial(8)
+    for i in range(4):
+        contiguous.add_replica(i, 1)        # layers 0-3 together
+        fragmented.add_replica(2 * i, 1)    # layers 0,2,4,6
+    c_cont, c_frag = count(contiguous), count(fragmented)
+    print('COLLECTIVES contiguous=%d fragmented=%d' % (c_cont, c_frag))
+    assert c_cont < c_frag, (c_cont, c_frag)
+    print('CONTINUITY_OK')
+    """)
+    assert "CONTINUITY_OK" in out
+
+
+def test_migration_moves_bytes_and_preserves_values():
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.core import migration as M
+    from repro.core.replication import replication_mesh
+
+    cfg = get_config('tinyllama-1.1b').reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), 'float32')
+    mesh = replication_mesh(8)
+    before = np.asarray(params['layers']['attn']['wq'])
+    new_params, cost = M.migrate_by_path(
+        params, r'layers/attn', P(), mesh, measure=True)
+    expect = M.tree_bytes(params, r'layers/attn')
+    assert cost.bytes_moved == expect, (cost.bytes_moved, expect)
+    assert cost.est_seconds > 0.2  # fixed overhead floor (Table 2 shape)
+    np.testing.assert_array_equal(
+        before, np.asarray(new_params['layers']['attn']['wq']))
+    print('MIGRATION_OK bytes=%d est=%.3fs measured=%.3fs' % (
+        cost.bytes_moved, cost.est_seconds, cost.measured_seconds or -1))
+    """)
+    assert "MIGRATION_OK" in out
+
+
+def test_sharded_train_step_runs():
+    """A real sharded train step on an 8-device host mesh (data||model)."""
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.parallel import sharding as SH
+    from repro.training import optimizer as OPT, train as TR
+
+    cfg = get_config('qwen2-moe-a2.7b').reduced()
+    mesh = jax.make_mesh((4, 2), ('data', 'model'))
+    rules = SH.rules_for(cfg, mesh)
+    params = T.init_params(cfg, jax.random.PRNGKey(0), 'float32')
+    specs = SH.param_specs(cfg, params, rules, mesh)
+    params = SH.shard_params(params, specs, mesh)
+    opt = OPT.init_opt_state(params)
+    step = TR.make_train_step(cfg, OPT.OptimizerConfig(lr=1e-3))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                cfg.vocab_size)
+    batch = {'tokens': tokens, 'labels': tokens}
+    batch = jax.device_put(batch, NamedSharding(mesh, P('data', None)))
+    with mesh:
+        with SH.use_rules(rules):
+            p2, o2, m = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(m['loss']))
+    print('SHARDED_TRAIN_OK loss=%.3f' % float(m['loss']))
+    """)
+    assert "SHARDED_TRAIN_OK" in out
+
+
+def test_flash_decode_matches_reference():
+    """Distributed flash-decoding (seq-sharded cache) == naive attention."""
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.parallel.distributed_attention import flash_decode
+    from repro.kernels.ref import ref_decode_attention
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    B, H, KV, M, D = 4, 8, 2, 64, 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (B,1,H,D), jnp.float32)
+    kc = jax.random.normal(jax.random.PRNGKey(1), (B,M,KV,D), jnp.float32)
+    vc = jax.random.normal(jax.random.PRNGKey(2), (B,M,KV,D), jnp.float32)
+    lens = jnp.array([10, 33, 64, 50], jnp.int32)
+    qpos = (lens - 1)[:, None]
+    kpos = jnp.broadcast_to(jnp.arange(M, dtype=jnp.int32), (B, M))
+    kpos = jnp.where(kpos < lens[:, None], kpos, 2**30)
+    with mesh:
+        out = jax.jit(lambda *a: flash_decode(
+            *a, mesh=mesh, seq_axis="model", batch_axis="data"))(
+            q, kc, vc, qpos, kpos)
+    ref = ref_decode_attention(q[:,0], kc.transpose(0,2,1,3),
+                               vc.transpose(0,2,1,3), lens)
+    np.testing.assert_allclose(np.asarray(out[:,0]), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+    print('FLASH_DECODE_OK')
+    """)
+    assert "FLASH_DECODE_OK" in out
+
+
+def test_moe_expert_parallel_matches_dense():
+    """shard_map all-to-all MoE == dense oracle (fwd + grad)."""
+    out = run_py("""
+    import dataclasses, jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import moe as MOE
+    from repro.parallel import sharding as SH
+    cfg = dataclasses.replace(get_config('qwen2-moe-a2.7b').reduced(),
+                              num_experts=16, num_experts_per_tok=2,
+                              num_shared_experts=0)
+    mesh = jax.make_mesh((4, 2), ('data', 'model'))
+    rules = SH.rules_for(cfg, mesh); rules['mesh'] = mesh
+    p = MOE.init_moe(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 16, cfg.d_model),
+                          jnp.float32) * 0.5
+    w, idx, _ = MOE.route(p, x, cfg)
+    ref = MOE._moe_dense(p, x, w, idx, cfg)
+    with mesh:
+        got = jax.jit(lambda *a: MOE._moe_expert_parallel(
+            *a, cfg, rules, capacity_factor=8.0))(p, x, w, idx)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    def loss_ep(p_):
+        w_, i_, _ = MOE.route(p_, x, cfg)
+        return jnp.sum(MOE._moe_expert_parallel(
+            p_, x, w_, i_, cfg, rules, capacity_factor=8.0) ** 2)
+    def loss_dense(p_):
+        w_, i_, _ = MOE.route(p_, x, cfg)
+        return jnp.sum(MOE._moe_dense(p_, x, w_, i_, cfg) ** 2)
+    with mesh:
+        g1 = jax.jit(jax.grad(loss_ep))(p)
+    g2 = jax.grad(loss_dense)(p)
+    np.testing.assert_allclose(np.asarray(g1['w_down']),
+                               np.asarray(g2['w_down']),
+                               rtol=5e-3, atol=5e-3)
+    print('MOE_A2A_OK')
+    """)
+    assert "MOE_A2A_OK" in out
+
+
+def test_mla_flash_decode_matches_reference():
+    """Absorbed-MLA distributed flash-decoding == single-device decode."""
+    out = run_py("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.parallel import sharding as SH
+    cfg = get_config('minicpm3-4b').reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), 'float32')
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 12), 0,
+                                cfg.vocab_size)
+    cache = T.init_cache(cfg, 4, 64, 'float32')
+    _, cache, _ = T.forward(params, cfg, tokens, mode='prefill', cache=cache)
+    pos = jnp.full((4, 1), 12, jnp.int32)
+    ref, _, _ = T.forward(params, cfg, tokens[:, :1], positions=pos,
+                          mode='decode', cache=cache)
+    mesh = jax.make_mesh((2, 4), ('data', 'model'))
+    rules = SH.rules_for(cfg, mesh)
+    rules.update(mesh=mesh, flash_decode=True, cache_seq='model')
+    with mesh, SH.use_rules(rules):
+        got, _, _ = jax.jit(lambda p, t, po, c: T.forward(
+            p, cfg, t, positions=po, mode='decode', cache=c))(
+            params, tokens[:, :1], pos, cache)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+    print('MLA_FLASH_OK')
+    """)
+    assert "MLA_FLASH_OK" in out

@@ -1,0 +1,116 @@
+"""Sharding rule engine: per-arch fallbacks, param/cache specs, divisibility.
+
+Uses a fake mesh object (axis names + shape only) — no devices needed to
+check the PartitionSpec logic.
+"""
+import types
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import transformer as T
+from repro.parallel import sharding as SH
+
+
+def fake_mesh(shape=(16, 16), axes=("data", "model")):
+    return types.SimpleNamespace(axis_names=axes,
+                                 devices=np.empty(shape, dtype=object))
+
+
+MESH = fake_mesh()
+MESH3 = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_heads_fallback_non_divisible():
+    """minicpm3 (40H) and arctic (56H) cannot shard heads on a 16-way axis —
+    the rule engine must fall back to replicated attention (DESIGN.md §5)."""
+    assert SH.rules_for(get_config("minicpm3-4b"), MESH)["heads"] is None
+    assert SH.rules_for(get_config("arctic-480b"), MESH)["heads"] is None
+    assert SH.rules_for(get_config("gemma-7b"), MESH)["heads"] == "model"
+    assert SH.rules_for(get_config("chameleon-34b"), MESH)["heads"] == "model"
+
+
+def test_kv_cache_seq_fallback():
+    """Archs whose KV heads can't shard must seq-shard the cache."""
+    r = SH.rules_for(get_config("arctic-480b"), MESH)
+    assert r["kv_heads"] is None and r["cache_seq"] == "model"
+    r = SH.rules_for(get_config("gemma-7b"), MESH)
+    assert r["kv_heads"] == "model" and r["cache_seq"] is None
+
+
+def test_expert_rules():
+    assert SH.rules_for(get_config("arctic-480b"), MESH)["experts"] == "data"
+    assert SH.rules_for(get_config("qwen2-moe-a2.7b"), MESH)["experts"] == "data"
+
+
+def test_batch_axes_multi_pod():
+    r = SH.rules_for(get_config("tinyllama-1.1b"), MESH3)
+    assert r["batch"] == ("pod", "data")
+
+
+def test_long_context_rules():
+    r = SH.long_context_rules(get_config("gemma-7b"), MESH)
+    assert r["batch"] is None and r["cache_seq"] == "data"
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divisible(arch):
+    """Every sharded param dim must divide by the axis size (16)."""
+    cfg = get_config(arch)
+    rules = SH.rules_for(cfg, MESH)
+    shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), "bfloat16"))
+    specs = SH.param_specs(cfg, shapes, rules, MESH)
+
+    def check(path, leaf, spec):
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if ax is None:
+                continue
+            size = 16  # both data and model are 16-way
+            assert dim % size == 0, (SH._path_str(path), leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda p, l, s: check(p, l, s), shapes, specs)
+
+
+@pytest.mark.parametrize("arch", ["gemma-7b", "zamba2-7b", "arctic-480b",
+                                  "minicpm3-4b", "whisper-medium"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    rules = SH.rules_for(cfg, MESH)
+    shapes = jax.eval_shape(lambda: T.init_cache(cfg, 128, 1024, "bfloat16"))
+    specs = SH.cache_specs(shapes, rules)
+
+    def check(path, leaf, spec):
+        axes = tuple(spec)
+        for i, ax in enumerate(axes[:leaf.ndim]):
+            if ax is None:
+                continue
+            sizes = {"data": 16, "model": 16, ("pod", "data"): 32}
+            sz = sizes.get(ax, 16)
+            assert leaf.shape[i] % sz == 0, (SH._path_str(path), leaf.shape,
+                                             spec)
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+
+
+def test_mamba_tp_rules():
+    cfg = get_config("mamba2-780m")
+    rules = SH.rules_for(cfg, MESH)
+    assert rules["ssm_heads"] == "model"  # 48 % 16 == 0
+    shapes = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0), "bfloat16"))
+    specs = SH.param_specs(cfg, shapes, rules, MESH)
+    wx = specs["layers"]["mixer"]["w_x"]
+    assert tuple(wx) == (None, None, "model")
+    out = specs["layers"]["mixer"]["out_proj"]
+    assert tuple(out) == (None, "model", None)
+
+
+def test_lshard_noop_without_rules():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    assert SH.lshard(x, "batch", None) is x
