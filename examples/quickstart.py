@@ -1,6 +1,7 @@
-"""Quickstart: build a model, prefill + decode a few tokens, then apply a
-CoCoServe module operation (layer replication plan) and show the modeled
-speedup — the whole public API in ~60 lines.
+"""Quickstart: build a model, prefill + decode a few tokens, serve a small
+batch through the paged continuous-batching engine, then apply a CoCoServe
+module operation (layer replication plan) and show the modeled speedup —
+the whole public API in ~80 lines.
 
     PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
 """
@@ -47,7 +48,27 @@ def main():
         toks.append(int(jnp.argmax(logits[0, :cfg.vocab_size])))
     print("greedy tokens:", toks)
 
-    # 3) CoCoServe: plan a scale-up on an idle 4-device cluster
+    # 3) the serving engine on its primary (paged-KV) path: batched
+    # admission, block-pool decode, on-device sampling — one host sync
+    # per step. (Attention decoders only; other families run dense.)
+    if cfg.supports_paged_kv:
+        from repro.serving.engine import Engine, Request
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     cache_kind="paged", block_size=8)
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            eng.submit(Request(rid=i,
+                               prompt=rng.integers(2, cfg.vocab_size,
+                                                   size=6 + i)
+                               .astype(np.int32),
+                               max_new_tokens=6))
+        done = eng.run_until_done()
+        for r in sorted(done, key=lambda r: r.rid):
+            print(f"paged engine rid={r.rid}: {r.generated}")
+        print(f"pool end state: blocks={eng.pstate.n_blocks}, "
+              f"in_use={eng.pstate.blocks_in_use()} (drained pool -> 0)")
+
+    # 4) CoCoServe: plan a scale-up on an idle 4-device cluster
     full = get_config(args.arch)
     cluster = Cluster.homogeneous(4)
     plan = scale_up(PlacementPlan.initial(full.num_layers), cluster,

@@ -98,6 +98,15 @@ class ModelConfig:
 
     # ----------------------------------------------------------------- derived
     @property
+    def supports_paged_kv(self) -> bool:
+        """Whether the paged block-pool decode path (serving/paged_kv.py)
+        can serve this arch: a GQA attention decoder. SSM/hybrid caches are
+        O(1) (nothing to page); MLA latents and audio cross-KV aren't
+        pooled yet (see ROADMAP)."""
+        return (self.family in ("dense", "moe", "vlm")
+                and self.attention_kind != "mla")
+
+    @property
     def resolved_head_dim(self) -> int:
         if self.head_dim is not None:
             return self.head_dim

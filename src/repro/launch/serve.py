@@ -33,11 +33,18 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--cache", choices=["auto", "dense", "paged"],
+                    default="auto")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
     params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
-    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=128)
+    kind = args.cache
+    if kind == "auto":  # primary path where the family supports it
+        kind = "paged" if cfg.supports_paged_kv else "dense"
+    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=128,
+                 cache_kind=kind)
+    print(f"[serve] cache_kind={kind}")
 
     cluster = Cluster.homogeneous(4)
     plan = PlacementPlan.initial(cfg.num_layers)

@@ -247,6 +247,74 @@ def apply_gqa(p, x, cfg: ModelConfig, *, positions, cache=None, slots=None,
     return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_cache
 
 
+def apply_gqa_paged(p, x, cfg: ModelConfig, *, positions, pool_k, pool_v,
+                    block_tables, active, window=None,
+                    impl="gather", interpret=False):
+    """GQA decode attention against a paged block pool (write-then-attend).
+
+    Single-token decode only: x [B,1,d]. ``pool_k/v`` are ONE layer's pool
+    slices [n_blocks, bs, KV, hd]; ``block_tables`` [B, max_blocks] int32
+    (-1 = unallocated, masked); ``positions`` [B,1] are the pre-write
+    token counts (the new token lands at position ``positions[b,0]``);
+    ``active`` [B] bool — inactive rows write nothing (their scatter index
+    is pushed out of bounds and dropped) and attend over an empty,
+    fully-masked context, producing garbage logits the engine ignores.
+
+    ``impl``: "gather" materializes the table's blocks with a batched
+    gather and reuses the chunked fp32 attention (jit-friendly anywhere);
+    "kernel" calls the Pallas paged-decode kernel (kernels/paged_decode.py)
+    whose HBM traffic stops at each request's true length. The kernel
+    implements plain causal GQA only, so logit-softcap archs and sliding
+    windows silently route back to the gather path — identical numerics,
+    no divergence between impls.
+
+    Returns (out [B,1,d], new_pool_k, new_pool_v).
+    """
+    B, S, _ = x.shape
+    assert S == 1, "paged path is decode-only (one token per step)"
+    hd = cfg.resolved_head_dim
+    n_blocks, bs, KV, _ = pool_k.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_qk_norm:
+        q, k = rms_norm_dim(q), rms_norm_dim(k)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    # ---- write the new token's K/V into its block (inactive rows drop)
+    pos = positions[:, 0]
+    tbl_col = jnp.clip(pos // bs, 0, block_tables.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tables, tbl_col[:, None], axis=1)[:, 0]
+    blk = jnp.where(active & (blk >= 0), blk, n_blocks)  # OOB -> dropped
+    off = pos % bs
+    new_k = pool_k.at[blk, off].set(k[:, 0].astype(pool_k.dtype),
+                                    mode="drop")
+    new_v = pool_v.at[blk, off].set(v[:, 0].astype(pool_v.dtype),
+                                    mode="drop")
+
+    kv_len = jnp.where(active, pos + 1, 0).astype(jnp.int32)
+    if impl == "kernel" and (cfg.logit_softcap or window is not None):
+        impl = "gather"  # kernel has no softcap/window support
+    if impl == "kernel":
+        from repro.kernels.paged_decode import paged_decode_attention
+        out = paged_decode_attention(q[:, 0], new_k, new_v, block_tables,
+                                     kv_len, interpret=interpret)[:, None]
+    else:
+        max_blocks = block_tables.shape[1]
+        tbl = jnp.maximum(block_tables, 0).astype(jnp.int32)
+        kk = new_k[tbl].reshape(B, max_blocks * bs, KV, hd)
+        vv = new_v[tbl].reshape(B, max_blocks * bs, KV, hd)
+        out = attention(q, kk, vv, q_positions=positions, kv_len=kv_len,
+                        k_positions=jnp.arange(max_blocks * bs,
+                                               dtype=jnp.int32),
+                        window=window, causal=True,
+                        softcap=cfg.logit_softcap)
+    out = out.reshape(B, S, cfg.num_heads * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), new_k, new_v
+
+
 def compute_cross_kv(p, enc_out):
     """Cross-attention K/V from encoder output (whisper decoder prefill)."""
     k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])

@@ -372,6 +372,55 @@ def _forward_decoder(params, cfg, tokens, positions, cache, mode, dispatch,
     return unembed(params, cfg, x[:, -1]), new_cache, aux
 
 
+def forward_paged(params, cfg: ModelConfig, tokens, cache, *, window=None,
+                  attn_impl="gather", interpret=False):
+    """Single-token decode step against a PAGED KV pool (the Engine's
+    primary decode path; see serving/paged_kv.py for the pool layout).
+
+    tokens: [B, 1] int32. ``cache`` is the paged handle — a pytree of
+    device arrays so the whole step jits with zero host syncs:
+
+    * ``k``/``v``: [L, n_blocks, bs, KV, hd] shared block pools
+    * ``block_tables``: [B, max_blocks] int32 (-1 = unallocated; may be
+      sliced to any prefix that covers every active request)
+    * ``lengths``: [B] int32 tokens already in the pool per slot
+    * ``active``: [B] bool (inactive slots decode garbage that is masked
+      out of every pool write — the shape-stable static-batch trick)
+
+    Positions are derived on device (new token sits at ``lengths[b]``).
+    Returns (logits [B, Vpad], new_cache, aux_loss).
+    """
+    if not cfg.supports_paged_kv:
+        raise ValueError(f"paged decode needs a GQA attention decoder "
+                         f"(family={cfg.family}, attn={cfg.attention_kind})")
+    lengths = cache["lengths"].astype(jnp.int32)
+    active = cache["active"]
+    positions = lengths[:, None]                       # [B, 1]
+    x = embed_tokens(params, cfg, tokens)
+    if not cfg.use_rope:
+        x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    x = lshard(x, "batch", "seq", None)
+
+    def body(carry, xs):
+        x, aux = carry
+        lp, kl, vl = xs
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        h, kl, vl = L.apply_gqa_paged(
+            lp["attn"], h, cfg, positions=positions, pool_k=kl, pool_v=vl,
+            block_tables=cache["block_tables"], active=active,
+            window=window, impl=attn_impl, interpret=interpret)
+        x = _residual(x, h)
+        x, a = _mlp_sublayer(lp, x, cfg, "auto")
+        return (x, aux + a), (kl, vl)
+
+    (x, aux), (nk, nv) = jax.lax.scan(
+        body, (x, jnp.float32(0.0)),
+        (params["layers"], cache["k"], cache["v"]))
+    new_cache = dict(cache, k=nk, v=nv,
+                     lengths=lengths + active.astype(jnp.int32))
+    return unembed(params, cfg, x[:, -1]), new_cache, aux
+
+
 def encode_audio(params, cfg: ModelConfig, frames):
     """Whisper-style encoder over precomputed (stubbed) frame embeddings."""
     B, S, _ = frames.shape
@@ -501,6 +550,9 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
     (default arange). Returns (logits, new_cache, aux_loss):
     train -> full-seq logits [B,S,Vpad]; prefill/decode -> last-token [B,Vpad].
     """
+    if cache is not None and "block_tables" in cache:
+        assert mode == "decode", "paged cache handles are decode-only"
+        return forward_paged(params, cfg, tokens, cache, window=window)
     B, S = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))

@@ -1,18 +1,38 @@
 """Continuous-batching inference engine (real JAX execution).
 
-Iteration-level scheduling in the Orca/vLLM style: a fixed pool of batch
-slots; new requests are prefilled individually (batch=1) and inserted into a
-free slot; every engine step decodes all active slots in one fused
-``decode_step``. Inactive slots decode garbage that is masked out — the
-standard static-batch trick that keeps the jitted step shape-stable.
+Iteration-level scheduling in the Orca/vLLM style, with PAGED KV as the
+primary decode path (``cache_kind="paged"``):
 
-This engine is exercised with reduced configs in tests/examples; the
-full-scale serving path is proven via the dry-run (launch/dryrun.py).
+* **Prefill** runs over a throwaway dense cache sized exactly to the
+  prompt, batching same-length prompts from the queue into one forward
+  call, then scatters each request's K/V into the shared block pool via
+  ``paged_kv.write_tokens``. Block allocation/eviction is driven by the
+  host-side free list — admission applies backpressure (requests wait in
+  the queue) when the pool is out of blocks, and decode-time pressure
+  preempts the youngest request back onto the queue (its re-admission
+  replays deterministically thanks to counter-based sampling keys).
+* **Decode** is ONE fused jitted call per engine step: single-token
+  forward against the block pool (``models.transformer.forward_paged``)
+  plus batched on-device sampling (``serving.sampling``). The only
+  device→host transfer per step is fetching the sampled token ids —
+  host-side cached lengths/tables make everything else host-resident, so
+  a step performs exactly one host sync (asserted in tests via
+  ``serving.instrument.count_host_syncs``). The block-table width fed to
+  the step is bucketed to powers of two, so decode compute and HBM
+  traffic scale with the *actual* longest context, not ``max_len``.
+
+The legacy dense path (``cache_kind="dense"``, a ``[B, max_len]`` cache)
+remains for sliding-window/MLA/SSM/hybrid/audio families and as the
+parity oracle; it shares the same fused decode+sample step shape.
+Inactive slots decode garbage that is masked out — the standard
+static-batch trick that keeps the jitted step shape-stable.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional
+import functools
+from typing import Callable, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +41,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
 from repro.serving import kvcache as KV
+from repro.serving import paged_kv as PK
+from repro.serving import sampling as SMP
 
 
 @dataclasses.dataclass
@@ -38,17 +60,100 @@ class Request:
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    preemptions: int = 0
 
     @property
     def done(self) -> bool:
         return self.finish_time is not None
 
 
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+# --------------------------------------------------------------- jitted steps
+# Module-level with a STATIC (hashable, frozen) ModelConfig so the XLA
+# compile cache is shared across Engine instances — restarting an engine,
+# or running dense and paged engines side by side (benchmarks, parity
+# tests), never recompiles an already-seen step shape.
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "window"))
+def _prefill_fn(params, tokens, cache, enc, *, cfg, window):
+    return T.forward(params, cfg, tokens, mode="prefill", cache=cache,
+                     window=window, encoder_input=enc)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "window"))
+def _extend_fn(params, tokens, positions, cache, *, cfg, window):
+    # multi-token continuation (chunked prefill tail chunks)
+    return T.forward(params, cfg, tokens, positions=positions,
+                     mode="decode", cache=cache, window=window)
+
+
+def _dense_step_impl(params, cache, tokens, positions, temps, topks, seeds,
+                     counters, *, cfg, window, stochastic, max_top_k):
+    logits, nc, _ = T.forward(params, cfg, tokens, positions=positions,
+                              mode="decode", cache=cache, window=window)
+    toks = SMP.sample_tokens(logits, temps, topks, seeds, counters,
+                             cfg.vocab_size, stochastic=stochastic,
+                             max_top_k=max_top_k)
+    return toks, nc
+
+
+def _paged_step_impl(params, k, v, tables, lengths, active, tokens, temps,
+                     topks, seeds, counters, *, cfg, window, impl, interp,
+                     stochastic, max_top_k):
+    handle = {"k": k, "v": v, "block_tables": tables,
+              "lengths": lengths, "active": active}
+    logits, nc, _ = T.forward_paged(params, cfg, tokens[:, None], handle,
+                                    window=window, attn_impl=impl,
+                                    interpret=interp)
+    toks = SMP.sample_tokens(logits, temps, topks, seeds, counters,
+                             cfg.vocab_size, stochastic=stochastic,
+                             max_top_k=max_top_k)
+    return toks, nc["k"], nc["v"]
+
+
+@functools.lru_cache(maxsize=1)
+def _jitted_steps():
+    """Buffer donation (in-place KV update) needs the backend, and probing
+    it at import time would freeze JAX's platform before callers like
+    launch/dryrun.py set their XLA flags — so the donating jits are built
+    lazily at first step."""
+    can_donate = jax.default_backend() != "cpu"
+    dense = jax.jit(_dense_step_impl,
+                    static_argnames=("cfg", "window", "stochastic",
+                                     "max_top_k"),
+                    donate_argnums=(1,) if can_donate else ())
+    paged = jax.jit(_paged_step_impl,
+                    static_argnames=("cfg", "window", "impl", "interp",
+                                     "stochastic", "max_top_k"),
+                    donate_argnums=(1, 2) if can_donate else ())
+    return dense, paged
+
+
+@functools.partial(jax.jit, static_argnames=("vocab_size", "stochastic",
+                                             "max_top_k"))
+def _sample_fn(logits, temps, topks, seeds, counters, *, vocab_size,
+               stochastic, max_top_k):
+    return SMP.sample_tokens(logits, temps, topks, seeds, counters,
+                             vocab_size, stochastic=stochastic,
+                             max_top_k=max_top_k)
+
+
 class Engine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 128, dtype="float32", swa: bool = False,
                  encoder_input_fn: Optional[Callable] = None,
-                 prefill_chunk: int = 0, greedy: bool = True):
+                 prefill_chunk: int = 0,
+                 cache_kind: str = "dense", block_size: int = 16,
+                 n_blocks: Optional[int] = None,
+                 paged_attn_impl: str = "gather", interpret: bool = False):
+        assert cache_kind in ("dense", "paged"), cache_kind
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -58,50 +163,65 @@ class Engine:
         self.dtype = dtype
         self.encoder_input_fn = encoder_input_fn
         self.prefill_chunk = prefill_chunk  # 0 = one-shot prefill
-        self.cache = T.init_cache(cfg, max_batch, self.max_len, dtype)
+        self.cache_kind = cache_kind
         self.active: Dict[int, Request] = {}   # slot -> request
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = collections.deque()
         self.clock = 0.0
         self._step_count = 0
+        # host mirror of per-slot cache lengths for the DENSE path (the
+        # paged path's canonical host lengths live in pstate.lengths) —
+        # this is what lets a decode step avoid reading device state.
+        self._host_lengths = np.zeros((max_batch,), np.int64)
+        self._admit_order: List[int] = []      # slots, oldest first
+        self._admit_finished: List[Request] = []  # done at admission
 
-        cfg_ = cfg
-        window = self.window
+        if cache_kind == "paged":
+            if not cfg.supports_paged_kv:
+                raise ValueError(
+                    f"cache_kind='paged' needs a GQA attention decoder "
+                    f"(family={cfg.family}, attn={cfg.attention_kind})")
+            if swa:
+                raise ValueError("paged cache does not ring-buffer; "
+                                 "run sliding-window archs dense")
+            if n_blocks is None:
+                n_blocks = -(-max_batch * self.max_len // block_size)
+            self.pstate = PK.init_paged(cfg, max_batch, n_blocks,
+                                        block_size=block_size, dtype=dtype,
+                                        max_len=self.max_len)
+            self.cache = None
+        else:
+            self.cache = T.init_cache(cfg, max_batch, self.max_len, dtype)
+            self.pstate = None
 
-        @jax.jit
-        def _prefill(params, tokens, cache, enc):
-            return T.forward(params, cfg_, tokens, mode="prefill",
-                             cache=cache, window=window, encoder_input=enc)
-
-        @jax.jit
-        def _decode(params, tokens, positions, cache):
-            return T.forward(params, cfg_, tokens, positions=positions,
-                             mode="decode", cache=cache, window=window)
-
-        @jax.jit
-        def _extend(params, tokens, positions, cache):
-            # multi-token continuation (chunked prefill tail chunks)
-            return T.forward(params, cfg_, tokens, positions=positions,
-                             mode="decode", cache=cache, window=window)
-
-        self._prefill = _prefill
-        self._decode = _decode
-        self._extend = _extend
+        self._paged_impl = paged_attn_impl
+        self._interpret = interpret
 
     # ------------------------------------------------------------- sampling
-    def _sample(self, req: Request, logits_row) -> int:
-        V = self.cfg.vocab_size
-        logits = logits_row[:V]
-        if req.temperature <= 0.0:
-            return int(jnp.argmax(logits))
-        rng = np.random.default_rng(
-            req.seed * 1_000_003 + len(req.generated))
-        lg = np.asarray(logits, np.float64) / req.temperature
-        if req.top_k:
-            kth = np.partition(lg, -req.top_k)[-req.top_k]
-            lg = np.where(lg >= kth, lg, -np.inf)
-        p = np.exp(lg - lg.max())
-        p /= p.sum()
-        return int(rng.choice(V, p=p))
+    def _sample_batch(self, logits, reqs) -> np.ndarray:
+        """Sample one token per request from [len(reqs), Vpad] logits —
+        one fused device call + one device_get for the whole batch."""
+        temps = np.asarray([r.temperature for r in reqs], np.float32)
+        topks = np.asarray([r.top_k for r in reqs], np.int32)
+        seeds = np.asarray([r.seed for r in reqs], np.uint32)
+        ctrs = np.asarray([len(r.generated) for r in reqs], np.uint32)
+        return jax.device_get(_sample_fn(
+            logits, temps, topks, seeds, ctrs,
+            vocab_size=self.cfg.vocab_size,
+            stochastic=bool((temps > 0).any()),
+            max_top_k=int(topks.max())))
+
+    def _sampling_arrays(self):
+        B = self.max_batch
+        temps = np.zeros((B,), np.float32)
+        topks = np.zeros((B,), np.int32)
+        seeds = np.zeros((B,), np.uint32)
+        ctrs = np.zeros((B,), np.uint32)
+        for slot, req in self.active.items():
+            temps[slot] = req.temperature
+            topks[slot] = req.top_k
+            seeds[slot] = req.seed
+            ctrs[slot] = len(req.generated)
+        return temps, topks, seeds, ctrs
 
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request):
@@ -111,70 +231,276 @@ class Engine:
     def _free_slots(self):
         return [s for s in range(self.max_batch) if s not in self.active]
 
-    def _admit(self):
+    @staticmethod
+    def _prefill_tokens(req: Request) -> np.ndarray:
+        """Tokens the cache must hold before the next decode step: the
+        prompt, plus — for a preempted/resumed request — every generated
+        token except the last (which the next step feeds in)."""
+        if req.generated:
+            return np.concatenate([np.asarray(req.prompt, np.int32),
+                                   np.asarray(req.generated[:-1], np.int32)])
+        return np.asarray(req.prompt, np.int32)
+
+    def _run_prefill(self, tokens_2d, cache_len: Optional[int] = None,
+                     enc=None):
+        """Batched (possibly chunked) prefill over a throwaway cache.
+
+        The paged path sizes the cache exactly to the prompt (its K/V is
+        immediately scattered into the block pool); the dense path keeps
+        ``max_len`` so ``kvcache.insert_request`` shapes line up.
+        Returns (last-token logits, cache)."""
+        G, S = tokens_2d.shape
+        rcache = T.init_cache(self.cfg, G, cache_len or S, self.dtype)
+        if enc is None and self.cfg.family == "audio":
+            enc = jnp.zeros((G, self.cfg.encoder_seq_len,
+                             self.cfg.d_model), jnp.float32)
+        chunk = self.prefill_chunk or S
+        first = min(chunk, S)
+        logits, rcache, _ = _prefill_fn(
+            self.params, jnp.asarray(tokens_2d[:, :first]), rcache, enc,
+            cfg=self.cfg, window=self.window)
+        off = first
+        while off < S:  # chunked prefill: bound per-iteration work
+            n = min(chunk, S - off)
+            toks = jnp.asarray(tokens_2d[:, off:off + n])
+            pos = jnp.broadcast_to(
+                jnp.arange(off, off + n, dtype=jnp.int32), (G, n))
+            logits, rcache, _ = _extend_fn(self.params, toks, pos, rcache,
+                                           cfg=self.cfg, window=self.window)
+            off += n
+        return logits, rcache
+
+    def _activate(self, req: Request, slot: int, length: int,
+                  first_tok: Optional[int]):
+        if first_tok is not None:
+            req.generated.append(int(first_tok))
+        if req.first_token_time is None:
+            req.first_token_time = self.clock
+        # the admission-sampled token can already satisfy a finish
+        # condition (eos on the first token, max_new_tokens == 1): retire
+        # without ever occupying a decode slot
+        hit_eos = (req.eos_id is not None and req.generated
+                   and req.generated[-1] == req.eos_id)
+        if hit_eos or len(req.generated) >= req.max_new_tokens:
+            req.finish_time = self.clock
+            if self.cache_kind == "paged":
+                PK.free_slot(self.pstate, slot)
+            self._admit_finished.append(req)
+            return
+        req.slot = slot
+        self.active[slot] = req
+        self._admit_order.append(slot)
+        if self.cache_kind == "dense":
+            self._host_lengths[slot] = length
+
+    # ---------------------------------------------------------- dense admit
+    def _admit_dense(self):
         for slot in self._free_slots():
             if not self.queue:
                 break
-            req = self.queue.pop(0)
-            req.slot = slot
-            S = len(req.prompt)
-            rcache = T.init_cache(self.cfg, 1, self.max_len, self.dtype)
-            enc = None
-            if self.cfg.family == "audio":
-                enc = (self.encoder_input_fn(req) if self.encoder_input_fn
-                       else jnp.zeros((1, self.cfg.encoder_seq_len,
-                                       self.cfg.d_model), jnp.float32))
-            chunk = self.prefill_chunk or S
-            first = min(chunk, S)
-            logits, rcache, _ = self._prefill(
-                self.params, jnp.asarray(req.prompt[:first], jnp.int32)[None],
-                rcache, enc)
-            off = first
-            while off < S:  # chunked prefill: bound per-iteration work
-                n = min(chunk, S - off)
-                toks = jnp.asarray(req.prompt[off:off + n], jnp.int32)[None]
-                pos = jnp.arange(off, off + n, dtype=jnp.int32)[None]
-                logits, rcache, _ = self._extend(self.params, toks, pos,
-                                                 rcache)
-                off += n
-            nxt = self._sample(req, logits[0])
-            req.generated.append(nxt)
-            req.first_token_time = self.clock
-            self.cache = KV.insert_request(self.cache, slot, rcache, S)
-            self.active[slot] = req
+            req = self.queue.popleft()
+            toks = self._prefill_tokens(req)
+            enc = (self.encoder_input_fn(req)
+                   if self.cfg.family == "audio" and self.encoder_input_fn
+                   else None)
+            logits, rcache = self._run_prefill(toks[None, :],
+                                               cache_len=self.max_len,
+                                               enc=enc)
+            first = None
+            if not req.generated:
+                first = self._sample_batch(logits, [req])[0]
+            self.cache = KV.insert_request(self.cache, slot, rcache,
+                                           len(toks))
+            self._activate(req, slot, len(toks), first)
+
+    # ---------------------------------------------------------- paged admit
+    def _admit_paged(self):
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        taken: List[Request] = []
+        while self.queue and len(taken) < len(free):
+            taken.append(self.queue.popleft())
+        bs = self.pstate.block_size
+        ptoks = {id(r): self._prefill_tokens(r) for r in taken}
+
+        def blocks_needed(req):
+            # prompt + headroom for the first decode write
+            return -(-(len(ptoks[id(req)]) + 1) // bs)
+
+        # pre-pass BEFORE any allocation: a request that can never fit —
+        # pool too small, or prompt >= max_len (block-table row too
+        # narrow) — is rejected now rather than head-of-line blocking
+        # everything behind it; the rest of the wave goes back to the
+        # queue intact, nothing is lost and no block leaks.
+        cap = min(self.pstate.n_blocks, self.pstate.block_tables.shape[1])
+        for req in taken:
+            need = blocks_needed(req)
+            if need > cap:
+                for r in reversed([t for t in taken if t is not req]):
+                    self.queue.appendleft(r)
+                req.finish_time = self.clock  # rejected: no output
+                raise PK.OutOfBlocks(
+                    f"request rid={req.rid} needs {need} blocks; pool has "
+                    f"{self.pstate.n_blocks}, table rows hold "
+                    f"{self.pstate.block_tables.shape[1]}")
+
+        admitted: List[Request] = []
+        slot_of: Dict[int, int] = {}
+        for idx, req in enumerate(taken):
+            slot = free[len(admitted)]
+            if blocks_needed(req) > len(self.pstate.free):
+                # out of blocks: backpressure — requeue IN ORDER and stop
+                for r in reversed(taken[idx:]):
+                    self.queue.appendleft(r)
+                break
+            PK.allocate(self.pstate, slot, len(ptoks[id(req)]))
+            slot_of[id(req)] = slot
+            admitted.append(req)
+        # group same-length prompts into one batched prefill each, then
+        # activate in SUBMISSION order (group iteration would reorder
+        # _admit_order and break youngest-first preemption)
+        groups: Dict[int, List[Request]] = {}
+        for req in admitted:
+            groups.setdefault(len(ptoks[id(req)]), []).append(req)
+        first_of: Dict[int, Optional[int]] = {}
+        for S, reqs in groups.items():
+            toks = np.stack([ptoks[id(r)] for r in reqs])
+            logits, rcache = self._run_prefill(toks)
+            firsts = self._sample_batch(logits, reqs)
+            self.pstate = PK.write_tokens_batch(
+                self.pstate, [slot_of[id(r)] for r in reqs],
+                rcache["layers"]["k"], rcache["layers"]["v"])
+            for i, req in enumerate(reqs):
+                first_of[id(req)] = None if req.generated else firsts[i]
+        for req in admitted:
+            self._activate(req, slot_of[id(req)], len(ptoks[id(req)]),
+                           first_of[id(req)])
+
+    def _admit(self):
+        if self.cache_kind == "paged":
+            self._admit_paged()
+        else:
+            self._admit_dense()
+
+    # ------------------------------------------------------------ preemption
+    def _preempt(self, slot: int):
+        """Return the request in ``slot`` to the queue head and free its
+        blocks. Counter-based sampling keys make the resumed continuation
+        identical to the uninterrupted one."""
+        req = self.active.pop(slot)
+        self._admit_order.remove(slot)
+        PK.free_slot(self.pstate, slot)
+        req.slot = None
+        req.preemptions += 1
+        self.queue.appendleft(req)
+
+    def _ensure_decode_room(self):
+        """Every active slot needs pool room for one more token; under
+        pressure, preempt the youngest request (vLLM-style). A lone
+        request that has genuinely outgrown the pool (no victim left to
+        preempt, requeueing would just re-admit it) is evicted with its
+        partial output before raising, so the engine stays serviceable
+        for everything behind it."""
+        for slot in sorted(self.active.keys()):
+            while slot in self.active:
+                try:
+                    PK.allocate(self.pstate, slot, 1)
+                    break
+                except PK.OutOfBlocks:
+                    victims = [s for s in self._admit_order
+                               if s in self.active]
+                    if len(victims) <= 1:
+                        req = self.active[slot]
+                        req.finish_time = self.clock  # truncated output
+                        self._retire(slot)
+                        raise PK.OutOfBlocks(
+                            f"request rid={req.rid} outgrew the pool at "
+                            f"{len(req.generated)} generated tokens; "
+                            f"evicted with truncated output")
+                    self._preempt(victims[-1])
 
     # ------------------------------------------------------------------ step
     def step(self, dt: float = 1.0):
-        """One engine iteration: admit from queue, one decode step for all
-        active slots, retire finished requests."""
+        """One engine iteration: admit from queue, one fused decode+sample
+        call for all active slots, retire finished requests. Exactly one
+        device→host sync (the sampled-token fetch) in steady state."""
         self.clock += dt
         self._admit()
+        finished = self._admit_finished
+        self._admit_finished = []
+        if self.cache_kind == "paged" and self.active:
+            # may preempt: must run BEFORE the step snapshots active slots
+            self._ensure_decode_room()
         if not self.active:
-            return
+            return finished or None
         B = self.max_batch
-        tokens = np.zeros((B, 1), np.int32)
-        lengths = np.asarray(jax.device_get(self.cache["length"]))
-        positions = np.zeros((B, 1), np.int32)
+        tokens = np.zeros((B,), np.int32)
+        active_mask = np.zeros((B,), bool)
         for slot, req in self.active.items():
-            tokens[slot, 0] = req.generated[-1]
-            positions[slot, 0] = lengths[slot]
-        logits, self.cache, _ = self._decode(
-            self.params, jnp.asarray(tokens), jnp.asarray(positions),
-            self.cache)
+            tokens[slot] = req.generated[-1]
+            active_mask[slot] = True
+        temps, topks, seeds, ctrs = self._sampling_arrays()
+        # static flags: all-greedy batches skip the sampler's top-k +
+        # Gumbel work inside the fused step entirely, and the batch-max
+        # top_k bounds the threshold search to lax.top_k instead of a
+        # full-vocab sort (a handful of compiled variants at most)
+        stoch = bool((temps > 0).any())
+        max_top_k = int(topks.max())
+
+        if self.cache_kind == "paged":
+            st = self.pstate
+            pre_lengths = st.lengths.copy()
+            bs = st.block_size
+            # power-of-2 bucket of the widest active block table: decode
+            # cost tracks the true max context, with O(log) recompiles.
+            blocks_held = (st.block_tables >= 0).sum(axis=1)
+            need = int(blocks_held[active_mask].max()) if \
+                active_mask.any() else 1
+            nb = min(_pow2_at_least(max(need, 1)),
+                     st.block_tables.shape[1])
+            tables = np.ascontiguousarray(st.block_tables[:, :nb])
+            toks_dev, st.k, st.v = _jitted_steps()[1](
+                self.params, st.k, st.v, tables,
+                st.lengths.astype(np.int32), active_mask, tokens,
+                temps, topks, seeds, ctrs, cfg=self.cfg,
+                window=self.window, impl=self._paged_impl,
+                interp=self._interpret, stochastic=stoch,
+                max_top_k=max_top_k)
+            toks = jax.device_get(toks_dev)     # the ONE host sync
+            st.lengths[active_mask] += 1
+        else:
+            pre_lengths = self._host_lengths.copy()
+            positions = pre_lengths[:, None].astype(np.int32)
+            toks_dev, self.cache = _jitted_steps()[0](
+                self.params, self.cache, tokens[:, None],
+                positions, temps, topks, seeds, ctrs,
+                cfg=self.cfg, window=self.window, stochastic=stoch,
+                max_top_k=max_top_k)
+            toks = jax.device_get(toks_dev)     # the ONE host sync
+            self._host_lengths[active_mask] += 1
         self._step_count += 1
-        finished = []
+
         for slot, req in list(self.active.items()):
-            tok = self._sample(req, logits[slot])
+            tok = int(toks[slot])
             req.generated.append(tok)
             hit_eos = req.eos_id is not None and tok == req.eos_id
             full = len(req.generated) >= req.max_new_tokens
-            over = int(positions[slot, 0]) + 2 >= self.logical_max
+            over = int(pre_lengths[slot]) + 2 >= self.logical_max
             if hit_eos or full or over:
                 req.finish_time = self.clock
                 finished.append(req)
-                self.cache = KV.evict_request(self.cache, slot)
-                del self.active[slot]
+                self._retire(slot)
         return finished
+
+    def _retire(self, slot: int):
+        del self.active[slot]
+        self._admit_order.remove(slot)
+        if self.cache_kind == "paged":
+            PK.free_slot(self.pstate, slot)
+        else:
+            self._host_lengths[slot] = 0
+            self.cache = KV.evict_request(self.cache, slot)
 
     def run_until_done(self, max_steps: int = 10_000):
         out = []

@@ -1,0 +1,39 @@
+"""Host-sync instrumentation for the serving hot loop.
+
+``count_host_syncs()`` patches ``jax.device_get`` — the one primitive the
+engines use for every device→host read — and counts calls. The engines
+deliberately never use ``int(arr)`` / ``np.asarray(arr)`` on device arrays
+in their steady-state step, so the counter is an exact census of blocking
+syncs per ``Engine.step`` (the quantity the paged-engine acceptance bound
+"≤ 1 host sync per step" is asserted against in tests and reported by
+benchmarks/paged_engine_bench.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass
+class SyncCounter:
+    n: int = 0
+
+
+@contextlib.contextmanager
+def count_host_syncs():
+    """Context manager yielding a SyncCounter; every ``jax.device_get``
+    inside the block increments it."""
+    counter = SyncCounter()
+    orig = jax.device_get
+
+    def counted(x):
+        counter.n += 1
+        return orig(x)
+
+    jax.device_get = counted
+    try:
+        yield counter
+    finally:
+        jax.device_get = orig

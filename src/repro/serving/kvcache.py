@@ -1,10 +1,18 @@
-"""KV-cache utilities: capacity planning, byte accounting, slot updates.
+"""DENSE KV-cache utilities: capacity planning, byte accounting, slot
+updates for the Engine's dense fallback path.
 
 The cache pytrees themselves come from ``models.transformer.init_cache``;
 this module adds the serving-level bookkeeping: how big a cache is (the
 quantity CoCoServe's migration/scale-down reasons about), ring-buffer
 capacity for sliding-window archs, and per-slot insertion of a freshly
 prefilled request into a batched cache (continuous batching).
+
+The PRIMARY decode path is the paged block pool (serving/paged_kv.py +
+``Engine(cache_kind="paged")``); ``insert_request``/``evict_request``
+below only serve the dense ``[B, max_len]`` cache that sliding-window,
+MLA, SSM, hybrid and audio families still decode against. The byte
+accounting (``kv_bytes_per_token``, ``state_bytes``) is layout-agnostic
+and used by both paths.
 """
 from __future__ import annotations
 

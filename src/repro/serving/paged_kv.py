@@ -1,16 +1,26 @@
-"""Paged KV cache — block-table memory management (the vLLM mechanism the
-paper benchmarks against, §2.1/§6).
+"""Paged KV cache — the block-table pool behind the Engine's PRIMARY
+decode path (serving/engine.py with ``cache_kind="paged"``).
 
 Layout: a global pool of fixed-size blocks per layer,
 ``k/v: [L, n_blocks, block_size, KV, hd]``, plus a per-request block table
 ``[B, max_blocks]`` of pool indices (-1 = unallocated). Allocation is
-on-demand per ``block_size`` tokens, so memory scales with *actual* tokens
-(the paged-KV property that prevents the HFT static-reservation OOMs), and
-freeing a request returns whole blocks to the pool — fragmentation is
-bounded by ``block_size - 1`` tokens per request.
+on-demand per ``block_size`` tokens, so memory — and decode-step HBM
+traffic — scales with *actual* tokens (the paged-KV property that prevents
+the HFT static-reservation OOMs, and the substrate CoCoServe's module
+replication moves around: KV blocks, not dense slabs). Freeing a request
+returns whole blocks to the pool; fragmentation is bounded by
+``block_size - 1`` tokens per request.
 
-The gather/scatter forms below are the pure-jnp oracle for the paged
-decode-attention Pallas kernel (kernels/paged_decode.py).
+Division of labour with the engine:
+
+* ``allocate`` / ``free_slot`` run on the HOST free list (no device work);
+* ``write_tokens`` scatters a freshly prefilled request's K/V into the
+  pool (one functional scatter per request, issued at admission);
+* the per-step decode read is ``models.transformer.forward_paged`` — a
+  gather over the block table inside the jitted step, or the Pallas kernel
+  in kernels/paged_decode.py;
+* ``paged_attention_ref`` below is the vectorized pure-jnp oracle both
+  are tested against.
 """
 from __future__ import annotations
 
@@ -70,10 +80,18 @@ class OutOfBlocks(RuntimeError):
 
 
 def allocate(state: PagedState, slot: int, n_tokens: int):
-    """Ensure ``slot`` has blocks for lengths[slot] + n_tokens tokens."""
+    """Ensure ``slot`` has blocks for lengths[slot] + n_tokens tokens.
+
+    Raises OutOfBlocks — WITHOUT mutating any state — when the pool has
+    too few free blocks or the slot's block-table row is full (the
+    request's context exceeds ``max_len``)."""
     need_total = int(state.lengths[slot]) + n_tokens
     have = int((state.block_tables[slot] >= 0).sum())
     need_blocks = -(-need_total // state.block_size) - have
+    if have + need_blocks > state.block_tables.shape[1]:
+        raise OutOfBlocks(
+            f"slot {slot} block table full: needs {have + need_blocks} "
+            f"entries, table holds {state.block_tables.shape[1]}")
     if need_blocks > len(state.free):
         raise OutOfBlocks(
             f"need {need_blocks} blocks, {len(state.free)} free")
@@ -90,24 +108,37 @@ def free_slot(state: PagedState, slot: int):
 
 
 def write_tokens(state: PagedState, slot: int, k_new, v_new):
-    """Append k/v for S new tokens of one request.
+    """Append k/v for S new tokens of one request (k_new/v_new:
+    [L, S, KV, hd]). Requires allocate() first."""
+    return write_tokens_batch(state, [slot], k_new[:, None], v_new[:, None])
 
-    k_new/v_new: [L, S, KV, hd]. Requires allocate() first. Returns the
-    updated (functional) device arrays stored back into ``state``.
+
+def write_tokens_batch(state: PagedState, slots, k_new, v_new):
+    """Append k/v for S new tokens of G requests in ONE pool scatter.
+
+    k_new/v_new: [L, G, S, KV, hd] (same S per request — the engine's
+    same-length prefill groups). A functional ``.at[].set`` copies the
+    whole pool, so batching a G-request admission wave into one scatter
+    per pool costs 2 copies instead of 2·G. Requires allocate() first.
+    Returns the updated (functional) device arrays stored back into
+    ``state``.
     """
-    S = k_new.shape[1]
-    start = int(state.lengths[slot])
+    L, G, S = k_new.shape[:3]
     bs = state.block_size
-    # target (block, offset) per token
-    pos = np.arange(start, start + S)
-    blocks = state.block_tables[slot, pos // bs]
-    offs = pos % bs
-    bidx = jnp.asarray(blocks, jnp.int32)
-    oidx = jnp.asarray(offs, jnp.int32)
+    blocks, offs = [], []
+    for slot in slots:
+        start = int(state.lengths[slot])
+        pos = np.arange(start, start + S)
+        blocks.append(state.block_tables[slot, pos // bs])
+        offs.append(pos % bs)
+        state.lengths[slot] = start + S
+    bidx = jnp.asarray(np.concatenate(blocks), jnp.int32)   # [G*S]
+    oidx = jnp.asarray(np.concatenate(offs), jnp.int32)
+    kf = k_new.reshape(L, G * S, *k_new.shape[3:])
+    vf = v_new.reshape(L, G * S, *v_new.shape[3:])
     # scatter: k[:, blocks[t], offs[t]] = k_new[:, t]
-    state.k = state.k.at[:, bidx, oidx].set(k_new)
-    state.v = state.v.at[:, bidx, oidx].set(v_new)
-    state.lengths[slot] = start + S
+    state.k = state.k.at[:, bidx, oidx].set(kf.astype(state.k.dtype))
+    state.v = state.v.at[:, bidx, oidx].set(vf.astype(state.v.dtype))
     return state
 
 
@@ -127,30 +158,30 @@ def gather_request(state: PagedState, slot: int, max_len: int):
 
 
 def paged_attention_ref(q, state: PagedState, slots, *, layer: int):
-    """Pure-jnp paged decode attention for a batch of slots.
+    """Pure-jnp paged decode attention for a batch of slots, vectorized
+    over the batch (one batched gather + masked softmax — no per-slot
+    Python loop, so oracle checks don't dominate test time).
 
-    q: [B, H, hd]; returns [B, H, hd]. Oracle for kernels/paged_decode.py.
+    q: [B, H, hd]; returns [B, H, hd]. Oracle for kernels/paged_decode.py
+    and for models.transformer.forward_paged's gather path.
     """
     import math
     B, H, hd = q.shape
     KV = state.k.shape[3]
     bs = state.block_size
     rep = H // KV
-    outs = []
-    for b, slot in enumerate(slots):
-        length = int(state.lengths[slot])
-        n_blk = max(1, -(-length // bs))
-        tbl = jnp.asarray(
-            np.where(state.block_tables[slot, :n_blk] >= 0,
-                     state.block_tables[slot, :n_blk], 0), jnp.int32)
-        k = state.k[layer, tbl].reshape(n_blk * bs, KV, hd)
-        v = state.v[layer, tbl].reshape(n_blk * bs, KV, hd)
-        kh = jnp.repeat(k, rep, axis=1)
-        vh = jnp.repeat(v, rep, axis=1)
-        s = jnp.einsum("hd,shd->hs", q[b].astype(jnp.float32),
-                       kh.astype(jnp.float32)) / math.sqrt(hd)
-        mask = jnp.arange(n_blk * bs) < length
-        s = jnp.where(mask[None, :], s, -jnp.inf)
-        w = jax.nn.softmax(s, axis=-1)
-        outs.append(jnp.einsum("hs,shd->hd", w, vh.astype(jnp.float32)))
-    return jnp.stack(outs).astype(q.dtype)
+    slots = list(slots)
+    lens = state.lengths[slots]                      # [B] host
+    n_blk = max(1, -(-int(lens.max()) // bs))
+    tbl = state.block_tables[slots, :n_blk]
+    tbl = jnp.asarray(np.where(tbl >= 0, tbl, 0), jnp.int32)
+    k = state.k[layer][tbl].reshape(B, n_blk * bs, KV, hd)
+    v = state.v[layer][tbl].reshape(B, n_blk * bs, KV, hd)
+    kh = jnp.repeat(k, rep, axis=2).astype(jnp.float32)  # [B, S, H, hd]
+    vh = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kh) / math.sqrt(hd)
+    mask = jnp.arange(n_blk * bs)[None, :] < jnp.asarray(lens)[:, None]
+    s = jnp.where(mask[:, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, vh).astype(q.dtype)

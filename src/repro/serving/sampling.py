@@ -1,0 +1,70 @@
+"""Fused batched token sampling — entirely on device, jit-friendly.
+
+One call samples next tokens for every batch slot at once: greedy rows
+(``temperature <= 0``) take an argmax, stochastic rows use the Gumbel-max
+trick (argmax of ``logits/T + Gumbel noise`` equals a categorical draw) so
+no row ever needs a host round-trip or a per-slot ``jax.random.choice``.
+
+Determinism is counter-based: each row's PRNG key is
+``fold_in(fold_in(PRNGKey(0), seed), counter)`` where ``counter`` is the
+number of tokens the request has already generated. Replaying a request —
+including after a preemption/resume cycle in the paged engine — reproduces
+the exact same continuation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# This sampler is pure argmax (Gumbel-max, no softmax), so masks use real
+# -inf: a finite large-negative would stop masking once temperature scales
+# it below the Gumbel noise spread, letting padding/top-k-masked ids win.
+NEG_INF = float("-inf")
+
+
+def sample_tokens(logits, temps, top_ks, seeds, counters, vocab_size: int,
+                  stochastic: bool = True, max_top_k: int = -1):
+    """Sample one token per row.
+
+    logits: [B, Vpad] float; temps: [B] float32 (<=0 means greedy);
+    top_ks: [B] int32 (0 means full distribution); seeds/counters: [B]
+    uint32/int32 per-row RNG state. Returns [B] int32 token ids < vocab_size.
+
+    ``stochastic`` and ``max_top_k`` are static jit args in the engine's
+    fused step: ``stochastic=False`` skips the top-k + Gumbel work
+    entirely when the whole batch is greedy (the common case on the
+    benchmark/parity workloads), and ``max_top_k`` (the host-known batch
+    max of ``top_ks``; 0 = no row masks, -1 = unknown) bounds the per-row
+    k-th-largest threshold to an O(V·k) ``lax.top_k`` instead of a
+    full-vocab sort.
+    """
+    B, V = logits.shape
+    lg = logits.astype(jnp.float32)
+    if vocab_size < V:  # mask vocab padding rows
+        lg = jnp.where(jnp.arange(V) < vocab_size, lg, NEG_INF)
+    greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    if not stochastic:
+        return greedy
+
+    # per-row top-k mask via the k-th largest logit (k=0 -> no mask)
+    if max_top_k == 0:
+        masked = lg
+    else:
+        if 0 < max_top_k < V:
+            sorted_desc, _ = jax.lax.top_k(lg, max_top_k)  # [B, max_top_k]
+        else:
+            sorted_desc = -jnp.sort(-lg, axis=-1)
+        kth_idx = jnp.clip(top_ks.astype(jnp.int32) - 1, 0,
+                           sorted_desc.shape[-1] - 1)
+        kth = jnp.take_along_axis(sorted_desc, kth_idx[:, None], axis=-1)
+        masked = jnp.where((top_ks[:, None] > 0) & (lg < kth), NEG_INF, lg)
+
+    keys = jax.vmap(
+        lambda s, c: jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(0), s), c)
+    )(seeds.astype(jnp.uint32), counters.astype(jnp.uint32))
+    gumbel = jax.vmap(lambda k: jax.random.gumbel(k, (V,), jnp.float32))(keys)
+    temp = jnp.maximum(temps.astype(jnp.float32), 1e-6)[:, None]
+    sampled = jnp.argmax(masked / temp + gumbel, axis=-1).astype(jnp.int32)
+
+    return jnp.where(temps > 0.0, sampled, greedy)

@@ -1,8 +1,22 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests see 1 host device;
 multi-device behaviour is exercised via subprocesses (test_distributed.py)
-and the dry-run (launch/dryrun.py sets its own flag)."""
+and the dry-run (launch/dryrun.py sets its own flag).
+
+If the real ``hypothesis`` package is absent (the CI container does not
+bake it in), a deterministic stub is installed so the property-test modules
+still collect and run — see tests/_hypothesis_stub.py.
+"""
+import sys
+
 import jax
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, __file__.rsplit("/", 1)[0])
+    import _hypothesis_stub
+    _hypothesis_stub.install(sys.modules)
 
 
 @pytest.fixture(scope="session")

@@ -77,6 +77,160 @@ def test_paged_gather_matches_written():
     np.testing.assert_allclose(np.asarray(v), np.asarray(k_new * 2), rtol=1e-6)
 
 
+def _raw_state(lens, *, n_blocks=16, bs=8, KV=2, hd=64, dtype=jnp.float32):
+    """Pool built without a config — lets tests pick H != KV freely."""
+    state = PK.PagedState(
+        k=jnp.zeros((1, n_blocks, bs, KV, hd), dtype),
+        v=jnp.zeros((1, n_blocks, bs, KV, hd), dtype),
+        block_tables=np.full((len(lens), -(-max(lens) // bs) + 1), -1,
+                             np.int32),
+        lengths=np.zeros((len(lens),), np.int32),
+        free=list(range(n_blocks)), block_size=bs)
+    rng = np.random.default_rng(7)
+    for slot, n in enumerate(lens):
+        PK.allocate(state, slot, n)
+        state = PK.write_tokens(
+            state, slot,
+            jnp.asarray(rng.normal(size=(1, n, KV, hd)), dtype),
+            jnp.asarray(rng.normal(size=(1, n, KV, hd)), dtype))
+    return state
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5),
+                                       (jnp.bfloat16, 2e-2)])
+def test_paged_kernel_gqa_matches_ref(dtype, tol):
+    """H > KV: query heads grouped by KV head inside the kernel."""
+    H, KV, hd = 8, 2, 64
+    state = _raw_state([20, 7, 33], KV=KV, hd=hd, dtype=dtype)
+    q = jax.random.normal(KEY, (3, H, hd), jnp.float32)
+    ref = PK.paged_attention_ref(q.astype(dtype), state, [0, 1, 2], layer=0)
+    out = paged_decode_attention(
+        q.astype(dtype), state.k[0], state.v[0],
+        jnp.asarray(state.block_tables), jnp.asarray(state.lengths),
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_paged_kernel_ragged_block_boundaries():
+    """Lengths at, just past, and far from block boundaries — plus an
+    inactive (length 0) slot, which must yield exactly zeros."""
+    bs = 8
+    lens = [bs, 2 * bs, 1, 2 * bs + 1]
+    state = _raw_state(lens, bs=bs, KV=4, hd=64)
+    q = jax.random.normal(KEY, (4, 4, 64), jnp.float32)
+    ref = PK.paged_attention_ref(q, state, [0, 1, 2, 3], layer=0)
+    lengths = np.array(lens, np.int32)
+    out = paged_decode_attention(
+        q, state.k[0], state.v[0], jnp.asarray(state.block_tables),
+        jnp.asarray(lengths), interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+    lengths[1] = 0  # deactivate a slot
+    out0 = paged_decode_attention(
+        q, state.k[0], state.v[0], jnp.asarray(state.block_tables),
+        jnp.asarray(lengths), interpret=True)
+    assert (np.asarray(out0[1]) == 0).all()
+
+
+def _run_engine(cfg, params, prompts, *, max_new=6, **kw):
+    e = Engine(cfg, params, max_batch=2, max_len=64, **kw)
+    for i, p in enumerate(prompts):
+        e.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    done = e.run_until_done()
+    return {r.rid: r.generated for r in done}
+
+
+def test_paged_engine_matches_dense_greedy():
+    """Primary-path parity: the paged engine (batched same-length prefill,
+    block-pool decode, on-device sampling) reproduces the dense engine's
+    greedy outputs token for token — including ragged prompt lengths that
+    cross block boundaries mid-generation."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (8, 8, 5, 11)]  # two same-length -> batched prefill
+    dense = _run_engine(cfg, params, prompts, cache_kind="dense")
+    paged = _run_engine(cfg, params, prompts, cache_kind="paged",
+                        block_size=8)
+    assert paged == dense
+    # the Pallas kernel path (interpret mode) agrees too
+    kern = _run_engine(cfg, params, prompts[:2], max_new=3,
+                       cache_kind="paged", block_size=8,
+                       paged_attn_impl="kernel", interpret=True)
+    assert kern == {k: v[:3] for k, v in dense.items() if k < 2}
+
+
+def test_paged_engine_out_of_blocks_backpressure():
+    """A pool too small for all requests at once: admission defers
+    (requests wait in queue), decode pressure preempts — and every
+    request still finishes with exactly the unconstrained outputs."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(2, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (8, 8, 5, 11)]
+    full = _run_engine(cfg, params, prompts, max_new=12,
+                       cache_kind="paged", block_size=8)
+    e = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
+               block_size=8, n_blocks=4)
+    for i, p in enumerate(prompts):
+        e.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+    waited = False
+    done = []
+    for _ in range(400):
+        if e.queue and e.active:
+            waited = True
+        done += e.step() or []
+        if not e.queue and not e.active:
+            break
+    assert waited, "pool was never under pressure"
+    assert len(done) == len(prompts)
+    assert {r.rid: r.generated for r in done} == full
+    # a request larger than the whole pool is a hard error, not a hang —
+    # and it must not take the rest of the admission wave down with it
+    e2 = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
+                block_size=8, n_blocks=2)
+    e2.submit(Request(rid=0, prompt=np.arange(2, 40, dtype=np.int32),
+                      max_new_tokens=4))
+    e2.submit(Request(rid=1, prompt=np.arange(2, 8, dtype=np.int32),
+                      max_new_tokens=2))
+    with pytest.raises(PK.OutOfBlocks):
+        e2.run_until_done()
+    done2 = e2.run_until_done()  # wave-mate survived the rejection
+    assert [r.rid for r in done2] == [1]
+    assert e2.pstate.blocks_in_use() == 0  # nothing leaked
+    # a lone request whose GENERATION outgrows the pool is evicted with
+    # truncated output (loud, but the engine stays serviceable)
+    e3 = Engine(cfg, params, max_batch=1, max_len=64, cache_kind="paged",
+                block_size=8, n_blocks=2)
+    big = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                  max_new_tokens=30)
+    e3.submit(big)
+    with pytest.raises(PK.OutOfBlocks):
+        e3.run_until_done()
+    assert big.done and 0 < len(big.generated) < 30
+    assert not e3.active and e3.pstate.blocks_in_use() == 0
+    e3.submit(Request(rid=1, prompt=np.arange(2, 8, dtype=np.int32),
+                      max_new_tokens=2))
+    assert [r.rid for r in e3.run_until_done()] == [1]  # still serviceable
+    # prompt == max_len would overflow the block-table row: clean
+    # rejection (no IndexError, no leaked block, engine still serviceable)
+    e4 = Engine(cfg, params, max_batch=2, max_len=32, cache_kind="paged",
+                block_size=8)
+    e4.submit(Request(rid=0, prompt=np.full(32, 3, np.int32),
+                      max_new_tokens=4))
+    e4.submit(Request(rid=1, prompt=np.full(31, 3, np.int32),  # just fits
+                      max_new_tokens=4))
+    with pytest.raises(PK.OutOfBlocks):
+        e4.run_until_done()
+    done4 = e4.run_until_done()
+    assert [r.rid for r in done4] == [1]
+    assert e4.pstate.blocks_in_use() == 0
+
+
 # ---------------------------------------------------- chunked prefill + sample
 @pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-780m"])
 def test_chunked_prefill_equivalence(arch):

@@ -58,6 +58,24 @@ def test_engine_interleaved_batching_isolated():
         assert done[i] == solo[i], f"request {i} perturbed by batching"
 
 
+@pytest.mark.parametrize("cache_kind", ["dense", "paged"])
+def test_first_token_can_finish_request(cache_kind):
+    """max_new_tokens=1 is satisfied by the admission-sampled token: the
+    request retires without ever occupying a decode slot."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    kw = {"block_size": 8} if cache_kind == "paged" else {}
+    eng = Engine(cfg, params, max_batch=2, max_len=64,
+                 cache_kind=cache_kind, **kw)
+    eng.submit(Request(rid=0, prompt=np.arange(2, 10).astype(np.int32),
+                       max_new_tokens=1))
+    done = eng.run_until_done()
+    assert len(done) == 1 and len(done[0].generated) == 1
+    assert not eng.active
+    if cache_kind == "paged":
+        assert eng.pstate.blocks_in_use() == 0
+
+
 def test_kv_bytes_per_token():
     llama = get_config("llama2-13b")
     per_tok = KV.kv_bytes_per_token(llama)
