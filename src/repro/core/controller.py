@@ -3,8 +3,14 @@
 Every tick it reads the Monitor and
 * triggers **scale-up** (Alg. 1) when the resource vacancy rate exceeds T_up,
 * triggers **scale-down** (Alg. 2) when the SLO violation rate exceeds
-  T_down (or an OOM was observed),
+  T_down (or an OOM / pool-pressure preemption was observed),
 then pushes the updated plan to the Scheduler via ``on_plan_change``.
+
+Live-telemetry interface: ``observe()`` feeds a snapshot straight into the
+monitor, and after a scale-down tick ``last_scale_down`` holds the full
+:class:`ScaleDownResult` — including structured ``migrations`` tuples — so
+a live executor (serving/orchestrator.py) can turn kv_cache migrations
+into actual block transfers between engines instead of parsing log lines.
 """
 from __future__ import annotations
 
@@ -12,7 +18,7 @@ import dataclasses
 from typing import Callable, List, Optional
 
 from repro.core.cluster import Cluster
-from repro.core.monitor import Monitor
+from repro.core.monitor import MetricsSnapshot, Monitor
 from repro.core.plan import PlacementPlan
 from repro.core import scale_up as SU
 from repro.core import scale_down as SD
@@ -28,6 +34,10 @@ class ControllerConfig:
     cooldown_ticks: int = 2
     dop: int = 2                  # max replication degree (paper default)
     min_vacancy: float = 0.1      # eligibility floor for replica hosts
+    # component -> bytes for scale-down destination fitting; None keeps
+    # scale_down's Table-1 defaults. The live orchestrator sets these
+    # from REAL footprints (its pool bytes / measured replica size).
+    module_bytes: Optional[dict] = None
 
 
 class Controller:
@@ -47,6 +57,12 @@ class Controller:
         self.commit_replica = commit_replica
         self._cooldown = 0
         self.log: List[str] = []
+        self.last_scale_down: Optional[SD.ScaleDownResult] = None
+
+    def observe(self, snap: MetricsSnapshot):
+        """Live-telemetry entry point: record one snapshot (built by the
+        orchestrator from real engine instrumentation) into the monitor."""
+        self.monitor.record(snap)
 
     def tick(self) -> Optional[str]:
         """One control period. Returns the action taken (or None)."""
@@ -58,18 +74,25 @@ class Controller:
             return None
         action = None
         violation = (self.monitor.slo_violation_rate() > self.cfg.t_down
-                     or snap.oom_events > 0)
+                     or snap.oom_events > 0
+                     or self.monitor.pool_pressure())
         if violation:
             hot = self.monitor.hottest_device() or self.plan.home_device
             res = SD.scale_down(
                 self.plan, self.cluster, src_device=hot,
                 is_violating=self.is_violating,
                 batch_size=self.batch_size, delta_bs=self.cfg.delta_bs,
+                module_bytes=self.cfg.module_bytes,
                 mem_bound=self.monitor.is_memory_bound(hot))
             self.plan = res.plan
             self.batch_size = res.batch_size
+            self.last_scale_down = res
             action = f"scale-down[{'+'.join(res.actions) or 'noop'}]"
-        elif self.monitor.vacancy_rate() > self.cfg.t_up:
+        elif (self.monitor.vacancy_rate() > self.cfg.t_up
+              and self.monitor.block_vacancy_rate() > self.cfg.min_vacancy):
+            # live engines gate scale-up on POOL vacancy too: a layer
+            # replica is pointless on instances whose KV pools are full
+            # (simulator snapshots carry no block telemetry -> rate 1.0)
             before = list(self.plan.p)
             self.plan = SU.scale_up(
                 self.plan, self.cluster, gamma=self.cfg.gamma,

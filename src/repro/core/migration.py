@@ -5,6 +5,12 @@ On SPMD hardware "move module M from device A to device B" becomes
 The cost model (bytes moved / link bandwidth + per-op latency) reproduces
 the paper's Table 2 against our ICI constants; ``migrate_by_path`` performs
 the actual re-placement for any params/cache subtree matched by regex.
+
+Beyond dense slabs, the same cost model covers PAGED POOL SLICES — the
+unit CoCoServe's live scale-down actually moves: ``migrate_blocks`` ships
+one request's KV blocks between two engines' block pools (the wire format
+of serving/paged_kv.export_blocks), and ``migrate_paged_pool`` re-places a
+whole pool (the memory-heavy module of §3.3) under a new sharding.
 """
 from __future__ import annotations
 
@@ -73,3 +79,94 @@ def migrate_by_path(tree, path_regex: str, new_spec, mesh: Mesh, *,
 def migrate_kv_cache(cache, new_spec, mesh: Mesh, **kw):
     """KV-cache migration (the paper's memory-intensive module, §3.3)."""
     return migrate_by_path(cache, r"layers/", new_spec, mesh, **kw)
+
+
+def migrate_paged_pool(state, new_spec, mesh: Mesh, **kw):
+    """Re-place a whole paged block pool (serving/paged_kv.PagedState) —
+    the pool-slice counterpart of ``migrate_kv_cache`` for engines on the
+    primary decode path. Mutates ``state`` in place; returns
+    (state, MigrationCost)."""
+    handle = {"k": state.k, "v": state.v}
+    new, cost = migrate_by_path(handle, r"^(k|v)$", new_spec, mesh, **kw)
+    state.k, state.v = new["k"], new["v"]
+    return state, cost
+
+
+def probe_block_migration(cfg, n_tokens: int, *, block_size: int = 8,
+                          repeats: int = 5, dtype="float32"):
+    """Measure one request-sized block migration between two fresh pools:
+    returns (median seconds, bytes moved). The micro-probe behind
+    ``fit_migration_model``."""
+    import numpy as np
+    from repro.serving import paged_kv as PK
+
+    times, nbytes = [], 0
+    L, KVh, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    n_blocks = 2 * (-(-n_tokens // block_size)) + 2
+    for _ in range(repeats):
+        src = PK.init_paged(cfg, 2, n_blocks, block_size=block_size,
+                            dtype=dtype, max_len=n_tokens + block_size)
+        dst = PK.init_paged(cfg, 2, n_blocks, block_size=block_size,
+                            dtype=dtype, max_len=n_tokens + block_size)
+        kv = np.zeros((L, n_tokens, KVh, hd), np.float32)
+        PK.allocate(src, 0, n_tokens)
+        PK.write_tokens(src, 0, kv, kv)
+        jax.block_until_ready((src.k, dst.k))
+        _, cost = migrate_blocks(src, dst, 0, 0, measure=True)
+        times.append(cost.measured_seconds)
+        nbytes = cost.bytes_moved
+    times.sort()
+    return times[len(times) // 2], nbytes
+
+
+def fit_migration_model(cfg, *, block_size: int = 8, small_tokens: int = 16,
+                        large_tokens: int = 512, repeats: int = 5):
+    """Calibrate ``estimate_cost``'s two constants — fixed overhead and
+    effective bandwidth — from two probe block-migrations on THIS host,
+    exactly how the paper fits Table 2 to its testbed. Returns a dict
+    with the fit plus the raw probes; feed the fit back into
+    ``estimate_cost(bytes, bandwidth, fixed_overhead_s=overhead)`` and
+    further measurements should land within 2x (asserted in tests and
+    benchmarks/module_scaling_bench.py)."""
+    t_small, b_small = probe_block_migration(
+        cfg, small_tokens, block_size=block_size, repeats=repeats)
+    t_large, b_large = probe_block_migration(
+        cfg, large_tokens, block_size=block_size, repeats=repeats)
+    if t_large > t_small and b_large > b_small:
+        bw = (b_large - b_small) / (t_large - t_small)
+    else:  # timer noise floor: overhead dominates, bandwidth unresolvable
+        bw = 1e12
+    overhead = max(t_small - b_small / bw, 1e-6)
+    return {"fixed_overhead_s": overhead, "bandwidth_Bps": bw,
+            "probe_small": {"bytes": b_small, "seconds": t_small},
+            "probe_large": {"bytes": b_large, "seconds": t_large}}
+
+
+def migrate_blocks(src_state, dst_state, src_slot: int, dst_slot: int, *,
+                   link_bandwidth: float = 50e9,
+                   fixed_overhead_s: float = 0.24,
+                   measure: bool = False):
+    """Block-granular migration of ONE live request between two engines'
+    pools (CoCoServe scale-down / rebalance): export the request's blocks
+    from ``src_state`` (serving/paged_kv.export_blocks wire format), free
+    them at the source, and rebind them into ``dst_state`` at the same
+    block-table columns — absolute positions, and therefore RoPE, window
+    masking and counter-based sampling replay, are preserved.
+
+    Returns (payload, MigrationCost). Raises paged_kv.OutOfBlocks without
+    touching the source when the destination can't hold the payload.
+    """
+    from repro.serving import paged_kv as PK
+
+    t0 = time.perf_counter()
+    payload = PK.export_blocks(src_state, src_slot)
+    PK.import_blocks(dst_state, dst_slot, payload)   # raises before mutation
+    PK.free_slot(src_state, src_slot)
+    if measure:
+        jax.block_until_ready((dst_state.k, dst_state.v))
+    dt = time.perf_counter() - t0 if measure else None
+    cost = MigrationCost(payload["nbytes"],
+                         estimate_cost(payload["nbytes"], link_bandwidth,
+                                       fixed_overhead_s),
+                         dt)
+    return payload, cost

@@ -1,6 +1,9 @@
 """Metrics Monitor (§5): rolling-window metric collection feeding the
-Controller. In the paper this reads NVML + engine timers; here it is fed by
-the serving simulator and/or the real Engine (tokens/s, latency, memory)."""
+Controller. In the paper this reads NVML + engine timers; here it is fed
+by the serving simulator and/or — through the live-telemetry interface —
+the real paged Engine fleet (serving/orchestrator.py builds snapshots out
+of serving/instrument.EngineTelemetry: block-pool vacancy, queue depth,
+per-step wall latency, SLO violations)."""
 from __future__ import annotations
 
 import dataclasses
@@ -20,6 +23,10 @@ class MetricsSnapshot:
     queue_len: int = 0
     device_util: Optional[List[float]] = None       # 0..1 compute per device
     device_mem_frac: Optional[List[float]] = None   # 0..1 memory per device
+    # --- live paged-engine telemetry (None when fed by the simulator) ---
+    block_vacancy: Optional[List[float]] = None     # 0..1 free pool fraction
+    step_seconds: float = 0.0                       # mean wall s per step
+    preemptions: int = 0                            # pool-pressure evictions
 
 
 class Monitor:
@@ -55,6 +62,22 @@ class Monitor:
 
     def slo_violation_rate(self) -> float:
         return self.mean("slo_violation_rate")
+
+    def block_vacancy_rate(self) -> float:
+        """Mean free fraction of the engines' block pools — the MEMORY
+        vacancy signal of the live loop (what replication's KV blocks and
+        scale-down migrations compete for)."""
+        snap = self.latest
+        if snap is None or not snap.block_vacancy:
+            return 1.0
+        return sum(snap.block_vacancy) / len(snap.block_vacancy)
+
+    def pool_pressure(self) -> bool:
+        """OOM-analogue of the live loop: a preemption (a request evicted
+        back to the queue for pool room) is the paged engine's recoverable
+        out-of-memory event."""
+        snap = self.latest
+        return snap is not None and snap.preemptions > 0
 
     def hottest_device(self) -> Optional[int]:
         snap = self.latest

@@ -17,9 +17,10 @@ device-set changes lower to HLO with fewer resharding collectives
 """
 from __future__ import annotations
 
+import functools
 import math
 import re
-from typing import List, Sequence
+from typing import List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,13 +34,28 @@ COLLECTIVE_RE = re.compile(
 
 
 def replication_mesh(n_devices: int, devices=None) -> Mesh:
-    """Factorized mesh: axes ("r0","r1",...) each of size 2."""
+    """Factorized mesh: axes ("r0","r1",...) each of size 2. A single
+    device degenerates to one axis of size 1 (every degree quantizes to 1
+    and each constraint becomes a no-op P(None)) — the shape the live
+    engine uses on 1-device hosts so the hook path still compiles."""
+    import numpy as np
+    devs = (devices if devices is not None else jax.devices())[:n_devices]
+    if n_devices == 1:
+        return Mesh(np.array(devs).reshape((1,)), ("r0",))
     k = int(math.log2(n_devices))
     assert 2 ** k == n_devices, "replication mesh needs a power-of-2 devices"
-    devs = (devices if devices is not None else jax.devices())[:n_devices]
-    import numpy as np
     arr = np.array(devs).reshape((2,) * k)
     return Mesh(arr, tuple(f"r{i}" for i in range(k)))
+
+
+@functools.lru_cache(maxsize=1)
+def default_replication_mesh() -> Mesh:
+    """Replication mesh over the largest power-of-two prefix of the local
+    devices — what Engine.apply_plan shards the live decode step over."""
+    n = 1
+    while n * 2 <= jax.device_count():
+        n *= 2
+    return replication_mesh(n)
 
 
 def quantize_degrees(p: Sequence[int], n_devices: int) -> List[int]:
@@ -62,20 +78,33 @@ def batch_spec_for_degree(degree: int, mesh: Mesh) -> P:
     return P(axes)
 
 
+def layer_hook_from_degrees(degrees: Tuple[int, ...], mesh: Mesh, *,
+                            extra_dims: int = 2):
+    """hook(i, x) -> x constrained to layer i's batch sharding, from an
+    already-quantized degree tuple. The tuple is hashable, so the LIVE
+    engine passes it as a static jit argument — changing the plan recompiles
+    exactly the affected decode step, nothing else (the runtime face of
+    ``layer_hook_from_plan``; see serving/engine.Engine.apply_plan).
+
+    ``extra_dims``: trailing activation dims left unsharded ([B,S,d] -> 2).
+    """
+    def hook(i: int, x):
+        d = min(degrees[i], mesh.devices.size)
+        spec = batch_spec_for_degree(d, mesh)
+        full = P(*(tuple(spec) + (None,) * extra_dims))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, full))
+
+    return hook
+
+
 def layer_hook_from_plan(plan: PlacementPlan, mesh: Mesh, *,
                          extra_dims: int = 2):
     """Returns hook(i, x) -> x constrained to the layer's batch sharding.
 
     ``extra_dims``: trailing activation dims left unsharded ([B,S,d] -> 2).
     """
-    degrees = quantize_degrees(plan.p, mesh.devices.size)
-
-    def hook(i: int, x):
-        spec = batch_spec_for_degree(degrees[i], mesh)
-        full = P(*(tuple(spec) + (None,) * extra_dims))
-        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, full))
-
-    return hook
+    degrees = tuple(quantize_degrees(plan.p, mesh.devices.size))
+    return layer_hook_from_degrees(degrees, mesh, extra_dims=extra_dims)
 
 
 def count_collectives(hlo_text: str) -> dict:

@@ -26,6 +26,11 @@ class ScaleDownResult:
     batch_size: int
     actions: List[str]
     resolved: bool
+    # structured mirror of the Phase-1 entries in ``actions`` so live
+    # executors (serving/orchestrator.py) don't parse strings:
+    # (layer, component, src_device, dst_device)
+    migrations: List[Tuple[int, str, int, int]] = dataclasses.field(
+        default_factory=list)
 
 
 def filter_modules(plan: PlacementPlan, cfg_profile: dict, device_id: int,
@@ -89,6 +94,7 @@ def scale_down(plan: PlacementPlan, cluster: Cluster, *, src_device: int,
     the simulator). ``module_bytes`` maps component -> bytes for destination
     fitting (defaults to Table-1-ish fractions of a layer)."""
     actions: List[str] = []
+    migrations: List[Tuple[int, str, int, int]] = []
     cur = plan.copy()
     module_bytes = module_bytes or {
         "layer": 605e6, "attn": 200e6, "ffn": 405e6, "kv_cache": 1e9}
@@ -105,15 +111,16 @@ def scale_down(plan: PlacementPlan, cluster: Cluster, *, src_device: int,
         src = cluster.device(src_device)
         src.used_mem = max(0.0, src.used_mem - module_bytes.get(comp, 0.0))
         actions.append(f"migrate L{layer}.{comp} {src_device}->{dst.device_id}")
+        migrations.append((layer, comp, src_device, dst.device_id))
         if not is_violating(cur, batch_size):
-            return ScaleDownResult(cur, batch_size, actions, True)
+            return ScaleDownResult(cur, batch_size, actions, True, migrations)
 
     # --------------------------------------------- Phase 2: replica eviction
     for layer in sort_evictees(cur, src_device):
         cur.evict_replica(layer, src_device)
         actions.append(f"evict replica L{layer} on dev{src_device}")
         if not is_violating(cur, batch_size):
-            return ScaleDownResult(cur, batch_size, actions, True)
+            return ScaleDownResult(cur, batch_size, actions, True, migrations)
 
     # ----------------------------------------- Phase 3: performance reduction
     bs = batch_size
@@ -127,4 +134,5 @@ def scale_down(plan: PlacementPlan, cluster: Cluster, *, src_device: int,
             break
         if bs == 1:
             break
-    return ScaleDownResult(cur, bs, actions, not is_violating(cur, bs))
+    return ScaleDownResult(cur, bs, actions, not is_violating(cur, bs),
+                           migrations)

@@ -6,7 +6,10 @@ carries online-softmax state for the R = H/KV query heads that share each
 KV head (the same flash-decoding layout as kernels/decode_attention.py).
 The block table and per-request lengths arrive via scalar prefetch (SMEM)
 and drive the K/V BlockSpec index maps — each grid step DMAs exactly one
-pool block [block_size, D] for one KV head into VMEM.
+pool block [block_size, D] for one KV head into VMEM. The serving pool
+(serving/paged_kv.py) stores blocks KV-HEAD-MAJOR ([n_blocks, KV, bs, D]),
+so that tile is contiguous in HBM and the kernel consumes the pool
+natively — no whole-pool transpose per call.
 
 Early termination: the index map clamps the block coordinate to the last
 *valid* block of the request (ceil(length / block_size) - 1). Past that
@@ -71,23 +74,21 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
                            interpret: bool = False):
     """q: [B, H, D] with H a multiple of KV (GQA: query heads are grouped
     by their KV head inside the kernel, no caller-side repeat);
-    k/v_pool: [n_blocks, bs, KV, D]; block_tables: [B, max_blocks] int32
-    (entries < 0 treated as block 0 and masked by length); lengths: [B]
-    int32 (0 = inactive slot, output is zeros). Returns [B, H, D].
+    k/v_pool: [n_blocks, KV, bs, D] (the serving pool's native KV-head-
+    major layout — each (block, kv-head) tile [bs, D] is contiguous);
+    block_tables: [B, max_blocks] int32 (entries < 0 treated as block 0
+    and masked by length); lengths: [B] int32 (0 = inactive slot, output
+    is zeros). Returns [B, H, D].
     """
     B, H, D = q.shape
-    n_blocks, bs, KV, _ = k_pool.shape
+    n_blocks, KV, bs, _ = k_pool.shape
     assert H % KV == 0, f"H={H} must be a multiple of KV={KV}"
     rep = H // KV
     max_blocks = block_tables.shape[1]
     scale = 1.0 / math.sqrt(D)
     # group query heads by their kv head: [B*KV, R, D]
     qg = q.reshape(B, KV, rep, D).reshape(B * KV, rep, D)
-    # KV-head-major pool so each DMA'd block is a contiguous [bs, D] tile.
-    # (A production pool would store this layout natively; the transpose
-    # keeps the serving-side [n_blocks, bs, KV, D] layout unchanged.)
-    kp = k_pool.transpose(0, 2, 1, 3)                 # [n_blocks, KV, bs, D]
-    vp = v_pool.transpose(0, 2, 1, 3)
+    kp, vp = k_pool, v_pool                           # native layout
     tbl = jnp.maximum(block_tables, 0).astype(jnp.int32)
     lengths = lengths.astype(jnp.int32)
 

@@ -1,12 +1,15 @@
-"""Serving driver: continuous-batching engine + CoCoServe controller loop.
+"""Serving driver: the live CoCoServe loop — Orchestrator over N paged
+engines, real telemetry feeding Monitor -> Controller, decisions executed
+on the running instances (scale-up replication degrees, scale-down
+KV-block migration).
 
-Runs REAL JAX execution with a reduced config (CPU-feasible), demonstrating
-the full closed loop: Monitor -> Controller -> scale-up (layer replication)
-/ scale-down (module reduction) -> Scheduler. On a real pod the same engine
-runs the full config under make_production_mesh().
+Runs REAL JAX execution with a reduced config (CPU-feasible); on a real
+pod the same orchestrator runs the full config under
+make_production_mesh(). Families without paged support (SSM/MLA/audio)
+fall back to a single dense engine with the same submission loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --requests 24 --rps 4
+        --requests 24 --rps 4 --instances 2
 """
 from __future__ import annotations
 
@@ -17,10 +20,6 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.cluster import Cluster, layer_weight_bytes
-from repro.core.controller import Controller, ControllerConfig
-from repro.core.monitor import Monitor, MetricsSnapshot
-from repro.core.plan import PlacementPlan
 from repro.models import transformer as T
 from repro.serving.engine import Engine, Request
 
@@ -33,6 +32,12 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--slo", type=float, default=40.0,
+                    help="engine-clock latency SLO (steps)")
+    ap.add_argument("--drain", action="store_true",
+                    help="after the workload, drain instance N-1 "
+                         "(scale-down consolidation demo)")
     ap.add_argument("--cache", choices=["auto", "dense", "paged"],
                     default="auto")
     args = ap.parse_args(argv)
@@ -42,57 +47,75 @@ def main(argv=None):
     kind = args.cache
     if kind == "auto":  # primary path where the family supports it
         kind = "paged" if cfg.supports_paged_kv else "dense"
-    eng = Engine(cfg, params, max_batch=args.max_batch, max_len=128,
-                 cache_kind=kind)
     print(f"[serve] cache_kind={kind}")
 
-    cluster = Cluster.homogeneous(4)
-    plan = PlacementPlan.initial(cfg.num_layers)
-    monitor = Monitor()
-    ctrl = Controller(ControllerConfig(replica_size=layer_weight_bytes(cfg)),
-                      cluster, plan, monitor, batch_size=args.max_batch)
-
     rng = np.random.default_rng(0)
+
+    def make_request(rid):
+        return Request(
+            rid=rid,
+            prompt=rng.integers(2, cfg.vocab_size,
+                                size=args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new)
+
     t_start = time.time()
-    submitted = 0
-    finished = []
-    step = 0
-    while len(finished) < args.requests:
-        # Poisson-ish arrivals in engine clock time
-        while submitted < args.requests and \
-                submitted <= eng.clock * args.rps:
-            eng.submit(Request(
-                rid=submitted,
-                prompt=rng.integers(2, cfg.vocab_size,
-                                    size=args.prompt_len).astype(np.int32),
-                max_new_tokens=args.max_new))
+
+    if kind == "dense":  # legacy single-engine fallback (no paged pool)
+        eng = Engine(cfg, params, max_batch=args.max_batch, max_len=128,
+                     cache_kind="dense")
+        submitted, finished, step = 0, [], 0
+        while len(finished) < args.requests and step < 5000:
+            while submitted < args.requests and \
+                    submitted <= eng.clock * args.rps:
+                eng.submit(make_request(submitted))
+                submitted += 1
+            finished.extend(eng.step() or [])
+            step += 1
+        _report(finished, time.time() - t_start)
+        return len(finished)
+
+    from repro.serving.orchestrator import Orchestrator
+    orch = Orchestrator(cfg, params, n_instances=args.instances,
+                        max_batch=args.max_batch, max_len=128,
+                        slo_latency=args.slo, telemetry_every=4)
+    submitted, step = 0, 0
+    seen_actions = 0
+    while len(orch.finished) < args.requests and step < 5000:
+        clock = orch.engines[0].clock
+        while submitted < args.requests and submitted <= clock * args.rps:
+            orch.submit(make_request(submitted))
             submitted += 1
-        fin = eng.step() or []
-        finished.extend(fin)
+        orch.step()
         step += 1
-        if step % 8 == 0:
-            lat = [r.finish_time - r.submit_time for r in finished] or [0.0]
-            monitor.record(MetricsSnapshot(
-                t=eng.clock, rps=args.rps,
-                p50_latency=float(np.median(lat)),
-                slo_violation_rate=0.0,
-                queue_len=len(eng.queue),
-                device_util=[len(eng.active) / args.max_batch, 0.1, 0.1, 0.1],
-                device_mem_frac=[0.4, 0.05, 0.05, 0.05]))
-            action = ctrl.tick()
-            if action:
-                print(f"[serve] t={eng.clock:.1f} controller: {action} "
-                      f"P sum={sum(ctrl.plan.p)}")
-        if step > 5000:
-            break
-    wall = time.time() - t_start
+        log = orch.controller.log
+        for action in log[seen_actions:]:
+            print(f"[serve] t={clock:.1f} controller: {action} "
+                  f"P sum={sum(orch.plan.p)}")
+        seen_actions = len(log)
+
+    if args.drain and args.instances > 1:
+        recs = orch.drain_instance(args.instances - 1)
+        for r in recs:
+            print(f"[serve] drained rid={r.rid} "
+                  f"{r.n_blocks} blocks / {r.bytes_moved / 1e6:.2f} MB "
+                  f"in {r.seconds * 1e3:.1f} ms "
+                  f"(est {r.est_seconds * 1e3:.0f} ms)")
+        orch.run_until_done()
+
+    _report(orch.finished, time.time() - t_start)
+    s = orch.stats()
+    print(f"[serve] instances={args.instances} dropped={s['dropped']} "
+          f"migrations={s['migrations']} preemptions={s['preemptions']}")
+    print(f"[serve] final plan P (first 8): {orch.plan.p[:8]}, "
+          f"continuity breaks: {orch.plan.continuity_breaks()}")
+    return len(orch.finished)
+
+
+def _report(finished, wall):
     toks = sum(len(r.generated) for r in finished)
-    lat = [r.finish_time - r.submit_time for r in finished]
+    lat = [r.finish_time - r.submit_time for r in finished] or [0.0]
     print(f"[serve] {len(finished)} requests, {toks} tokens, "
           f"wall {wall:.1f}s, engine-clock latency p50={np.median(lat):.1f}")
-    print(f"[serve] final plan P (first 8): {ctrl.plan.p[:8]}, "
-          f"continuity breaks: {ctrl.plan.continuity_breaks()}")
-    return len(finished)
 
 
 if __name__ == "__main__":

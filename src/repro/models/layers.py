@@ -253,7 +253,8 @@ def apply_gqa_paged(p, x, cfg: ModelConfig, *, positions, pool_k, pool_v,
     """GQA decode attention against a paged block pool (write-then-attend).
 
     Single-token decode only: x [B,1,d]. ``pool_k/v`` are ONE layer's pool
-    slices [n_blocks, bs, KV, hd]; ``block_tables`` [B, max_blocks] int32
+    slices [n_blocks, KV, bs, hd] (KV-head-major — the Pallas kernel's
+    native tile layout); ``block_tables`` [B, max_blocks] int32
     (-1 = unallocated, masked); ``positions`` [B,1] are the pre-write
     token counts (the new token lands at position ``positions[b,0]``);
     ``active`` [B] bool — inactive rows write nothing (their scatter index
@@ -273,7 +274,7 @@ def apply_gqa_paged(p, x, cfg: ModelConfig, *, positions, pool_k, pool_v,
     B, S, _ = x.shape
     assert S == 1, "paged path is decode-only (one token per step)"
     hd = cfg.resolved_head_dim
-    n_blocks, bs, KV, _ = pool_k.shape
+    n_blocks, KV, bs, _ = pool_k.shape
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
@@ -289,10 +290,10 @@ def apply_gqa_paged(p, x, cfg: ModelConfig, *, positions, pool_k, pool_v,
     blk = jnp.take_along_axis(block_tables, tbl_col[:, None], axis=1)[:, 0]
     blk = jnp.where(active & (blk >= 0), blk, n_blocks)  # OOB -> dropped
     off = pos % bs
-    new_k = pool_k.at[blk, off].set(k[:, 0].astype(pool_k.dtype),
-                                    mode="drop")
-    new_v = pool_v.at[blk, off].set(v[:, 0].astype(pool_v.dtype),
-                                    mode="drop")
+    new_k = pool_k.at[blk, :, off].set(k[:, 0].astype(pool_k.dtype),
+                                       mode="drop")
+    new_v = pool_v.at[blk, :, off].set(v[:, 0].astype(pool_v.dtype),
+                                       mode="drop")
 
     kv_len = jnp.where(active, pos + 1, 0).astype(jnp.int32)
     if impl == "kernel" and (cfg.logit_softcap or window is not None):
@@ -304,8 +305,12 @@ def apply_gqa_paged(p, x, cfg: ModelConfig, *, positions, pool_k, pool_v,
     else:
         max_blocks = block_tables.shape[1]
         tbl = jnp.maximum(block_tables, 0).astype(jnp.int32)
-        kk = new_k[tbl].reshape(B, max_blocks * bs, KV, hd)
-        vv = new_v[tbl].reshape(B, max_blocks * bs, KV, hd)
+        # gathered blocks are [B, mb, KV, bs, hd]; only the gathered
+        # context is re-laid token-major, never the whole pool
+        kk = new_k[tbl].transpose(0, 1, 3, 2, 4).reshape(
+            B, max_blocks * bs, KV, hd)
+        vv = new_v[tbl].transpose(0, 1, 3, 2, 4).reshape(
+            B, max_blocks * bs, KV, hd)
         out = attention(q, kk, vv, q_positions=positions, kv_len=kv_len,
                         k_positions=jnp.arange(max_blocks * bs,
                                                dtype=jnp.int32),

@@ -278,7 +278,8 @@ def _cache_meta(cache, positions):
 
 
 def _forward_decoder(params, cfg, tokens, positions, cache, mode, dispatch,
-                     remat, window, unroll, layer_hook, encoder_out=None):
+                     remat, window, unroll, layer_hook, encoder_out=None,
+                     last_idx=None):
     """dense / moe / vlm decoder and the whisper decoder (with cross-attn)."""
     has_cache = cache is not None
     is_audio = cfg.family == "audio"
@@ -369,18 +370,25 @@ def _forward_decoder(params, cfg, tokens, positions, cache, mode, dispatch,
 
     if mode == "train":
         return unembed(params, cfg, x), None, aux
-    return unembed(params, cfg, x[:, -1]), new_cache, aux
+    if last_idx is not None:
+        # per-row last REAL token (power-of-two padded prefill buckets:
+        # causality keeps positions <= last_idx untouched by the padding)
+        x_last = x[jnp.arange(x.shape[0]), last_idx]
+    else:
+        x_last = x[:, -1]
+    return unembed(params, cfg, x_last), new_cache, aux
 
 
 def forward_paged(params, cfg: ModelConfig, tokens, cache, *, window=None,
-                  attn_impl="gather", interpret=False):
+                  attn_impl="gather", interpret=False, layer_hook=None):
     """Single-token decode step against a PAGED KV pool (the Engine's
     primary decode path; see serving/paged_kv.py for the pool layout).
 
     tokens: [B, 1] int32. ``cache`` is the paged handle — a pytree of
     device arrays so the whole step jits with zero host syncs:
 
-    * ``k``/``v``: [L, n_blocks, bs, KV, hd] shared block pools
+    * ``k``/``v``: [L, n_blocks, KV, bs, hd] shared block pools
+      (KV-head-major — the decode kernel's native tile layout)
     * ``block_tables``: [B, max_blocks] int32 (-1 = unallocated; may be
       sliced to any prefix that covers every active request)
     * ``lengths``: [B] int32 tokens already in the pool per slot
@@ -388,6 +396,10 @@ def forward_paged(params, cfg: ModelConfig, tokens, cache, *, window=None,
       out of every pool write — the shape-stable static-batch trick)
 
     Positions are derived on device (new token sits at ``lengths[b]``).
+    ``layer_hook(i, x) -> x`` (core/replication.layer_hook_from_degrees)
+    unrolls the stack so each layer can carry its own batch-sharding
+    constraint — CoCoServe's per-layer replication degrees applied to the
+    LIVE paged decode step; ``None`` keeps the O(1)-depth lax.scan.
     Returns (logits [B, Vpad], new_cache, aux_loss).
     """
     if not cfg.supports_paged_kv:
@@ -413,9 +425,21 @@ def forward_paged(params, cfg: ModelConfig, tokens, cache, *, window=None,
         x, a = _mlp_sublayer(lp, x, cfg, "auto")
         return (x, aux + a), (kl, vl)
 
-    (x, aux), (nk, nv) = jax.lax.scan(
-        body, (x, jnp.float32(0.0)),
-        (params["layers"], cache["k"], cache["v"]))
+    if layer_hook is None:
+        (x, aux), (nk, nv) = jax.lax.scan(
+            body, (x, jnp.float32(0.0)),
+            (params["layers"], cache["k"], cache["v"]))
+    else:
+        aux = jnp.float32(0.0)
+        nks, nvs = [], []
+        for i in range(cfg.num_layers):
+            x = layer_hook(i, x)
+            (x, aux), (kl, vl) = body(
+                (x, aux), (_layer_slice(params["layers"], i),
+                           cache["k"][i], cache["v"][i]))
+            nks.append(kl)
+            nvs.append(vl)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
     new_cache = dict(cache, k=nk, v=nv,
                      lengths=lengths + active.astype(jnp.int32))
     return unembed(params, cfg, x[:, -1]), new_cache, aux
@@ -545,21 +569,26 @@ def _forward_hybrid(params, cfg, tokens, positions, cache, mode, remat,
 
 def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
             mode="train", encoder_input=None, dispatch="auto", remat=False,
-            window=None, unroll=False, layer_hook=None):
+            window=None, unroll=False, layer_hook=None, last_idx=None):
     """Uniform entry point. tokens [B,S] int32; positions [B,S] absolute
     (default arange). Returns (logits, new_cache, aux_loss):
     train -> full-seq logits [B,S,Vpad]; prefill/decode -> last-token [B,Vpad].
+    ``last_idx`` [B] (attention decoders, non-train) selects each row's
+    last REAL token instead of column -1 — the per-row gather behind the
+    engine's power-of-two padded prefill buckets.
     """
     if cache is not None and "block_tables" in cache:
         assert mode == "decode", "paged cache handles are decode-only"
-        return forward_paged(params, cfg, tokens, cache, window=window)
+        return forward_paged(params, cfg, tokens, cache, window=window,
+                             layer_hook=layer_hook)
     B, S = tokens.shape
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         return _forward_decoder(params, cfg, tokens, positions, cache, mode,
-                                dispatch, remat, window, unroll, layer_hook)
+                                dispatch, remat, window, unroll, layer_hook,
+                                last_idx=last_idx)
     if fam == "audio":
         enc_out = None
         if mode in ("train", "prefill"):
@@ -567,7 +596,8 @@ def forward(params, cfg: ModelConfig, tokens, positions=None, cache=None, *,
             enc_out = encode_audio(params, cfg, encoder_input)
         return _forward_decoder(params, cfg, tokens, positions, cache, mode,
                                 dispatch, remat, window, unroll, layer_hook,
-                                encoder_out=enc_out)
+                                encoder_out=enc_out, last_idx=last_idx)
+    assert last_idx is None, f"last_idx unsupported for family {fam}"
     if fam == "ssm":
         return _forward_ssm(params, cfg, tokens, positions, cache, mode, remat)
     if fam == "hybrid":

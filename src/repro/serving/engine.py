@@ -3,14 +3,18 @@
 Iteration-level scheduling in the Orca/vLLM style, with PAGED KV as the
 primary decode path (``cache_kind="paged"``):
 
-* **Prefill** runs over a throwaway dense cache sized exactly to the
-  prompt, batching same-length prompts from the queue into one forward
-  call, then scatters each request's K/V into the shared block pool via
-  ``paged_kv.write_tokens``. Block allocation/eviction is driven by the
-  host-side free list — admission applies backpressure (requests wait in
-  the queue) when the pool is out of blocks, and decode-time pressure
-  preempts the youngest request back onto the queue (its re-admission
-  replays deterministically thanks to counter-based sampling keys).
+* **Prefill** runs over a throwaway dense cache sized to the prompt's
+  POWER-OF-TWO length bucket, batching the whole bucket from the queue
+  into one forward call (per-row last-token gather picks each prompt's
+  real logits), then scatters each request's true-length K/V into the
+  shared block pool via ``paged_kv.write_tokens_batch``. Block
+  allocation/eviction is driven by the host-side free list — admission
+  applies backpressure (requests wait in the queue) when the pool is out
+  of blocks, and decode-time pressure preempts the youngest request back
+  onto the queue (its re-admission replays deterministically thanks to
+  counter-based sampling keys). Sliding-window archs run paged too:
+  blocks that fall fully out of the window return to the pool
+  (``paged_kv.free_out_of_window``).
 * **Decode** is ONE fused jitted call per engine step: single-token
   forward against the block pool (``models.transformer.forward_paged``)
   plus batched on-device sampling (``serving.sampling``). The only
@@ -21,9 +25,16 @@ primary decode path (``cache_kind="paged"``):
   the step is bucketed to powers of two, so decode compute and HBM
   traffic scale with the *actual* longest context, not ``max_len``.
 
+The engine is also the unit CoCoServe's live module scaling operates on:
+``apply_plan`` puts the plan's per-layer replication degrees on the fused
+step (static jit arg -> unrolled ``forward_paged`` with batch-sharding
+hooks), and ``pause_request``/``resume_request`` export/import one
+request's KV blocks + position + sampling counters so an orchestrator
+(serving/orchestrator.py) can migrate it mid-stream, token-identically.
+
 The legacy dense path (``cache_kind="dense"``, a ``[B, max_len]`` cache)
-remains for sliding-window/MLA/SSM/hybrid/audio families and as the
-parity oracle; it shares the same fused decode+sample step shape.
+remains for MLA/SSM/hybrid/audio families and as the parity oracle; it
+shares the same fused decode+sample step shape.
 Inactive slots decode garbage that is masked out — the standard
 static-batch trick that keeps the jitted step shape-stable.
 """
@@ -82,9 +93,9 @@ def _pow2_at_least(n: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "window"))
-def _prefill_fn(params, tokens, cache, enc, *, cfg, window):
+def _prefill_fn(params, tokens, cache, enc, last_idx, *, cfg, window):
     return T.forward(params, cfg, tokens, mode="prefill", cache=cache,
-                     window=window, encoder_input=enc)
+                     window=window, encoder_input=enc, last_idx=last_idx)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "window"))
@@ -106,12 +117,20 @@ def _dense_step_impl(params, cache, tokens, positions, temps, topks, seeds,
 
 def _paged_step_impl(params, k, v, tables, lengths, active, tokens, temps,
                      topks, seeds, counters, *, cfg, window, impl, interp,
-                     stochastic, max_top_k):
+                     stochastic, max_top_k, degrees=None):
     handle = {"k": k, "v": v, "block_tables": tables,
               "lengths": lengths, "active": active}
+    hook = None
+    if degrees is not None:
+        # live module replication: the (hashable, static) per-layer degree
+        # tuple unrolls the stack with one batch-sharding constraint per
+        # layer — a plan change recompiles exactly this step, nothing else
+        from repro.core import replication as R
+        hook = R.layer_hook_from_degrees(degrees,
+                                         R.default_replication_mesh())
     logits, nc, _ = T.forward_paged(params, cfg, tokens[:, None], handle,
                                     window=window, attn_impl=impl,
-                                    interpret=interp)
+                                    interpret=interp, layer_hook=hook)
     toks = SMP.sample_tokens(logits, temps, topks, seeds, counters,
                              cfg.vocab_size, stochastic=stochastic,
                              max_top_k=max_top_k)
@@ -131,7 +150,7 @@ def _jitted_steps():
                     donate_argnums=(1,) if can_donate else ())
     paged = jax.jit(_paged_step_impl,
                     static_argnames=("cfg", "window", "impl", "interp",
-                                     "stochastic", "max_top_k"),
+                                     "stochastic", "max_top_k", "degrees"),
                     donate_argnums=(1, 2) if can_donate else ())
     return dense, paged
 
@@ -157,7 +176,11 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
-        self.max_len = KV.cache_capacity(cfg, max_len, swa=swa)
+        # dense SWA ring-buffers down to the window; the PAGED path keeps
+        # the logical length (block-table columns are absolute positions)
+        # and instead FREES leading blocks as they leave the window
+        self.max_len = (max_len if cache_kind == "paged"
+                        else KV.cache_capacity(cfg, max_len, swa=swa))
         self.logical_max = max_len
         self.window = cfg.sliding_window if swa else None
         self.dtype = dtype
@@ -168,6 +191,7 @@ class Engine:
         self.queue: Deque[Request] = collections.deque()
         self.clock = 0.0
         self._step_count = 0
+        self.preempt_count = 0   # pool-pressure evictions (live OOM signal)
         # host mirror of per-slot cache lengths for the DENSE path (the
         # paged path's canonical host lengths live in pstate.lengths) —
         # this is what lets a decode step avoid reading device state.
@@ -180,11 +204,13 @@ class Engine:
                 raise ValueError(
                     f"cache_kind='paged' needs a GQA attention decoder "
                     f"(family={cfg.family}, attn={cfg.attention_kind})")
-            if swa:
-                raise ValueError("paged cache does not ring-buffer; "
-                                 "run sliding-window archs dense")
             if n_blocks is None:
-                n_blocks = -(-max_batch * self.max_len // block_size)
+                # SWA pools only need the live window (+1 block of write
+                # headroom per slot); the table still spans max_len columns
+                live = KV.cache_capacity(cfg, max_len, swa=swa)
+                n_blocks = -(-max_batch * live // block_size)
+                if self.window:
+                    n_blocks += max_batch
             self.pstate = PK.init_paged(cfg, max_batch, n_blocks,
                                         block_size=block_size, dtype=dtype,
                                         max_len=self.max_len)
@@ -195,6 +221,10 @@ class Engine:
 
         self._paged_impl = paged_attn_impl
         self._interpret = interpret
+        # live module-scaling state (Engine.apply_plan)
+        self.replication_degrees: Optional[tuple] = None  # plan intent
+        self._step_degrees: Optional[tuple] = None        # quantized/static
+        self._prefill_shapes = set()  # (G, S) executables admitted so far
 
     # ------------------------------------------------------------- sampling
     def _sample_batch(self, logits, reqs) -> np.ndarray:
@@ -242,23 +272,28 @@ class Engine:
         return np.asarray(req.prompt, np.int32)
 
     def _run_prefill(self, tokens_2d, cache_len: Optional[int] = None,
-                     enc=None):
+                     enc=None, last_idx=None):
         """Batched (possibly chunked) prefill over a throwaway cache.
 
-        The paged path sizes the cache exactly to the prompt (its K/V is
-        immediately scattered into the block pool); the dense path keeps
-        ``max_len`` so ``kvcache.insert_request`` shapes line up.
-        Returns (last-token logits, cache)."""
+        The paged path sizes the cache exactly to the (bucket-padded)
+        prompt — its K/V is immediately scattered into the block pool; the
+        dense path keeps ``max_len`` so ``kvcache.insert_request`` shapes
+        line up. ``last_idx`` [G] selects each row's last REAL token for
+        the returned logits (power-of-two prefill buckets; incompatible
+        with chunking). Returns (last-token logits, cache)."""
         G, S = tokens_2d.shape
+        self._prefill_shapes.add((G, S))
         rcache = T.init_cache(self.cfg, G, cache_len or S, self.dtype)
         if enc is None and self.cfg.family == "audio":
             enc = jnp.zeros((G, self.cfg.encoder_seq_len,
                              self.cfg.d_model), jnp.float32)
         chunk = self.prefill_chunk or S
+        assert last_idx is None or chunk >= S, \
+            "per-row last-token gather needs one-shot prefill"
         first = min(chunk, S)
         logits, rcache, _ = _prefill_fn(
             self.params, jnp.asarray(tokens_2d[:, :first]), rcache, enc,
-            cfg=self.cfg, window=self.window)
+            last_idx, cfg=self.cfg, window=self.window)
         off = first
         while off < S:  # chunked prefill: bound per-iteration work
             n = min(chunk, S - off)
@@ -325,25 +360,37 @@ class Engine:
         ptoks = {id(r): self._prefill_tokens(r) for r in taken}
 
         def blocks_needed(req):
-            # prompt + headroom for the first decode write
-            return -(-(len(ptoks[id(req)]) + 1) // bs)
+            # LIVE columns only: prompt + headroom for the first decode
+            # write, minus the leading columns a sliding window has
+            # already retired (allocate skips them — a long prompt never
+            # needs transient full-length residency in a window pool)
+            S = len(ptoks[id(req)])
+            cols = S // bs + 1
+            if self.window:
+                # allocate()'s own dead-column count at prefill time —
+                # never larger, so this bound never under-reserves
+                cols -= min(max((S - self.window + 1) // bs, 0), cols - 1)
+            return cols
+
+        def last_col(req):
+            return len(ptoks[id(req)]) // bs  # the decode write head
 
         # pre-pass BEFORE any allocation: a request that can never fit —
         # pool too small, or prompt >= max_len (block-table row too
         # narrow) — is rejected now rather than head-of-line blocking
         # everything behind it; the rest of the wave goes back to the
         # queue intact, nothing is lost and no block leaks.
-        cap = min(self.pstate.n_blocks, self.pstate.block_tables.shape[1])
+        width = self.pstate.block_tables.shape[1]
         for req in taken:
             need = blocks_needed(req)
-            if need > cap:
+            if need > self.pstate.n_blocks or last_col(req) >= width:
                 for r in reversed([t for t in taken if t is not req]):
                     self.queue.appendleft(r)
                 req.finish_time = self.clock  # rejected: no output
                 raise PK.OutOfBlocks(
-                    f"request rid={req.rid} needs {need} blocks; pool has "
-                    f"{self.pstate.n_blocks}, table rows hold "
-                    f"{self.pstate.block_tables.shape[1]}")
+                    f"request rid={req.rid} needs {need} live blocks up "
+                    f"to column {last_col(req)}; pool has "
+                    f"{self.pstate.n_blocks}, table rows hold {width}")
 
         admitted: List[Request] = []
         slot_of: Dict[int, int] = {}
@@ -354,28 +401,44 @@ class Engine:
                 for r in reversed(taken[idx:]):
                     self.queue.appendleft(r)
                 break
-            PK.allocate(self.pstate, slot, len(ptoks[id(req)]))
+            PK.allocate(self.pstate, slot, len(ptoks[id(req)]),
+                        window=self.window)
             slot_of[id(req)] = slot
             admitted.append(req)
-        # group same-length prompts into one batched prefill each, then
+        # group prompts into power-of-two LENGTH BUCKETS (pad + per-row
+        # last-token gather) so admission compiles O(log max_len)
+        # executables instead of one per (group, prompt-len) pair; then
         # activate in SUBMISSION order (group iteration would reorder
-        # _admit_order and break youngest-first preemption)
+        # _admit_order and break youngest-first preemption). Chunked
+        # prefill keeps exact lengths (chunking already bounds shapes).
         groups: Dict[int, List[Request]] = {}
         for req in admitted:
-            groups.setdefault(len(ptoks[id(req)]), []).append(req)
+            S = len(ptoks[id(req)])
+            Sb = S if self.prefill_chunk else _pow2_at_least(S)
+            groups.setdefault(Sb, []).append(req)
         first_of: Dict[int, Optional[int]] = {}
-        for S, reqs in groups.items():
-            toks = np.stack([ptoks[id(r)] for r in reqs])
-            logits, rcache = self._run_prefill(toks)
+        for Sb, reqs in groups.items():
+            lens = [len(ptoks[id(r)]) for r in reqs]
+            toks = np.zeros((len(reqs), Sb), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i, :lens[i]] = ptoks[id(r)]
+            last = (None if self.prefill_chunk
+                    else jnp.asarray(np.asarray(lens, np.int32) - 1))
+            logits, rcache = self._run_prefill(toks, last_idx=last)
             firsts = self._sample_batch(logits, reqs)
             self.pstate = PK.write_tokens_batch(
                 self.pstate, [slot_of[id(r)] for r in reqs],
-                rcache["layers"]["k"], rcache["layers"]["v"])
+                rcache["layers"]["k"], rcache["layers"]["v"],
+                lengths=lens)
             for i, req in enumerate(reqs):
                 first_of[id(req)] = None if req.generated else firsts[i]
         for req in admitted:
             self._activate(req, slot_of[id(req)], len(ptoks[id(req)]),
                            first_of[id(req)])
+        if self.window:
+            for req in admitted:
+                if req.slot is not None:  # may have retired at admission
+                    PK.free_out_of_window(self.pstate, req.slot, self.window)
 
     def _admit(self):
         if self.cache_kind == "paged":
@@ -393,6 +456,7 @@ class Engine:
         PK.free_slot(self.pstate, slot)
         req.slot = None
         req.preemptions += 1
+        self.preempt_count += 1
         self.queue.appendleft(req)
 
     def _ensure_decode_room(self):
@@ -452,10 +516,11 @@ class Engine:
             st = self.pstate
             pre_lengths = st.lengths.copy()
             bs = st.block_size
-            # power-of-2 bucket of the widest active block table: decode
+            # power-of-2 bucket of the widest needed table prefix: decode
             # cost tracks the true max context, with O(log) recompiles.
-            blocks_held = (st.block_tables >= 0).sum(axis=1)
-            need = int(blocks_held[active_mask].max()) if \
+            # Derived from LENGTHS (col of the incoming write), not from
+            # block counts — window-freed rows have leading holes.
+            need = (int(st.lengths[active_mask].max()) // bs + 1) if \
                 active_mask.any() else 1
             nb = min(_pow2_at_least(max(need, 1)),
                      st.block_tables.shape[1])
@@ -466,9 +531,12 @@ class Engine:
                 temps, topks, seeds, ctrs, cfg=self.cfg,
                 window=self.window, impl=self._paged_impl,
                 interp=self._interpret, stochastic=stoch,
-                max_top_k=max_top_k)
+                max_top_k=max_top_k, degrees=self._step_degrees)
             toks = jax.device_get(toks_dev)     # the ONE host sync
             st.lengths[active_mask] += 1
+            if self.window:
+                for slot in self.active:
+                    PK.free_out_of_window(st, slot, self.window)
         else:
             pre_lengths = self._host_lengths.copy()
             positions = pre_lengths[:, None].astype(np.int32)
@@ -510,3 +578,75 @@ class Engine:
             out.extend(fin)
             steps += 1
         return out
+
+    # ------------------------------------------- live module scaling API
+    def apply_plan(self, plan):
+        """Apply a PlacementPlan's per-layer replication degrees (P) to
+        the LIVE decode step — CoCoServe scale-up without draining: the
+        next ``step()`` runs ``forward_paged`` unrolled, each layer under
+        its plan-assigned batch-sharding constraint (degrees quantized to
+        the local replication mesh; an all-ones plan restores the O(1)
+        lax.scan step). Token streams are unaffected — resharding changes
+        where the batch computes, not what it computes."""
+        if self.cache_kind != "paged":
+            raise ValueError("apply_plan targets the paged decode step; "
+                             "dense engines predate module scaling")
+        from repro.core import replication as R
+        p = tuple(plan.p) if hasattr(plan, "p") else tuple(plan)
+        if len(p) != self.cfg.num_layers:
+            raise ValueError(f"plan covers {len(p)} layers, "
+                             f"model has {self.cfg.num_layers}")
+        self.replication_degrees = p
+        if all(d == 1 for d in p):
+            self._step_degrees = None
+        else:
+            mesh_n = R.default_replication_mesh().devices.size
+            self._step_degrees = tuple(R.quantize_degrees(list(p), mesh_n))
+
+    # --------------------------------------- request migration (paged)
+    def pause_request(self, slot: int) -> dict:
+        """Detach the ACTIVE request in ``slot`` and export its full
+        serving state: KV blocks (paged_kv.export_blocks wire format),
+        position (token count), and the counter-based sampling state —
+        which is just (seed, len(generated)), carried by the Request
+        itself. The slot and its blocks are freed; ``resume_request`` on
+        any engine with identical cfg/params continues the stream
+        token-identically."""
+        if self.cache_kind != "paged":
+            raise ValueError("pause/resume migrates paged KV blocks; "
+                             "dense slabs go through core.migration")
+        req = self.active.pop(slot)
+        self._admit_order.remove(slot)
+        payload = PK.export_blocks(self.pstate, slot)
+        PK.free_slot(self.pstate, slot)
+        req.slot = None
+        # "position"/"counter" are INFORMATIONAL wire-format mirrors (for
+        # cross-host transports/logging); the authoritative copies travel
+        # inside the payload: import_blocks restores position from
+        # kv["length"], the sampler re-derives the counter from
+        # len(request.generated)
+        return {"request": req, "kv": payload,
+                "position": payload["length"],
+                "counter": len(req.generated)}
+
+    def resume_request(self, payload: dict) -> bool:
+        """Rebind a paused request's blocks into this engine's pool and
+        put it back in decode rotation. Returns False — WITHOUT dropping
+        the request or touching the pool — when no slot or not enough
+        blocks are free (the caller re-queues it; counter-based sampling
+        replays the continuation deterministically)."""
+        if self.cache_kind != "paged":
+            raise ValueError("resume_request needs a paged engine")
+        req = payload["request"]
+        free = self._free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        try:
+            PK.import_blocks(self.pstate, slot, payload["kv"])
+        except PK.OutOfBlocks:
+            return False
+        req.slot = slot
+        self.active[slot] = req
+        self._admit_order.append(slot)  # migrated-in = youngest
+        return True

@@ -1,4 +1,4 @@
-"""Host-sync instrumentation for the serving hot loop.
+"""Instrumentation for the serving hot loop.
 
 ``count_host_syncs()`` patches ``jax.device_get`` — the one primitive the
 engines use for every device→host read — and counts calls. The engines
@@ -7,18 +7,74 @@ in their steady-state step, so the counter is an exact census of blocking
 syncs per ``Engine.step`` (the quantity the paged-engine acceptance bound
 "≤ 1 host sync per step" is asserted against in tests and reported by
 benchmarks/paged_engine_bench.py).
+
+``EngineTelemetry`` is the LIVE metrics source of the module-scaling loop:
+the orchestrator records every engine step (wall seconds, tokens) and
+every finished request (engine-clock latency) here, and turns the rolling
+windows into ``core.monitor.MetricsSnapshot``s — the paper's NVML+timer
+feed, replaced by real engine counters instead of synthetic traces.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+from collections import deque
+from typing import Deque, Iterable
 
 import jax
+import numpy as np
 
 
 @dataclasses.dataclass
 class SyncCounter:
     n: int = 0
+
+
+class EngineTelemetry:
+    """Rolling-window per-engine counters feeding core/monitor."""
+
+    def __init__(self, window: int = 64):
+        self.step_seconds: Deque[float] = deque(maxlen=window)
+        self.step_tokens: Deque[int] = deque(maxlen=window)
+        self.finished_latencies: Deque[float] = deque(maxlen=window)
+        self.total_tokens = 0
+        self.total_finished = 0
+        self.preemptions_seen = 0
+
+    def record_step(self, wall_s: float, n_tokens: int):
+        self.step_seconds.append(wall_s)
+        self.step_tokens.append(n_tokens)
+        self.total_tokens += n_tokens
+
+    def record_finished(self, requests: Iterable):
+        for r in requests:
+            self.finished_latencies.append(r.finish_time - r.submit_time)
+            self.total_finished += 1
+
+    def record_preemptions(self, n: int):
+        self.preemptions_seen += n
+
+    def tokens_per_s(self) -> float:
+        wall = sum(self.step_seconds)
+        return sum(self.step_tokens) / wall if wall > 0 else 0.0
+
+    def mean_step_s(self) -> float:
+        return (sum(self.step_seconds) / len(self.step_seconds)
+                if self.step_seconds else 0.0)
+
+    def latency_quantile(self, q: float) -> float:
+        if not self.finished_latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.finished_latencies), q))
+
+    def slo_violation_rate(self, slo_latency: float) -> float:
+        """Fraction of recently finished requests whose ENGINE-CLOCK
+        latency (finish - submit) blew the SLO — the §5 scale-down
+        trigger, measured on real requests rather than a trace."""
+        if not self.finished_latencies:
+            return 0.0
+        lats = np.asarray(self.finished_latencies)
+        return float((lats > slo_latency).mean())
 
 
 @contextlib.contextmanager

@@ -1,0 +1,298 @@
+"""Serving orchestrator — the paper's §5 control loop closed over LIVE
+paged engines instead of synthetic traces.
+
+One Orchestrator owns N ``Engine(cache_kind="paged")`` instances (the
+deployment's model replicas), routes incoming requests, and every
+``telemetry_every`` steps:
+
+1. **telemetry**  — folds each engine's real counters (block-pool
+   vacancy, queue depth, per-step wall latency from
+   ``serving.instrument.EngineTelemetry``, SLO violations measured on
+   finished requests) into a ``core.monitor.MetricsSnapshot``;
+2. **decision**   — runs ``core.controller.Controller.tick()`` (Alg. 1
+   scale-up on vacancy, Alg. 2 scale-down on SLO violation / pool
+   pressure) against a Cluster whose devices mirror the instances;
+3. **execution**  — applies the decision to the RUNNING instances,
+   mid-decode, without draining:
+
+   * scale-up: the plan's per-layer replication degrees go to every
+     engine via ``Engine.apply_plan`` (the ``layer_hook_from_degrees``
+     batch-sharding constraints on the live fused decode step);
+   * scale-down / rebalance: KV BLOCKS of live requests migrate between
+     instances' pools — ``Engine.pause_request`` exports blocks +
+     position + counter-based sampling state, ``resume_request`` rebinds
+     them at the same block-table columns on the destination, so the
+     continuation is token-identical (greedy AND sampled). A destination
+     that can't hold the blocks re-queues the request instead of
+     dropping it (deterministic replay), keeping the loop zero-drop by
+     construction.
+
+The telemetry -> controller -> operation dataflow and the block-migration
+wire format are documented in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core import migration as MIG
+from repro.core.cluster import Cluster, Device, layer_weight_bytes
+from repro.core.controller import Controller, ControllerConfig
+from repro.core.monitor import MetricsSnapshot, Monitor
+from repro.core.plan import PlacementPlan
+from repro.serving.engine import Engine, Request
+from repro.serving.instrument import EngineTelemetry
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    """One executed live KV-block migration (bench + test evidence)."""
+    rid: int
+    src: int
+    dst: int
+    n_blocks: int
+    bytes_moved: int
+    seconds: float
+    est_seconds: float
+    resumed: bool           # False = destination re-queued (replay) instead
+
+
+class Orchestrator:
+    def __init__(self, cfg: ModelConfig, params, *, n_instances: int = 2,
+                 max_batch: int = 4, max_len: int = 128,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 dtype="float32", slo_latency: float = 50.0,
+                 telemetry_every: int = 4,
+                 controller_cfg: Optional[ControllerConfig] = None,
+                 link_bandwidth: float = 50e9, **engine_kw):
+        assert n_instances >= 1
+        self.cfg = cfg
+        self.slo_latency = slo_latency
+        self.telemetry_every = telemetry_every
+        self.link_bandwidth = link_bandwidth
+        self.engines: List[Engine] = [
+            Engine(cfg, params, max_batch=max_batch, max_len=max_len,
+                   dtype=dtype, cache_kind="paged", block_size=block_size,
+                   n_blocks=n_blocks, **engine_kw)
+            for _ in range(n_instances)]
+        self.telemetry = [EngineTelemetry() for _ in range(n_instances)]
+        self._preempt_seen = [0] * n_instances
+
+        # one Device per live instance; capacity = its pool + headroom for
+        # layer replicas so Alg. 1's free-mem gate has room to say yes
+        pool_bytes = self.engines[0].pstate.pool_bytes()
+        ccfg = controller_cfg or ControllerConfig(
+            replica_size=layer_weight_bytes(cfg, dtype_bytes=4))
+        if ccfg.module_bytes is None:
+            # REAL footprints for scale-down destination fitting: a
+            # kv_cache migrant is one slot's share of the live pool
+            rs = ccfg.replica_size
+            ccfg = dataclasses.replace(
+                ccfg, module_bytes={
+                    "layer": rs, "attn": rs / 3, "ffn": 2 * rs / 3,
+                    "kv_cache": pool_bytes / max(max_batch, 1)})
+        cap = pool_bytes + 2 * cfg.num_layers * ccfg.replica_size
+        self.cluster = Cluster(
+            devices=[Device(i, mem_capacity=cap, compute_flops=1.0)
+                     for i in range(n_instances)],
+            link_bandwidth=link_bandwidth)
+        self.plan = PlacementPlan.initial(cfg.num_layers)
+        self.monitor = Monitor()
+        self.controller = Controller(
+            ccfg, self.cluster, self.plan, self.monitor,
+            batch_size=max_batch,
+            # the live loop can't re-measure inside one tick: each
+            # scale-down applies ONE remediation and re-evaluates at the
+            # next telemetry snapshot (graduated response over ticks)
+            is_violating=lambda plan, bs: False,
+            on_plan_change=self._on_plan_change)
+        self.finished: List[Request] = []
+        self.migrations: List[MigrationRecord] = []
+        self.dropped = 0                    # never incremented: zero-drop
+        self._tick = 0
+        self._home: Dict[int, int] = {}     # rid -> instance
+
+    # -------------------------------------------------------------- intake
+    def submit(self, req: Request):
+        """Route to the instance with the most free pool blocks (ties:
+        shortest queue, lowest id) — block vacancy is the live resource
+        the paper's admission reasons about."""
+        i = self._route()
+        self._home[req.rid] = i
+        self.engines[i].submit(req)
+
+    def _route(self) -> int:
+        def score(i: int):
+            e = self.engines[i]
+            return (-len(e.pstate.free), len(e.queue), i)
+        return min(range(len(self.engines)), key=score)
+
+    # ------------------------------------------------------------ main loop
+    def step(self) -> List[Request]:
+        """One orchestrator iteration: step every engine (measuring real
+        wall latency), collect finishes, and on telemetry ticks run the
+        monitor -> controller -> execute pipeline."""
+        fin: List[Request] = []
+        for i, eng in enumerate(self.engines):
+            t0 = time.perf_counter()
+            done = eng.step() or []
+            self.telemetry[i].record_step(time.perf_counter() - t0,
+                                          len(eng.active) + len(done))
+            self.telemetry[i].record_finished(done)
+            fin.extend(done)
+        self.finished.extend(fin)
+        self._tick += 1
+        if self._tick % self.telemetry_every == 0:
+            self.control_tick()
+        return fin
+
+    def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
+        out: List[Request] = []
+        steps = 0
+        while any(e.queue or e.active for e in self.engines) \
+                and steps < max_steps:
+            out.extend(self.step())
+            steps += 1
+        return out
+
+    # ------------------------------------------------------------ telemetry
+    def snapshot(self) -> MetricsSnapshot:
+        """Fold live engine counters into the Monitor's schema. All
+        quantities are measured, none synthetic: utilization is occupied
+        decode slots, memory is pool blocks in use, latency/SLO come from
+        finished requests' engine-clock timestamps."""
+        util, memf, vac = [], [], []
+        new_preempts = 0
+        for i, eng in enumerate(self.engines):
+            util.append(len(eng.active) / eng.max_batch)
+            used = eng.pstate.blocks_in_use() / eng.pstate.n_blocks
+            memf.append(used)
+            vac.append(1.0 - used)
+            n = eng.preempt_count
+            new_preempts += n - self._preempt_seen[i]
+            self._preempt_seen[i] = n
+        lats = [t.latency_quantile(0.5) for t in self.telemetry]
+        tps = sum(t.tokens_per_s() for t in self.telemetry)
+        viol = [t.slo_violation_rate(self.slo_latency)
+                for t in self.telemetry]
+        return MetricsSnapshot(
+            t=self.engines[0].clock,
+            tokens_per_s=tps,
+            p50_latency=max(lats) if lats else 0.0,
+            p95_latency=max(t.latency_quantile(0.95)
+                            for t in self.telemetry),
+            slo_violation_rate=max(viol) if viol else 0.0,
+            queue_len=sum(len(e.queue) for e in self.engines),
+            device_util=util, device_mem_frac=memf, block_vacancy=vac,
+            step_seconds=max(t.mean_step_s() for t in self.telemetry),
+            preemptions=new_preempts)
+
+    def _sync_cluster(self, snap: MetricsSnapshot):
+        for d, u, m in zip(self.cluster.devices, snap.device_util,
+                           snap.device_mem_frac):
+            pool = self.engines[d.device_id].pstate.pool_bytes()
+            d.util_compute = u
+            d.used_mem = m * pool
+
+    # ------------------------------------------------------------- control
+    def control_tick(self) -> Optional[str]:
+        """One monitor -> controller -> execute round (also callable
+        directly by tests/benchmarks to inject a decision point)."""
+        snap = self.snapshot()
+        self.controller.observe(snap)
+        self._sync_cluster(snap)
+        action = self.controller.tick()
+        if action and action.startswith("scale-down"):
+            self._execute_scale_down()
+        self.plan = self.controller.plan
+        return action
+
+    def _on_plan_change(self, plan: PlacementPlan, batch_size: int):
+        """Controller callback: push the new replication degrees to every
+        LIVE instance — the next decode step of each engine runs under
+        the plan's per-layer batch sharding, no drain, no restart."""
+        self.plan = plan
+        for eng in self.engines:
+            eng.apply_plan(plan)
+
+    def _execute_scale_down(self):
+        """Realize the controller's Phase-1 module migrations as KV-block
+        transfers: whatever module the plan nominally moves, what a live
+        instance can shed mid-decode is the memory-intensive module —
+        its requests' paged KV (§3.3's preferred migrant). One rebalance
+        per (src, dst) pair per tick."""
+        res = self.controller.last_scale_down
+        if res is None:
+            return
+        seen = set()
+        for layer, comp, src, dst in res.migrations:
+            if (src, dst) in seen or src == dst:
+                continue
+            seen.add((src, dst))
+            self.migrate_requests(src, dst)
+
+    # ------------------------------------------------------------ migration
+    def migrate_requests(self, src: int, dst: int,
+                         max_requests: Optional[int] = None
+                         ) -> List[MigrationRecord]:
+        """Move active requests' KV blocks from instance ``src`` to
+        ``dst``, mid-stream. Never drops: a request the destination pool
+        can't hold is re-queued there and replays deterministically
+        (counter-based sampling keys)."""
+        seng, deng = self.engines[src], self.engines[dst]
+        slots = sorted(seng.active.keys())
+        if max_requests is not None:
+            slots = slots[:max_requests]
+        out: List[MigrationRecord] = []
+        for slot in slots:
+            t0 = time.perf_counter()
+            payload = seng.pause_request(slot)
+            req = payload["request"]
+            ok = deng.resume_request(payload)
+            if not ok:
+                deng.queue.appendleft(req)   # zero-drop fallback: replay
+            jax.block_until_ready((deng.pstate.k, deng.pstate.v))
+            dt = time.perf_counter() - t0
+            nbytes = payload["kv"]["nbytes"]
+            rec = MigrationRecord(
+                rid=req.rid, src=src, dst=dst,
+                n_blocks=len(payload["kv"]["cols"]),
+                bytes_moved=nbytes, seconds=dt,
+                est_seconds=MIG.estimate_cost(nbytes, self.link_bandwidth),
+                resumed=ok)
+            self._home[req.rid] = dst
+            self.migrations.append(rec)
+            out.append(rec)
+        return out
+
+    def drain_instance(self, idx: int) -> List[MigrationRecord]:
+        """Scale-down consolidation: move EVERYTHING (active KV blocks +
+        queued requests) off instance ``idx`` onto the least-loaded other
+        instance, leaving ``idx`` empty and removable."""
+        others = [i for i in range(len(self.engines)) if i != idx]
+        assert others, "cannot drain a single-instance deployment"
+        dst = min(others, key=lambda i: (len(self.engines[i].active),
+                                         len(self.engines[i].queue)))
+        recs = self.migrate_requests(idx, dst)
+        src = self.engines[idx]
+        while src.queue:                     # preserve submit_time: no
+            req = src.queue.popleft()        # re-submit, straight handoff
+            self._home[req.rid] = dst
+            self.engines[dst].queue.append(req)
+        return recs
+
+    # -------------------------------------------------------------- summary
+    def stats(self) -> Dict:
+        return {
+            "finished": len(self.finished),
+            "dropped": self.dropped,
+            "migrations": len(self.migrations),
+            "migrated_bytes": sum(m.bytes_moved for m in self.migrations),
+            "preemptions": sum(self._preempt_seen),
+            "controller_log": list(self.controller.log),
+            "plan_p": list(self.plan.p),
+        }

@@ -1,21 +1,36 @@
 """Paged KV cache — the block-table pool behind the Engine's PRIMARY
 decode path (serving/engine.py with ``cache_kind="paged"``).
 
-Layout: a global pool of fixed-size blocks per layer,
-``k/v: [L, n_blocks, block_size, KV, hd]``, plus a per-request block table
-``[B, max_blocks]`` of pool indices (-1 = unallocated). Allocation is
-on-demand per ``block_size`` tokens, so memory — and decode-step HBM
-traffic — scales with *actual* tokens (the paged-KV property that prevents
-the HFT static-reservation OOMs, and the substrate CoCoServe's module
-replication moves around: KV blocks, not dense slabs). Freeing a request
-returns whole blocks to the pool; fragmentation is bounded by
-``block_size - 1`` tokens per request.
+Layout: a global pool of fixed-size blocks per layer, stored
+KV-HEAD-MAJOR — ``k/v: [L, n_blocks, KV, bs, hd]`` — so each (block,
+kv-head) pair is a contiguous ``[bs, hd]`` tile. That is exactly the tile
+the Pallas decode kernel (kernels/paged_decode.py) DMAs per grid step, so
+the kernel reads the pool natively instead of transposing the whole pool
+per call (which would defeat its length-proportional HBM traffic on real
+hardware). A per-request block table ``[B, max_blocks]`` of pool indices
+(-1 = unallocated) maps absolute token position ``p`` to table column
+``p // block_size``.
+
+Allocation is on-demand per ``block_size`` tokens, so memory — and
+decode-step HBM traffic — scales with *actual* tokens (the paged-KV
+property that prevents the HFT static-reservation OOMs, and the substrate
+CoCoServe's module replication moves around: KV blocks, not dense slabs).
+Freeing a request returns whole blocks to the pool; fragmentation is
+bounded by ``block_size - 1`` tokens per request. Sliding-window archs
+additionally return *leading* blocks once every token in them has fallen
+out of the attention window (``free_out_of_window``) — the block table
+keeps holes (-1) at those columns, and allocation is column-indexed so
+holes never get rewritten.
 
 Division of labour with the engine:
 
-* ``allocate`` / ``free_slot`` run on the HOST free list (no device work);
+* ``allocate`` / ``free_slot`` / ``free_out_of_window`` run on the HOST
+  free list (no device work);
 * ``write_tokens`` scatters a freshly prefilled request's K/V into the
   pool (one functional scatter per request, issued at admission);
+* ``export_blocks`` / ``import_blocks`` are the block-granular migration
+  wire format (DESIGN.md): CoCoServe's scale-down moves a live request's
+  KV blocks between instances' pools without touching dense slabs;
 * the per-step decode read is ``models.transformer.forward_paged`` — a
   gather over the block table inside the jitted step, or the Pallas kernel
   in kernels/paged_decode.py;
@@ -25,7 +40,7 @@ Division of labour with the engine:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +52,7 @@ from repro.configs.base import ModelConfig
 @dataclasses.dataclass
 class PagedState:
     """Device arrays + host-side free list for one engine."""
-    k: jnp.ndarray            # [L, n_blocks, bs, KV, hd]
+    k: jnp.ndarray            # [L, n_blocks, KV, bs, hd] (KV-head-major)
     v: jnp.ndarray
     block_tables: np.ndarray  # [B, max_blocks] int32 host array (-1 empty)
     lengths: np.ndarray       # [B] int32 host array
@@ -51,13 +66,19 @@ class PagedState:
     def blocks_in_use(self) -> int:
         return self.n_blocks - len(self.free)
 
+    def pool_bytes(self) -> int:
+        return int(self.k.size * self.k.dtype.itemsize
+                   + self.v.size * self.v.dtype.itemsize)
+
     def utilization(self) -> float:
-        """Fraction of allocated slots actually holding tokens (1 - frag)."""
+        """Fraction of allocated slots actually holding tokens (1 - frag).
+        Capped at 1: windowed requests count absolute ``lengths`` but only
+        hold their live (in-window) blocks."""
         used_blocks = self.blocks_in_use()
         if used_blocks == 0:
             return 1.0
         toks = int(self.lengths.sum())
-        return toks / (used_blocks * self.block_size)
+        return min(1.0, toks / (used_blocks * self.block_size))
 
 
 def init_paged(cfg: ModelConfig, max_batch: int, n_blocks: int,
@@ -67,7 +88,7 @@ def init_paged(cfg: ModelConfig, max_batch: int, n_blocks: int,
     hd = cfg.resolved_head_dim
     L, KV = cfg.num_layers, cfg.num_kv_heads
     max_blocks = -(-max_len // block_size)
-    shape = (L, n_blocks, block_size, KV, hd)
+    shape = (L, n_blocks, KV, block_size, hd)
     return PagedState(
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
         block_tables=np.full((max_batch, max_blocks), -1, np.int32),
@@ -79,24 +100,42 @@ class OutOfBlocks(RuntimeError):
     pass
 
 
-def allocate(state: PagedState, slot: int, n_tokens: int):
+def allocate(state: PagedState, slot: int, n_tokens: int,
+             window: Optional[int] = None):
     """Ensure ``slot`` has blocks for lengths[slot] + n_tokens tokens.
 
-    Raises OutOfBlocks — WITHOUT mutating any state — when the pool has
-    too few free blocks or the slot's block-table row is full (the
-    request's context exceeds ``max_len``)."""
-    need_total = int(state.lengths[slot]) + n_tokens
-    have = int((state.block_tables[slot] >= 0).sum())
-    need_blocks = -(-need_total // state.block_size) - have
-    if have + need_blocks > state.block_tables.shape[1]:
+    Column-indexed: position ``p`` lives in table column ``p // bs``, so a
+    row with leading holes (sliding-window freeing) only allocates the
+    columns the new tokens actually land in. With ``window``, columns
+    already fully OUT of the attention window after the write are never
+    allocated at all — a long prompt admitted into a window-sized pool
+    only claims its live suffix (plus the current write head), never
+    transient full-prompt residency. Raises OutOfBlocks — WITHOUT
+    mutating any state — when the pool has too few free blocks or the
+    needed column exceeds the table row (context > ``max_len``)."""
+    if n_tokens <= 0:
+        return
+    bs = state.block_size
+    start = int(state.lengths[slot])
+    first_col = start // bs
+    last_col = (start + n_tokens - 1) // bs
+    if window is not None:
+        # same dead-column rule as free_out_of_window at the post-write
+        # length: the next query (pos start+n_tokens) attends kpos >
+        # start+n_tokens-window only
+        dead = (start + n_tokens - window + 1) // bs
+        first_col = max(first_col, min(dead, last_col))
+    if last_col >= state.block_tables.shape[1]:
         raise OutOfBlocks(
-            f"slot {slot} block table full: needs {have + need_blocks} "
-            f"entries, table holds {state.block_tables.shape[1]}")
-    if need_blocks > len(state.free):
+            f"slot {slot} block table full: needs column {last_col}, "
+            f"table holds {state.block_tables.shape[1]}")
+    missing = [c for c in range(first_col, last_col + 1)
+               if state.block_tables[slot, c] < 0]
+    if len(missing) > len(state.free):
         raise OutOfBlocks(
-            f"need {need_blocks} blocks, {len(state.free)} free")
-    for i in range(need_blocks):
-        state.block_tables[slot, have + i] = state.free.pop()
+            f"need {len(missing)} blocks, {len(state.free)} free")
+    for c in missing:
+        state.block_tables[slot, c] = state.free.pop()
 
 
 def free_slot(state: PagedState, slot: int):
@@ -107,38 +146,141 @@ def free_slot(state: PagedState, slot: int):
     state.lengths[slot] = 0
 
 
+def free_out_of_window(state: PagedState, slot: int, window: int) -> int:
+    """Sliding-window reclamation: return the leading blocks of ``slot``
+    whose every token has fallen out of the attention window.
+
+    The next query sits at position ``lengths[slot]`` and attends keys
+    with position > ``lengths[slot] - window`` (see layers._attn_mask), so
+    table column c is dead once ``(c+1)*bs - 1 <= lengths[slot] - window``.
+    Dead columns become holes (-1) that the masked attention never reads
+    and column-indexed ``allocate`` never refills. Returns #blocks freed.
+
+    Called per slot per decode step, so it must not rescan history: dead
+    columns below the newly-dead ones are already holes (freed earlier or
+    window-skipped at allocation), hence the backward scan stops at the
+    first hole — O(newly dead + 1) per call, O(1) amortized.
+    """
+    bs = state.block_size
+    n_dead = min(max((int(state.lengths[slot]) - window + 1) // bs, 0),
+                 state.block_tables.shape[1])
+    freed = 0
+    for c in range(n_dead - 1, -1, -1):
+        b = int(state.block_tables[slot, c])
+        if b < 0:
+            break
+        state.free.append(b)
+        state.block_tables[slot, c] = -1
+        freed += 1
+    return freed
+
+
 def write_tokens(state: PagedState, slot: int, k_new, v_new):
     """Append k/v for S new tokens of one request (k_new/v_new:
     [L, S, KV, hd]). Requires allocate() first."""
     return write_tokens_batch(state, [slot], k_new[:, None], v_new[:, None])
 
 
-def write_tokens_batch(state: PagedState, slots, k_new, v_new):
-    """Append k/v for S new tokens of G requests in ONE pool scatter.
+def write_tokens_batch(state: PagedState, slots, k_new, v_new,
+                       lengths: Optional[Sequence[int]] = None):
+    """Append k/v for up to S new tokens of G requests in ONE pool scatter.
 
-    k_new/v_new: [L, G, S, KV, hd] (same S per request — the engine's
-    same-length prefill groups). A functional ``.at[].set`` copies the
-    whole pool, so batching a G-request admission wave into one scatter
-    per pool costs 2 copies instead of 2·G. Requires allocate() first.
+    k_new/v_new: [L, G, S, KV, hd] — S is the (possibly padded) group
+    length; ``lengths`` gives each request's TRUE new-token count (default
+    S for all). Rows are padded to a shared S by the engine's power-of-two
+    prefill buckets; pad positions scatter to an out-of-range block index
+    and are dropped, so one executable serves the whole bucket.
+
+    A functional ``.at[].set`` copies the whole pool, so batching a
+    G-request admission wave into one scatter per pool costs 2 copies
+    instead of 2·G. Requires allocate() first (for the true lengths).
     Returns the updated (functional) device arrays stored back into
     ``state``.
     """
     L, G, S = k_new.shape[:3]
     bs = state.block_size
+    if lengths is None:
+        lengths = [S] * G
+    n_pool = state.n_blocks
+    max_col = state.block_tables.shape[1] - 1
     blocks, offs = [], []
-    for slot in slots:
+    for slot, n in zip(slots, lengths):
         start = int(state.lengths[slot])
         pos = np.arange(start, start + S)
-        blocks.append(state.block_tables[slot, pos // bs])
+        cols = np.minimum(pos // bs, max_col)
+        blk = state.block_tables[slot, cols]
+        # dropped: pad positions (>= n) AND unallocated columns (window-
+        # skipped prefill prefixes; -1 would WRAP, not drop)
+        blk = np.where((np.arange(S) < n) & (blk >= 0), blk, n_pool)
+        blocks.append(blk)
         offs.append(pos % bs)
-        state.lengths[slot] = start + S
+        state.lengths[slot] = start + n
     bidx = jnp.asarray(np.concatenate(blocks), jnp.int32)   # [G*S]
     oidx = jnp.asarray(np.concatenate(offs), jnp.int32)
-    kf = k_new.reshape(L, G * S, *k_new.shape[3:])
-    vf = v_new.reshape(L, G * S, *v_new.shape[3:])
-    # scatter: k[:, blocks[t], offs[t]] = k_new[:, t]
-    state.k = state.k.at[:, bidx, oidx].set(kf.astype(state.k.dtype))
-    state.v = state.v.at[:, bidx, oidx].set(vf.astype(state.v.dtype))
+    # pool is [L, n_blocks, KV, bs, hd]: advanced indices at axes 1 and 3
+    # move to the front, so updates are laid out [G*S, L, KV, hd]
+    kf = k_new.reshape(L, G * S, *k_new.shape[3:]).transpose(1, 0, 2, 3)
+    vf = v_new.reshape(L, G * S, *v_new.shape[3:]).transpose(1, 0, 2, 3)
+    state.k = state.k.at[:, bidx, :, oidx].set(kf.astype(state.k.dtype),
+                                               mode="drop")
+    state.v = state.v.at[:, bidx, :, oidx].set(vf.astype(state.v.dtype),
+                                               mode="drop")
+    return state
+
+
+def export_blocks(state: PagedState, slot: int) -> Dict:
+    """Serialize one request's KV to the block-granular migration wire
+    format (DESIGN.md §block-migration): the live block-table COLUMNS
+    (absolute position // block_size — holes from sliding-window freeing
+    are preserved), the pool blocks at those columns as host arrays, and
+    the token count. Does NOT free the source blocks — callers pair this
+    with ``free_slot`` once the payload is safely away.
+    """
+    cols = np.nonzero(state.block_tables[slot] >= 0)[0].astype(np.int32)
+    if len(cols):
+        ids = jnp.asarray(state.block_tables[slot, cols], jnp.int32)
+        k = np.asarray(state.k[:, ids])        # [L, n, KV, bs, hd]
+        v = np.asarray(state.v[:, ids])
+    else:
+        L, _, KV, bs, hd = state.k.shape
+        k = np.zeros((L, 0, KV, bs, hd), state.k.dtype)
+        v = np.zeros((L, 0, KV, bs, hd), state.v.dtype)
+    return {"cols": cols, "k": k, "v": v,
+            "length": int(state.lengths[slot]),
+            "block_size": state.block_size,
+            "nbytes": int(k.nbytes + v.nbytes)}
+
+
+def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
+    """Materialize an exported request into ``slot`` of (another) pool:
+    allocate fresh pool blocks, rebind them at the SAME table columns
+    (absolute positions are preserved, so RoPE/window masking and the
+    counter-based sampling replay are untouched), and scatter the block
+    data in. Raises OutOfBlocks without mutating state when the pool or
+    the table row can't hold the payload."""
+    if payload["block_size"] != state.block_size:
+        raise ValueError(
+            f"block_size mismatch: payload {payload['block_size']} "
+            f"vs pool {state.block_size}")
+    if (state.block_tables[slot] >= 0).any():
+        raise ValueError(f"import into non-empty slot {slot}")
+    cols = np.asarray(payload["cols"], np.int64)
+    n = len(cols)
+    if n > len(state.free):
+        raise OutOfBlocks(f"import needs {n} blocks, {len(state.free)} free")
+    if n and int(cols.max()) >= state.block_tables.shape[1]:
+        raise OutOfBlocks(
+            f"import needs column {int(cols.max())}, table holds "
+            f"{state.block_tables.shape[1]}")
+    ids = [state.free.pop() for _ in range(n)]
+    state.block_tables[slot, cols] = np.asarray(ids, np.int32)
+    state.lengths[slot] = payload["length"]
+    if n:
+        idx = jnp.asarray(ids, jnp.int32)
+        state.k = state.k.at[:, idx].set(
+            jnp.asarray(payload["k"]).astype(state.k.dtype))
+        state.v = state.v.at[:, idx].set(
+            jnp.asarray(payload["v"]).astype(state.v.dtype))
     return state
 
 
@@ -149,11 +291,11 @@ def gather_request(state: PagedState, slot: int, max_len: int):
     n_blk = -(-max_len // bs)
     tbl = state.block_tables[slot, :n_blk]
     tbl = np.where(tbl >= 0, tbl, 0)
-    k = state.k[:, jnp.asarray(tbl, jnp.int32)]      # [L, n_blk, bs, KV, hd]
+    k = state.k[:, jnp.asarray(tbl, jnp.int32)]      # [L, n_blk, KV, bs, hd]
     v = state.v[:, jnp.asarray(tbl, jnp.int32)]
-    L, _, _, KV, hd = state.k.shape
-    k = k.reshape(L, n_blk * bs, KV, hd)[:, :max_len]
-    v = v.reshape(L, n_blk * bs, KV, hd)[:, :max_len]
+    L, _, KV, _, hd = state.k.shape
+    k = k.transpose(0, 1, 3, 2, 4).reshape(L, n_blk * bs, KV, hd)[:, :max_len]
+    v = v.transpose(0, 1, 3, 2, 4).reshape(L, n_blk * bs, KV, hd)[:, :max_len]
     return k, v
 
 
@@ -167,7 +309,7 @@ def paged_attention_ref(q, state: PagedState, slots, *, layer: int):
     """
     import math
     B, H, hd = q.shape
-    KV = state.k.shape[3]
+    KV = state.k.shape[2]
     bs = state.block_size
     rep = H // KV
     slots = list(slots)
@@ -175,8 +317,10 @@ def paged_attention_ref(q, state: PagedState, slots, *, layer: int):
     n_blk = max(1, -(-int(lens.max()) // bs))
     tbl = state.block_tables[slots, :n_blk]
     tbl = jnp.asarray(np.where(tbl >= 0, tbl, 0), jnp.int32)
-    k = state.k[layer][tbl].reshape(B, n_blk * bs, KV, hd)
-    v = state.v[layer][tbl].reshape(B, n_blk * bs, KV, hd)
+    k = state.k[layer][tbl]                          # [B, n_blk, KV, bs, hd]
+    v = state.v[layer][tbl]
+    k = k.transpose(0, 1, 3, 2, 4).reshape(B, n_blk * bs, KV, hd)
+    v = v.transpose(0, 1, 3, 2, 4).reshape(B, n_blk * bs, KV, hd)
     kh = jnp.repeat(k, rep, axis=2).astype(jnp.float32)  # [B, S, H, hd]
     vh = jnp.repeat(v, rep, axis=2).astype(jnp.float32)
     s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),

@@ -80,8 +80,8 @@ def test_paged_gather_matches_written():
 def _raw_state(lens, *, n_blocks=16, bs=8, KV=2, hd=64, dtype=jnp.float32):
     """Pool built without a config — lets tests pick H != KV freely."""
     state = PK.PagedState(
-        k=jnp.zeros((1, n_blocks, bs, KV, hd), dtype),
-        v=jnp.zeros((1, n_blocks, bs, KV, hd), dtype),
+        k=jnp.zeros((1, n_blocks, KV, bs, hd), dtype),   # KV-head-major
+        v=jnp.zeros((1, n_blocks, KV, bs, hd), dtype),
         block_tables=np.full((len(lens), -(-max(lens) // bs) + 1), -1,
                              np.int32),
         lengths=np.zeros((len(lens),), np.int32),

@@ -1,0 +1,357 @@
+"""Live module scaling: orchestrator control loop, KV-block migration
+determinism, sliding-window paged reclamation, prefill bucketing.
+
+The acceptance scenario of the ISSUE-2 tentpole: under a burst the
+orchestrator scales UP (replication plan applied to live instances) and
+scales DOWN by migrating KV blocks off an instance — zero dropped
+requests, token-identical output for every migrated stream."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.migration import estimate_cost
+from repro.core.monitor import MetricsSnapshot
+from repro.models import transformer as T
+from repro.serving import paged_kv as PK
+from repro.serving.engine import Engine, Request
+from repro.serving.orchestrator import Orchestrator
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    return cfg, params
+
+
+def _reference_outputs(cfg, params, requests):
+    """Unmigrated oracle: each request solo on a fresh paged engine."""
+    out = {}
+    for r in requests:
+        e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+        e.submit(dataclasses.replace(
+            r, generated=[], slot=None, submit_time=0.0,
+            first_token_time=None, finish_time=None, preemptions=0))
+        out[r.rid] = e.run_until_done()[0].generated
+    return out
+
+
+# ------------------------------------------------- block export / import
+def test_export_import_blocks_roundtrip(tiny):
+    cfg, _ = tiny
+    src = PK.init_paged(cfg, 2, 16, block_size=8, dtype="float32",
+                        max_len=64)
+    dst = PK.init_paged(cfg, 2, 16, block_size=8, dtype="float32",
+                        max_len=64)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(L, 13, KV, hd)), jnp.float32)
+    PK.allocate(src, 0, 13)
+    src = PK.write_tokens(src, 0, k, k * 2)
+    before_k, before_v = PK.gather_request(src, 0, 13)
+    payload = PK.export_blocks(src, 0)
+    assert payload["length"] == 13 and len(payload["cols"]) == 2
+    PK.import_blocks(dst, 1, payload)
+    PK.free_slot(src, 0)
+    after_k, after_v = PK.gather_request(dst, 1, 13)
+    np.testing.assert_array_equal(np.asarray(before_k), np.asarray(after_k))
+    np.testing.assert_array_equal(np.asarray(before_v), np.asarray(after_v))
+    assert int(dst.lengths[1]) == 13
+    assert src.blocks_in_use() == 0
+    # destination too small: refuses WITHOUT corrupting state
+    small = PK.init_paged(cfg, 1, 1, block_size=8, dtype="float32",
+                          max_len=64)
+    with pytest.raises(PK.OutOfBlocks):
+        PK.import_blocks(small, 0, payload)
+    assert small.blocks_in_use() == 0
+
+
+def test_migrate_blocks_cost_model(tiny):
+    """migrate_blocks (the pool-slice extension of migrate_by_path) moves
+    the right bytes and its measured time matches the calibrated
+    estimate_cost (core.migration.fit_migration_model — shared with
+    benchmarks/module_scaling_bench.py) within 2x: Table-2 acceptance."""
+    from repro.core.migration import fit_migration_model, \
+        probe_block_migration
+    cfg, _ = tiny
+    fit = fit_migration_model(cfg, block_size=8, small_tokens=16,
+                              large_tokens=512)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    assert fit["probe_large"]["bytes"] == 2 * L * 512 * KV * hd * 4
+    t_mid, b_mid = probe_block_migration(cfg, 128, block_size=8)
+    est = estimate_cost(b_mid, fit["bandwidth_Bps"],
+                        fixed_overhead_s=fit["fixed_overhead_s"])
+    assert 0.5 * est <= t_mid <= 2.0 * est, \
+        f"measured {t_mid:.6f}s vs estimate {est:.6f}s"
+
+
+# --------------------------------------------------- migration determinism
+@pytest.mark.parametrize("temperature,top_k", [(0.0, 0), (0.8, 16)])
+def test_migration_token_identical(tiny, temperature, top_k):
+    """Start decoding on instance A, migrate mid-stream to instance B:
+    the full token sequence equals the unmigrated run — greedy AND
+    sampled (counter-based Gumbel keys travel with the request)."""
+    cfg, params = tiny
+    reqs = [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                    max_new_tokens=10, temperature=temperature,
+                    top_k=top_k, seed=7 + i) for i in range(2)]
+    ref = _reference_outputs(cfg, params, reqs)
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)  # control loop quiesced
+    for r in reqs:
+        orch._home[r.rid] = 0
+        orch.engines[0].submit(r)               # force both onto A
+    for _ in range(4):                          # decode a few tokens on A
+        orch.step()
+    assert all(len(r.generated) >= 2 for r in reqs)
+    recs = orch.migrate_requests(0, 1)
+    assert len(recs) == 2 and all(r.resumed for r in recs)
+    assert not orch.engines[0].active
+    assert orch.engines[0].pstate.blocks_in_use() == 0   # nothing leaked
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+
+
+def test_migration_full_destination_replays(tiny):
+    """Destination pool too small for the blocks: the request is
+    re-queued there (never dropped) and the replayed continuation is
+    still token-identical."""
+    cfg, params = tiny
+    req = Request(rid=0, prompt=np.arange(2, 18, dtype=np.int32),
+                  max_new_tokens=8)
+    ref = _reference_outputs(cfg, params, [req])
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=1,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)
+    orch.engines[0].submit(req)
+    for _ in range(3):
+        orch.step()
+    # shrink B's pool under the payload size: resume must fail cleanly
+    orch.engines[1].pstate.free = orch.engines[1].pstate.free[:1]
+    recs = orch.migrate_requests(0, 1)
+    assert len(recs) == 1 and not recs[0].resumed
+    assert len(orch.engines[1].queue) == 1
+    orch.engines[1].pstate.free = list(range(24))  # pool recovers
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+
+
+# ------------------------------------------------- end-to-end scaling demo
+def test_burst_scale_up_then_drain_scale_down(tiny):
+    """The ISSUE acceptance scenario: burst -> controller scale-up
+    (replication degrees live on every instance) -> drain -> scale-down
+    KV-block migration off an instance. Zero drops, token-identical
+    outputs for every migrated request."""
+    cfg, params = tiny
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=32,
+                        slo_latency=30.0, telemetry_every=2)
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=6 + i % 5).astype(np.int32),
+                    max_new_tokens=8) for i in range(10)]
+    for r in reqs[:6]:          # the burst wave
+        orch.submit(r)
+    for _ in range(12):
+        orch.step()
+    # scale-up happened and reached the LIVE engines
+    assert any(a.startswith("scale-up") for a in orch.controller.log)
+    assert sum(orch.plan.p) > cfg.num_layers
+    for eng in orch.engines:
+        assert eng.replication_degrees == tuple(orch.plan.p)
+
+    for r in reqs[6:]:          # tail traffic, then consolidate
+        orch.submit(r)
+    for _ in range(3):
+        orch.step()
+    src = max(range(2), key=lambda i: len(orch.engines[i].active))
+    if orch.engines[src].active:
+        recs = orch.drain_instance(src)
+        assert recs, "drain moved no requests"
+        assert not orch.engines[src].active
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+
+    assert len(done) + len({r.rid for r in orch.finished} - set(done)) \
+        >= len(reqs)  # every submitted request finished somewhere
+    assert orch.dropped == 0
+    migrated = {m.rid for m in orch.migrations}
+    assert migrated, "scenario exercised no migration"
+    all_done = {r.rid: r.generated for r in orch.finished}
+    ref = _reference_outputs(cfg, params,
+                             [r for r in reqs if r.rid in migrated])
+    for rid in migrated:
+        assert all_done[rid] == ref[rid], f"rid {rid} diverged"
+
+
+def test_controller_scale_down_triggers_block_migration(tiny):
+    """A violation snapshot drives Controller -> ScaleDownResult
+    .migrations -> orchestrator executes REAL block transfers."""
+    cfg, params = tiny
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=32,
+                        slo_latency=5.0, telemetry_every=10_000)
+    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                  max_new_tokens=16)
+    orch.engines[0].submit(req)
+    orch._home[0] = 0
+    for _ in range(3):
+        orch.step()
+    # inject a violating snapshot: instance 0 hot, instance 1 idle
+    orch.controller.observe(MetricsSnapshot(
+        t=orch.engines[0].clock, slo_violation_rate=1.0,
+        device_util=[1.0, 0.0], device_mem_frac=[0.9, 0.0],
+        block_vacancy=[0.1, 1.0]))
+    action = orch.controller.tick()
+    assert action and action.startswith("scale-down")
+    assert orch.controller.last_scale_down.migrations
+    orch._execute_scale_down()
+    assert orch.migrations and orch.migrations[0].src == 0
+    assert len(orch.engines[1].active) == 1
+    done = orch.run_until_done()
+    assert {r.rid for r in done} == {0}
+    assert orch.dropped == 0
+
+
+# ------------------------------------------------- sliding-window + paged
+def test_swa_paged_matches_dense_across_window_boundary(tiny):
+    """Sliding-window archs now run PAGED: ragged prompt lengths decode
+    across the window boundary with outputs identical to the dense ring
+    buffer, while out-of-window blocks return to the pool."""
+    cfg, params = tiny
+    swa_cfg = dataclasses.replace(cfg, sliding_window=16)
+    rng = np.random.default_rng(4)
+    # ragged lengths straddling the window: some prompts shorter than the
+    # window, one longer; generation crosses the boundary for all
+    prompts = [rng.integers(2, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (6, 11, 20)]
+
+    def run(kind):
+        e = Engine(swa_cfg, params, max_batch=2, max_len=64, swa=True,
+                   cache_kind=kind,
+                   **({"block_size": 4} if kind == "paged" else {}))
+        for i, p in enumerate(prompts):
+            e.submit(Request(rid=i, prompt=p, max_new_tokens=10))
+        done = e.run_until_done()
+        return {r.rid: r.generated for r in done}, e
+
+    dense, _ = run("dense")
+    paged, eng = run("paged")
+    assert paged == dense
+    assert eng.pstate.blocks_in_use() == 0    # all blocks returned
+    assert eng.window == 16
+
+
+def test_swa_paged_admits_prompt_longer_than_window(tiny):
+    """A prompt far longer than the window fits a WINDOW-SIZED pool: only
+    the live suffix is allocated/written at admission (out-of-window
+    columns are skipped, not transiently resident), and the output still
+    matches the dense ring buffer."""
+    cfg, params = tiny
+    swa_cfg = dataclasses.replace(cfg, sliding_window=16)
+    prompt = np.asarray(
+        np.random.default_rng(8).integers(2, cfg.vocab_size, size=40),
+        np.int32)
+
+    def run(kind, **kw):
+        e = Engine(swa_cfg, params, max_batch=1, max_len=64, swa=True,
+                   cache_kind=kind, **kw)
+        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+        return e.run_until_done()[0].generated, e
+
+    # default n_blocks is window-sized (5 blocks at block_size=4): the
+    # 40-token prompt only ever claims its in-window columns
+    paged, eng = run("paged", block_size=4)
+    assert eng.pstate.n_blocks < -(-(len(prompt) + 1) // 4)
+    dense, _ = run("dense")
+    assert paged == dense
+    assert eng.pstate.blocks_in_use() == 0
+
+
+def test_swa_paged_frees_leading_blocks(tiny):
+    """The reclamation itself: with window 8 and block_size 4, a long
+    generation holds a BOUNDED number of live blocks while the block
+    table keeps absolute-position columns (leading holes)."""
+    cfg, params = tiny
+    swa_cfg = dataclasses.replace(cfg, sliding_window=8)
+    e = Engine(swa_cfg, params, max_batch=1, max_len=64, swa=True,
+               cache_kind="paged", block_size=4, n_blocks=16)
+    e.submit(Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                     max_new_tokens=24))
+    max_live = 0
+    while e.queue or e.active:
+        e.step()
+        max_live = max(max_live, e.pstate.blocks_in_use())
+    # window 8 spans <= 3 live blocks (+1 write headroom)
+    assert max_live <= 4, f"held {max_live} blocks for window 8"
+    assert e.pstate.blocks_in_use() == 0
+
+
+# --------------------------------------------------- prefill pow2 buckets
+def test_prefill_bucketing_bounds_executables(tiny):
+    """Admission compiles one executable per power-of-two bucket, not one
+    per (group, prompt-len) pair — and outputs still match dense."""
+    cfg, params = tiny
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(2, cfg.vocab_size, size=s).astype(np.int32)
+               for s in (5, 6, 7, 8, 9, 11, 13, 15)]
+
+    def run(kind):
+        e = Engine(cfg, params, max_batch=8, max_len=64, cache_kind=kind,
+                   **({"block_size": 8} if kind == "paged" else {}))
+        for i, p in enumerate(prompts):
+            e.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        done = e.run_until_done()
+        return {r.rid: r.generated for r in done}, e
+
+    paged, eng = run("paged")
+    dense, _ = run("dense")
+    assert paged == dense
+    # 8 distinct lengths, all admitted in one wave, collapse to exactly
+    # two padded shapes: (4, 8) for lengths 5-8 and (4, 16) for 9-15
+    shapes = eng._prefill_shapes
+    assert len(shapes) <= 2, f"bucketing leaked shapes: {shapes}"
+    assert all((S & (S - 1)) == 0 for _, S in shapes), shapes
+
+
+def test_apply_plan_is_token_invariant(tiny):
+    """Replication degrees change WHERE the batch computes, not WHAT:
+    flipping a live engine between scan and unrolled-hook decode steps
+    mid-stream leaves the token stream untouched."""
+    cfg, params = tiny
+    prompt = np.arange(2, 10, dtype=np.int32)
+    ref_e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+    ref_e.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    ref = ref_e.run_until_done()[0].generated
+
+    e = Engine(cfg, params, max_batch=1, max_len=64, cache_kind="paged",
+               block_size=8)
+    e.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    out = []
+    for i in range(40):
+        if i == 3:      # scale up mid-decode
+            e.apply_plan([2] * cfg.num_layers)
+            assert e._step_degrees is not None
+        if i == 6:      # and back down
+            e.apply_plan([1] * cfg.num_layers)
+            assert e._step_degrees is None
+        out += e.step() or []
+        if not (e.queue or e.active):
+            break
+    assert out[0].generated == ref
+    with pytest.raises(ValueError):
+        Engine(cfg, params, max_batch=1, max_len=64).apply_plan(
+            [2] * cfg.num_layers)
