@@ -9,8 +9,9 @@ def main() -> None:
     from benchmarks import (ablations, fig6_replication, fig8_single,
                             fig9_memory, fig10_multi, fig11_robustness,
                             kernels_bench, module_scaling_bench,
-                            paged_engine_bench, roofline, speedup_model,
-                            table1_modules, table2_scaling_cost)
+                            paged_engine_bench, prefix_sharing_bench,
+                            roofline, speedup_model, table1_modules,
+                            table2_scaling_cost)
     suites = [
         ("table1", table1_modules),
         ("table2", table2_scaling_cost),
@@ -23,6 +24,7 @@ def main() -> None:
         ("ablations", ablations),
         ("kernels", kernels_bench),
         ("paged_engine", paged_engine_bench),
+        ("prefix_sharing", prefix_sharing_bench),
         ("module_scaling", module_scaling_bench),
         ("roofline", roofline),
     ]

@@ -148,10 +148,16 @@ def migrate_blocks(src_state, dst_state, src_slot: int, dst_slot: int, *,
                    measure: bool = False):
     """Block-granular migration of ONE live request between two engines'
     pools (CoCoServe scale-down / rebalance): export the request's blocks
-    from ``src_state`` (serving/paged_kv.export_blocks wire format), free
-    them at the source, and rebind them into ``dst_state`` at the same
-    block-table columns — absolute positions, and therefore RoPE, window
-    masking and counter-based sampling replay, are preserved.
+    from ``src_state`` (serving/paged_kv.export_blocks wire format),
+    release them at the source, and rebind them into ``dst_state`` at the
+    same block-table columns — absolute positions, and therefore RoPE,
+    window masking and counter-based sampling replay, are preserved.
+
+    Prefix-shared (refcount > 1) source blocks are handled by the wire
+    format itself: the payload MATERIALIZES their content (refcounts
+    never cross pools) and carries their prefix keys, so the destination
+    imports self-contained owned blocks, re-seeds its own prefix cache,
+    and the source's co-holders keep their blocks (free_slot is a decref).
 
     Returns (payload, MigrationCost). Raises paged_kv.OutOfBlocks without
     touching the source when the destination can't hold the payload.

@@ -27,6 +27,11 @@ class MetricsSnapshot:
     block_vacancy: Optional[List[float]] = None     # 0..1 free pool fraction
     step_seconds: float = 0.0                       # mean wall s per step
     preemptions: int = 0                            # pool-pressure evictions
+    # --- prefix sharing (the vacancy signal already reflects sharing:
+    # aliased blocks never leave the free count; these gauges say how much
+    # of that vacancy copy-on-write sharing is buying) ---
+    prefix_hit_rate: float = 0.0    # hit fraction of prompt-block lookups
+    blocks_saved: int = 0           # physical blocks saved NOW by sharing
 
 
 class Monitor:
@@ -71,6 +76,20 @@ class Monitor:
         if snap is None or not snap.block_vacancy:
             return 1.0
         return sum(snap.block_vacancy) / len(snap.block_vacancy)
+
+    def prefix_hit_rate(self) -> float:
+        """Latest prompt-prefix cache hit rate across the fleet — how
+        much of the admission load the block pool absorbs by aliasing
+        instead of re-prefilling (0 when sharing is off or unexercised)."""
+        snap = self.latest
+        return snap.prefix_hit_rate if snap is not None else 0.0
+
+    def blocks_saved_by_sharing(self) -> int:
+        """Physical pool blocks currently saved by copy-on-write sharing
+        (summed over instances) — the headroom sharing adds to the
+        vacancy signal the §5 controller scales on."""
+        snap = self.latest
+        return snap.blocks_saved if snap is not None else 0
 
     def pool_pressure(self) -> bool:
         """OOM-analogue of the live loop: a preemption (a request evicted

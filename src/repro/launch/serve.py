@@ -106,6 +106,8 @@ def main(argv=None):
     s = orch.stats()
     print(f"[serve] instances={args.instances} dropped={s['dropped']} "
           f"migrations={s['migrations']} preemptions={s['preemptions']}")
+    print(f"[serve] prefix sharing: hit_rate={s['prefix_hit_rate']:.2f} "
+          f"blocks_saved_now={s['blocks_saved_now']}")
     print(f"[serve] final plan P (first 8): {orch.plan.p[:8]}, "
           f"continuity breaks: {orch.plan.continuity_breaks()}")
     return len(orch.finished)

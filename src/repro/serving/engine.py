@@ -7,14 +7,22 @@ primary decode path (``cache_kind="paged"``):
   POWER-OF-TWO length bucket, batching the whole bucket from the queue
   into one forward call (per-row last-token gather picks each prompt's
   real logits), then scatters each request's true-length K/V into the
-  shared block pool via ``paged_kv.write_tokens_batch``. Block
+  shared block pool via ``paged_kv.write_tokens_batch``. PREFIX SHARING
+  (on by default, ``prefix_sharing=``): an admission whose prompt opens
+  with an already-cached full-block prefix ALIASES those blocks
+  (refcounted, copy-on-write — paged_kv's prefix cache) and prefills
+  only its private suffix against the spliced shared context
+  (``_prefill_shared``), so a shared system prompt is stored and
+  prefilled once per pool, not once per request. Block
   allocation/eviction is driven by the host-side free list — admission
   applies backpressure (requests wait in the queue) when the pool is out
   of blocks, and decode-time pressure preempts the youngest request back
   onto the queue (its re-admission replays deterministically thanks to
-  counter-based sampling keys). Sliding-window archs run paged too:
-  blocks that fall fully out of the window return to the pool
-  (``paged_kv.free_out_of_window``).
+  counter-based sampling keys; shared blocks merely decref). Sliding-
+  window archs run paged too: blocks that fall fully out of the window
+  return to the pool (``paged_kv.free_out_of_window``) — prefix matching
+  is gated off under a window, whose reclamation invalidates full-prefix
+  residency.
 * **Decode** is ONE fused jitted call per engine step: single-token
   forward against the block pool (``models.transformer.forward_paged``)
   plus batched on-device sampling (``serving.sampling``). The only
@@ -105,6 +113,17 @@ def _extend_fn(params, tokens, positions, cache, *, cfg, window):
                      mode="decode", cache=cache, window=window)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "window"))
+def _extend_last_fn(params, tokens, positions, cache, last_idx, *, cfg,
+                    window):
+    # suffix prefill over an adopted shared prefix (prefix-cache hits):
+    # decode-mode continuation with a per-row last-REAL-token gather so
+    # padded suffix buckets return the right first-token logits
+    return T.forward(params, cfg, tokens, positions=positions,
+                     mode="decode", cache=cache, window=window,
+                     last_idx=last_idx)
+
+
 def _dense_step_impl(params, cache, tokens, positions, temps, topks, seeds,
                      counters, *, cfg, window, stochastic, max_top_k):
     logits, nc, _ = T.forward(params, cfg, tokens, positions=positions,
@@ -171,7 +190,8 @@ class Engine:
                  prefill_chunk: int = 0,
                  cache_kind: str = "dense", block_size: int = 16,
                  n_blocks: Optional[int] = None,
-                 paged_attn_impl: str = "gather", interpret: bool = False):
+                 paged_attn_impl: str = "gather", interpret: bool = False,
+                 prefix_sharing: Optional[bool] = None):
         assert cache_kind in ("dense", "paged"), cache_kind
         self.cfg = cfg
         self.params = params
@@ -199,6 +219,14 @@ class Engine:
         self._admit_order: List[int] = []      # slots, oldest first
         self._admit_finished: List[Request] = []  # done at admission
 
+        # prompt-prefix sharing (paged_kv prefix cache + copy-on-write):
+        # ON by default for the paged path; matching/registration are
+        # additionally gated off per-admission under a sliding window
+        # (whose block reclamation invalidates full-prefix residency)
+        self.prefix_sharing = ((cache_kind == "paged")
+                               if prefix_sharing is None
+                               else bool(prefix_sharing))
+
         if cache_kind == "paged":
             if not cfg.supports_paged_kv:
                 raise ValueError(
@@ -213,7 +241,8 @@ class Engine:
                     n_blocks += max_batch
             self.pstate = PK.init_paged(cfg, max_batch, n_blocks,
                                         block_size=block_size, dtype=dtype,
-                                        max_len=self.max_len)
+                                        max_len=self.max_len,
+                                        prefix_cache=self.prefix_sharing)
             self.cache = None
         else:
             self.cache = T.init_cache(cfg, max_batch, self.max_len, dtype)
@@ -394,15 +423,61 @@ class Engine:
 
         admitted: List[Request] = []
         slot_of: Dict[int, int] = {}
+        ctx_of: Dict[int, int] = {}       # id(req) -> aliased context tokens
+        matched_of: Dict[int, list] = {}  # id(req) -> matched block ids
         for idx, req in enumerate(taken):
             slot = free[len(admitted)]
-            if blocks_needed(req) > len(self.pstate.free):
+            toks = ptoks[id(req)]
+            # prefix-cache lookup BEFORE the backpressure check: a hit
+            # only needs pool capacity for its suffix (aliased blocks are
+            # revived/shared in place, never popped), so a shared-prefix
+            # request admits under pressure that would stall a cold one —
+            # the regime sharing exists for. The adopted context is
+            # capped at S-1 so at least one suffix token remains to
+            # produce first-token logits (a fully-aliased aligned prompt
+            # recomputes its last token — the write into the shared tail
+            # block is what copy-on-write forks).
+            matched = (PK.match_prefix(self.pstate, toks, record=False)
+                       if self.prefix_sharing and not self.window else [])
+            ctx = min(len(matched) * bs, len(toks) - 1)
+            if not (matched and ctx >= 1):
+                matched, ctx = [], 0
+            # blocks_needed covers every prompt column + write headroom
+            # (enough for the worst-case CoW fork too); aliased columns
+            # need no pop, but reviving a cached-free block does consume
+            # a unit of free_block_count
+            revive = sum(1 for b in matched
+                         if int(self.pstate.refcount[b]) == 0)
+            if (blocks_needed(req) - len(matched)
+                    > self.pstate.free_block_count() - revive):
                 # out of blocks: backpressure — requeue IN ORDER and stop
                 for r in reversed(taken[idx:]):
                     self.queue.appendleft(r)
                 break
-            PK.allocate(self.pstate, slot, len(ptoks[id(req)]),
-                        window=self.window)
+            if matched:
+                try:
+                    PK.adopt_prefix(self.pstate, slot, matched, ctx)
+                    PK.allocate(self.pstate, slot, len(toks) - ctx)
+                except PK.OutOfBlocks:
+                    PK.free_slot(self.pstate, slot)   # decref the adoption
+                    for r in reversed(taken[idx:]):
+                        self.queue.appendleft(r)
+                    break
+                ctx_of[id(req)] = ctx
+            else:
+                PK.allocate(self.pstate, slot, len(toks),
+                            window=self.window)
+                if self.prefix_sharing and not self.window:
+                    # publish this prompt's full blocks NOW so wave-mates
+                    # behind it match them: their reads (context gather
+                    # in _prefill_shared) run only after this wave's
+                    # prefill writes, so the content is there by the time
+                    # it's read. Hit requests register AFTER their suffix
+                    # prefill instead — it can still fail (CoW fork under
+                    # pool pressure), and keys must never describe
+                    # unwritten blocks.
+                    PK.register_prefix(self.pstate, slot, toks)
+            matched_of[id(req)] = matched
             slot_of[id(req)] = slot
             admitted.append(req)
         # group prompts into power-of-two LENGTH BUCKETS (pad + per-row
@@ -413,6 +488,8 @@ class Engine:
         # prefill keeps exact lengths (chunking already bounds shapes).
         groups: Dict[int, List[Request]] = {}
         for req in admitted:
+            if id(req) in ctx_of:
+                continue        # prefix-cache hit: suffix-only path below
             S = len(ptoks[id(req)])
             Sb = S if self.prefill_chunk else _pow2_at_least(S)
             groups.setdefault(Sb, []).append(req)
@@ -432,13 +509,91 @@ class Engine:
                 lengths=lens)
             for i, req in enumerate(reqs):
                 first_of[id(req)] = None if req.generated else firsts[i]
+        failed: List[Request] = []
+        for req in admitted:        # cache hits: prefill the suffix only
+            if id(req) not in ctx_of:
+                continue
+            try:
+                logits = self._prefill_shared(req, slot_of[id(req)],
+                                              ptoks[id(req)],
+                                              ctx_of[id(req)])
+            except PK.OutOfBlocks:
+                # a copy-on-write fork found no free block (wave-mates
+                # consumed the headroom): release — nothing was written
+                # or registered for this request — and retry next step
+                PK.free_slot(self.pstate, slot_of[id(req)])
+                failed.append(req)
+                continue
+            if self.prefix_sharing and not self.window:
+                PK.register_prefix(self.pstate, slot_of[id(req)],
+                                   ptoks[id(req)])
+            first_of[id(req)] = (None if req.generated
+                                 else self._sample_batch(logits, [req])[0])
+        if failed:
+            for r in reversed(failed):      # preserve submission order
+                self.queue.appendleft(r)
+            failed_ids = {id(r) for r in failed}
+            admitted = [r for r in admitted if id(r) not in failed_ids]
         for req in admitted:
+            if self.prefix_sharing and not self.window:
+                # gauge bookkeeping once per SUCCESSFUL admission — the
+                # failure exits above (backpressure, fork OutOfBlocks)
+                # never reach here, so retries don't skew the hit rate
+                PK.record_lookup(self.pstate, ptoks[id(req)],
+                                 matched_of[id(req)])
             self._activate(req, slot_of[id(req)], len(ptoks[id(req)]),
                            first_of[id(req)])
         if self.window:
             for req in admitted:
                 if req.slot is not None:  # may have retired at admission
                     PK.free_out_of_window(self.pstate, req.slot, self.window)
+
+    def _prefill_shared(self, req: Request, slot: int, toks, ctx: int):
+        """Suffix-only prefill for a prefix-cache hit: splice the adopted
+        shared blocks' K/V (read straight from the pool) into a throwaway
+        dense cache as attention context, run a decode-mode continuation
+        over just the suffix tokens, and scatter ONLY the suffix K/V back
+        into the pool (the shared span is never re-written). Prefill
+        compute therefore scales with the unshared suffix, not the full
+        prompt. Shapes are power-of-two bucketed (suffix length AND cache
+        capacity) so the executable count stays O(log² max_len)."""
+        S = len(toks)
+        n_new = S - ctx
+        # copy-on-write happens HERE, not at adoption: the suffix write
+        # may land inside the aliased tail block (fully-aliased aligned
+        # prompts recompute their last token), and the fork must copy the
+        # block AFTER the wave's miss-prefills have written it
+        PK.ensure_writable(self.pstate, slot, ctx, n_new)
+        Sb = _pow2_at_least(n_new)
+        cache_len = _pow2_at_least(ctx + Sb)
+        self._prefill_shapes.add((1, Sb))
+        rcache = T.init_cache(self.cfg, 1, cache_len, self.dtype)
+        cb = min(_pow2_at_least(max(ctx, 1)), cache_len)
+        pk, pv = PK.gather_request(self.pstate, slot, cb)
+        rcache["layers"]["k"] = rcache["layers"]["k"].at[:, 0, :cb].set(
+            pk.astype(rcache["layers"]["k"].dtype))
+        rcache["layers"]["v"] = rcache["layers"]["v"].at[:, 0, :cb].set(
+            pv.astype(rcache["layers"]["v"].dtype))
+        # positions: real for the spliced context, poisoned (BIG_POS ->
+        # masked out of attention) for the garbage rows past ctx that the
+        # block-granular gather may have dragged in
+        pos = np.full((1, cache_len), int(T.BIG_POS), np.int32)
+        pos[0, :ctx] = np.arange(ctx)
+        rcache["positions"] = jnp.asarray(pos)
+        suffix = np.zeros((1, Sb), np.int32)
+        suffix[0, :n_new] = toks[ctx:]
+        spos = jnp.broadcast_to(
+            jnp.arange(ctx, ctx + Sb, dtype=jnp.int32), (1, Sb))
+        logits, rcache, _ = _extend_last_fn(
+            self.params, jnp.asarray(suffix), spos, rcache,
+            jnp.asarray([n_new - 1], jnp.int32),
+            cfg=self.cfg, window=self.window)
+        self.pstate = PK.write_tokens_batch(
+            self.pstate, [slot],
+            rcache["layers"]["k"][:, :, ctx:ctx + Sb],
+            rcache["layers"]["v"][:, :, ctx:ctx + Sb],
+            lengths=[n_new])
+        return logits
 
     def _admit(self):
         if self.cache_kind == "paged":
@@ -470,6 +625,12 @@ class Engine:
             while slot in self.active:
                 try:
                     PK.allocate(self.pstate, slot, 1)
+                    if self.prefix_sharing:
+                        # copy-on-write: the fused step scatters this
+                        # slot's next token into column lengths//bs — fork
+                        # it now if it is still shared with another stream
+                        PK.ensure_writable(self.pstate, slot,
+                                           int(self.pstate.lengths[slot]), 1)
                     break
                 except PK.OutOfBlocks:
                     victims = [s for s in self._admit_order
@@ -570,6 +731,15 @@ class Engine:
             self._host_lengths[slot] = 0
             self.cache = KV.evict_request(self.cache, slot)
 
+    def prefix_stats(self) -> dict:
+        """Live prefix-sharing gauges (hit rate, CoW forks, blocks saved)
+        — the telemetry the orchestrator folds into MetricsSnapshot."""
+        if self.cache_kind != "paged":
+            return {"queries": 0, "hits": 0, "hit_rate": 0.0,
+                    "cow_forks": 0, "blocks_saved_total": 0,
+                    "blocks_saved_now": 0, "cached_blocks": 0}
+        return PK.prefix_stats(self.pstate)
+
     def run_until_done(self, max_steps: int = 10_000):
         out = []
         steps = 0
@@ -609,9 +779,12 @@ class Engine:
         serving state: KV blocks (paged_kv.export_blocks wire format),
         position (token count), and the counter-based sampling state —
         which is just (seed, len(generated)), carried by the Request
-        itself. The slot and its blocks are freed; ``resume_request`` on
-        any engine with identical cfg/params continues the stream
-        token-identically."""
+        itself. Shared (refcount > 1) blocks are MATERIALIZED into the
+        payload with their prefix keys, so the export is self-contained;
+        the slot then releases its claim (decref — co-holders of shared
+        blocks are untouched, sole-owned blocks return to the pool).
+        ``resume_request`` on any engine with identical cfg/params
+        continues the stream token-identically."""
         if self.cache_kind != "paged":
             raise ValueError("pause/resume migrates paged KV blocks; "
                              "dense slabs go through core.migration")
@@ -631,10 +804,13 @@ class Engine:
 
     def resume_request(self, payload: dict) -> bool:
         """Rebind a paused request's blocks into this engine's pool and
-        put it back in decode rotation. Returns False — WITHOUT dropping
-        the request or touching the pool — when no slot or not enough
-        blocks are free (the caller re-queues it; counter-based sampling
-        replays the continuation deterministically)."""
+        put it back in decode rotation. Imported blocks arrive OWNED
+        (refcount 1); prefix keys carried in the payload re-seed this
+        pool's cache so later admissions can alias the migrated prompt.
+        Returns False — WITHOUT dropping the request or touching the pool
+        — when no slot or not enough blocks are free (the caller
+        re-queues it; counter-based sampling replays the continuation
+        deterministically)."""
         if self.cache_kind != "paged":
             raise ValueError("resume_request needs a paged engine")
         req = payload["request"]

@@ -40,6 +40,13 @@ class EngineTelemetry:
         self.total_tokens = 0
         self.total_finished = 0
         self.preemptions_seen = 0
+        # prefix-sharing gauges (latest engine counters, not windows):
+        # cumulative cache lookups/hits plus the INSTANTANEOUS number of
+        # physical blocks sharing is saving — the quantity that inflates
+        # the controller's pool-vacancy signal
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.blocks_saved = 0
 
     def record_step(self, wall_s: float, n_tokens: int):
         self.step_seconds.append(wall_s)
@@ -53,6 +60,20 @@ class EngineTelemetry:
 
     def record_preemptions(self, n: int):
         self.preemptions_seen += n
+
+    def record_prefix(self, queries: int, hits: int, blocks_saved_now: int):
+        """Overwrite the sharing gauges with the engine's live counters
+        (queries/hits are cumulative on the engine side; blocks saved is
+        an instantaneous point read)."""
+        self.prefix_queries = queries
+        self.prefix_hits = hits
+        self.blocks_saved = blocks_saved_now
+
+    def prefix_hit_rate(self) -> float:
+        """Fraction of looked-up full prompt blocks served by aliasing an
+        already-resident block instead of re-prefilling it."""
+        return (self.prefix_hits / self.prefix_queries
+                if self.prefix_queries else 0.0)
 
     def tokens_per_s(self) -> float:
         wall = sum(self.step_seconds)

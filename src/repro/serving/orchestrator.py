@@ -8,7 +8,8 @@ deployment's model replicas), routes incoming requests, and every
 1. **telemetry**  — folds each engine's real counters (block-pool
    vacancy, queue depth, per-step wall latency from
    ``serving.instrument.EngineTelemetry``, SLO violations measured on
-   finished requests) into a ``core.monitor.MetricsSnapshot``;
+   finished requests, prefix-sharing hit rate and blocks saved) into a
+   ``core.monitor.MetricsSnapshot``;
 2. **decision**   — runs ``core.controller.Controller.tick()`` (Alg. 1
    scale-up on vacancy, Alg. 2 scale-down on SLO violation / pool
    pressure) against a Cluster whose devices mirror the instances;
@@ -120,7 +121,9 @@ class Orchestrator:
     def submit(self, req: Request):
         """Route to the instance with the most free pool blocks (ties:
         shortest queue, lowest id) — block vacancy is the live resource
-        the paper's admission reasons about."""
+        the paper's admission reasons about. The count includes
+        cached-free blocks (refcount-0 prefix-cache residents): they are
+        evictable on demand, so they ARE vacancy."""
         i = self._route()
         self._home[req.rid] = i
         self.engines[i].submit(req)
@@ -128,7 +131,7 @@ class Orchestrator:
     def _route(self) -> int:
         def score(i: int):
             e = self.engines[i]
-            return (-len(e.pstate.free), len(e.queue), i)
+            return (-e.pstate.free_block_count(), len(e.queue), i)
         return min(range(len(self.engines)), key=score)
 
     # ------------------------------------------------------------ main loop
@@ -163,8 +166,11 @@ class Orchestrator:
     def snapshot(self) -> MetricsSnapshot:
         """Fold live engine counters into the Monitor's schema. All
         quantities are measured, none synthetic: utilization is occupied
-        decode slots, memory is pool blocks in use, latency/SLO come from
-        finished requests' engine-clock timestamps."""
+        decode slots, memory is pool blocks in use (shared blocks counted
+        ONCE — prefix sharing directly inflates the vacancy signal the
+        controller scales on, with prefix_hit_rate/blocks_saved gauges
+        saying how much), latency/SLO come from finished requests'
+        engine-clock timestamps."""
         util, memf, vac = [], [], []
         new_preempts = 0
         for i, eng in enumerate(self.engines):
@@ -175,6 +181,14 @@ class Orchestrator:
             n = eng.preempt_count
             new_preempts += n - self._preempt_seen[i]
             self._preempt_seen[i] = n
+            ps = eng.prefix_stats()
+            self.telemetry[i].record_prefix(ps["queries"], ps["hits"],
+                                            ps["blocks_saved_now"])
+        # fleet sharing gauges are READ BACK from the telemetry mirrors
+        # just written — EngineTelemetry is the metrics source of record
+        pq = sum(t.prefix_queries for t in self.telemetry)
+        ph = sum(t.prefix_hits for t in self.telemetry)
+        saved = sum(t.blocks_saved for t in self.telemetry)
         lats = [t.latency_quantile(0.5) for t in self.telemetry]
         tps = sum(t.tokens_per_s() for t in self.telemetry)
         viol = [t.slo_violation_rate(self.slo_latency)
@@ -189,7 +203,9 @@ class Orchestrator:
             queue_len=sum(len(e.queue) for e in self.engines),
             device_util=util, device_mem_frac=memf, block_vacancy=vac,
             step_seconds=max(t.mean_step_s() for t in self.telemetry),
-            preemptions=new_preempts)
+            preemptions=new_preempts,
+            prefix_hit_rate=ph / pq if pq else 0.0,
+            blocks_saved=saved)
 
     def _sync_cluster(self, snap: MetricsSnapshot):
         for d, u, m in zip(self.cluster.devices, snap.device_util,
@@ -242,7 +258,11 @@ class Orchestrator:
         """Move active requests' KV blocks from instance ``src`` to
         ``dst``, mid-stream. Never drops: a request the destination pool
         can't hold is re-queued there and replays deterministically
-        (counter-based sampling keys)."""
+        (counter-based sampling keys). Requests holding SHARED
+        (refcounted) blocks migrate safely: the export materializes
+        shared content into the payload and carries the prefix keys, so
+        the stream stays token-identical and the destination's prefix
+        cache learns the migrated prompt."""
         seng, deng = self.engines[src], self.engines[dst]
         slots = sorted(seng.active.keys())
         if max_requests is not None:
@@ -287,12 +307,17 @@ class Orchestrator:
 
     # -------------------------------------------------------------- summary
     def stats(self) -> Dict:
+        ps = [e.prefix_stats() for e in self.engines]
+        pq = sum(p["queries"] for p in ps)
+        ph = sum(p["hits"] for p in ps)
         return {
             "finished": len(self.finished),
             "dropped": self.dropped,
             "migrations": len(self.migrations),
             "migrated_bytes": sum(m.bytes_moved for m in self.migrations),
             "preemptions": sum(self._preempt_seen),
+            "prefix_hit_rate": ph / pq if pq else 0.0,
+            "blocks_saved_now": sum(p["blocks_saved_now"] for p in ps),
             "controller_log": list(self.controller.log),
             "plan_p": list(self.plan.p),
         }

@@ -22,15 +22,44 @@ out of the attention window (``free_out_of_window``) — the block table
 keeps holes (-1) at those columns, and allocation is column-indexed so
 holes never get rewritten.
 
+Ownership model (prefix sharing / copy-on-write, vLLM §4.3):
+
+Every block carries a REFERENCE COUNT. A block is in exactly one of four
+states, and every transition goes through ``_incref``/``_decref``:
+
+* **free**      — refcount 0, on ``state.free``; content is garbage.
+* **owned**     — refcount 1, bound in exactly one block table; the owner
+  may write into it (``allocate`` hands blocks out in this state).
+* **shared**    — refcount > 1, bound in several block tables (prompt-
+  prefix aliasing); READ-ONLY: any stream about to write into a shared
+  block must fork it first (``ensure_writable`` — the copy-on-write).
+* **cached-free** — refcount 0 but still holding a registered full
+  prompt block: parked on the LRU ``cached_free`` list, revivable by a
+  later ``match_prefix`` hit, evicted (cache entry dropped) only under
+  allocation pressure.
+
+The prefix cache keys FULL prompt blocks by a content chain hash
+(``H(parent_key, block_tokens)``), so a hit on block c guarantees tokens
+``[0, (c+1)*bs)`` are identical — and, K/V being a deterministic function
+of the token prefix and absolute positions, the cached block's contents
+are exactly what a fresh prefill would recompute. Admissions that hit
+alias the cached blocks instead of re-prefilling them; the engine runs
+prefill only over the suffix.
+
 Division of labour with the engine:
 
-* ``allocate`` / ``free_slot`` / ``free_out_of_window`` run on the HOST
-  free list (no device work);
+* ``allocate`` / ``free_slot`` / ``free_out_of_window`` and the prefix-
+  cache ops (``match_prefix`` / ``adopt_prefix`` / ``register_prefix`` /
+  ``ensure_writable``) run on the HOST free list + refcounts (forking is
+  the only one that touches the device: one pool-block copy);
 * ``write_tokens`` scatters a freshly prefilled request's K/V into the
   pool (one functional scatter per request, issued at admission);
 * ``export_blocks`` / ``import_blocks`` are the block-granular migration
   wire format (DESIGN.md): CoCoServe's scale-down moves a live request's
   KV blocks between instances' pools without touching dense slabs;
+  shared blocks are MATERIALIZED into the payload (content copied) and
+  their prefix keys travel along, so the destination can re-seed its own
+  cache — sharing survives migration without cross-pool refcounts;
 * the per-step decode read is ``models.transformer.forward_paged`` — a
   gather over the block table inside the jitted step, or the Pallas kernel
   in kernels/paged_decode.py;
@@ -40,6 +69,8 @@ Division of labour with the engine:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -51,20 +82,57 @@ from repro.configs.base import ModelConfig
 
 @dataclasses.dataclass
 class PagedState:
-    """Device arrays + host-side free list for one engine."""
+    """Device arrays + host-side free list / refcounts for one engine.
+
+    Invariants (asserted by tests/test_prefix_sharing.py):
+
+    * ``refcount[b] == 0``  iff  ``b`` is on ``free`` or ``cached_free``;
+    * ``refcount[b]`` equals the number of block-table cells holding ``b``;
+    * ``block_key[b] == key`` iff ``prefix_cache[key] == b`` (a bijection
+      over registered blocks);
+    * blocks on ``free`` are never registered; blocks on ``cached_free``
+      always are (their cache entry is dropped when they are evicted).
+    """
     k: jnp.ndarray            # [L, n_blocks, KV, bs, hd] (KV-head-major)
     v: jnp.ndarray
     block_tables: np.ndarray  # [B, max_blocks] int32 host array (-1 empty)
     lengths: np.ndarray       # [B] int32 host array
     free: List[int]
     block_size: int
+    # --- prefix sharing / copy-on-write ---
+    refcount: Optional[np.ndarray] = None     # [n_blocks] int32
+    enable_prefix_cache: bool = False
+    prefix_cache: Dict[bytes, int] = dataclasses.field(default_factory=dict)
+    block_key: Dict[int, bytes] = dataclasses.field(default_factory=dict)
+    cached_free: "OrderedDict[int, None]" = \
+        dataclasses.field(default_factory=OrderedDict)
+    # --- counters (feed serving/instrument + core/monitor gauges) ---
+    prefix_queries: int = 0       # full prompt blocks looked up
+    prefix_hits: int = 0          # ... of which aliased an existing block
+    cow_forks: int = 0            # copy-on-write block copies performed
+    blocks_saved_total: int = 0   # cumulative allocations avoided by hits
+
+    def __post_init__(self):
+        if self.refcount is None:     # direct constructions (tests, tools)
+            self.refcount = np.zeros((self.k.shape[1],), np.int32)
 
     @property
     def n_blocks(self) -> int:
         return self.k.shape[1]
 
+    def free_block_count(self) -> int:
+        """Blocks allocatable right now: the plain free list plus the
+        cached-free (refcount-0 but prefix-registered) blocks that
+        allocation pressure may evict."""
+        return len(self.free) + len(self.cached_free)
+
     def blocks_in_use(self) -> int:
-        return self.n_blocks - len(self.free)
+        return self.n_blocks - self.free_block_count()
+
+    def shared_blocks_saved(self) -> int:
+        """Physical blocks the pool is saving RIGHT NOW through sharing:
+        each block referenced r > 1 times stands in for r - 1 copies."""
+        return int(np.maximum(self.refcount - 1, 0).sum())
 
     def pool_bytes(self) -> int:
         return int(self.k.size * self.k.dtype.itemsize
@@ -73,7 +141,8 @@ class PagedState:
     def utilization(self) -> float:
         """Fraction of allocated slots actually holding tokens (1 - frag).
         Capped at 1: windowed requests count absolute ``lengths`` but only
-        hold their live (in-window) blocks."""
+        hold their live (in-window) blocks, and shared blocks serve
+        several requests' tokens at once."""
         used_blocks = self.blocks_in_use()
         if used_blocks == 0:
             return 1.0
@@ -83,7 +152,11 @@ class PagedState:
 
 def init_paged(cfg: ModelConfig, max_batch: int, n_blocks: int,
                block_size: int = 16, dtype="bfloat16",
-               max_len: int = 4096) -> PagedState:
+               max_len: int = 4096,
+               prefix_cache: bool = False) -> PagedState:
+    """Build a pool. ``prefix_cache=True`` enables prompt-prefix sharing:
+    full prompt blocks are content-hashed so later admissions alias them
+    (the Engine turns this on for its paged path by default)."""
     dtype = jnp.dtype(dtype)
     hd = cfg.resolved_head_dim
     L, KV = cfg.num_layers, cfg.num_kv_heads
@@ -93,26 +166,67 @@ def init_paged(cfg: ModelConfig, max_batch: int, n_blocks: int,
         k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
         block_tables=np.full((max_batch, max_blocks), -1, np.int32),
         lengths=np.zeros((max_batch,), np.int32),
-        free=list(range(n_blocks)), block_size=block_size)
+        free=list(range(n_blocks)), block_size=block_size,
+        refcount=np.zeros((n_blocks,), np.int32),
+        enable_prefix_cache=prefix_cache)
 
 
 class OutOfBlocks(RuntimeError):
     pass
 
 
+# ----------------------------------------------------- refcount primitives
+def _pop_block(state: PagedState) -> int:
+    """Take a refcount-0 block for a new owner: plain free list first,
+    then the OLDEST cached-free block (its prefix-cache entry is evicted
+    — LRU under allocation pressure). Raises OutOfBlocks, mutating
+    nothing, when neither has one."""
+    if state.free:
+        return state.free.pop()
+    if state.cached_free:
+        b = next(iter(state.cached_free))
+        del state.cached_free[b]
+        key = state.block_key.pop(b)
+        state.prefix_cache.pop(key, None)
+        return b
+    raise OutOfBlocks("pool exhausted: no free or cached-free blocks")
+
+
+def _incref(state: PagedState, b: int):
+    if int(state.refcount[b]) == 0:
+        # reviving a cached-free block: content stays valid, it just
+        # leaves the evictable list
+        state.cached_free.pop(b, None)
+    state.refcount[b] += 1
+
+
+def _decref(state: PagedState, b: int):
+    state.refcount[b] -= 1
+    assert state.refcount[b] >= 0, f"refcount underflow on block {b}"
+    if state.refcount[b] == 0:
+        if b in state.block_key:        # registered: stay revivable
+            state.cached_free[b] = None  # most-recently-freed = LRU tail
+        else:
+            state.free.append(b)
+
+
+# -------------------------------------------------------------- allocation
 def allocate(state: PagedState, slot: int, n_tokens: int,
              window: Optional[int] = None):
     """Ensure ``slot`` has blocks for lengths[slot] + n_tokens tokens.
 
-    Column-indexed: position ``p`` lives in table column ``p // bs``, so a
-    row with leading holes (sliding-window freeing) only allocates the
-    columns the new tokens actually land in. With ``window``, columns
-    already fully OUT of the attention window after the write are never
-    allocated at all — a long prompt admitted into a window-sized pool
-    only claims its live suffix (plus the current write head), never
-    transient full-prompt residency. Raises OutOfBlocks — WITHOUT
-    mutating any state — when the pool has too few free blocks or the
-    needed column exceeds the table row (context > ``max_len``)."""
+    Fresh blocks come out OWNED (refcount 1) by ``slot``. Column-indexed:
+    position ``p`` lives in table column ``p // bs``, so a row with
+    leading holes (sliding-window freeing) or an aliased shared prefix
+    only allocates the columns the new tokens actually land in. With
+    ``window``, columns already fully OUT of the attention window after
+    the write are never allocated at all — a long prompt admitted into a
+    window-sized pool only claims its live suffix (plus the current write
+    head), never transient full-prompt residency. Raises OutOfBlocks —
+    WITHOUT mutating any state — when the pool has too few free blocks or
+    the needed column exceeds the table row (context > ``max_len``).
+    Under pressure the pool evicts cached-free blocks (oldest first) to
+    satisfy the request."""
     if n_tokens <= 0:
         return
     bs = state.block_size
@@ -131,30 +245,38 @@ def allocate(state: PagedState, slot: int, n_tokens: int,
             f"table holds {state.block_tables.shape[1]}")
     missing = [c for c in range(first_col, last_col + 1)
                if state.block_tables[slot, c] < 0]
-    if len(missing) > len(state.free):
+    if len(missing) > state.free_block_count():
         raise OutOfBlocks(
-            f"need {len(missing)} blocks, {len(state.free)} free")
+            f"need {len(missing)} blocks, {state.free_block_count()} free")
     for c in missing:
-        state.block_tables[slot, c] = state.free.pop()
+        b = _pop_block(state)
+        state.refcount[b] = 1
+        state.block_tables[slot, c] = b
 
 
 def free_slot(state: PagedState, slot: int):
+    """Release ``slot``'s claim on every block it holds (DECREF, not
+    unconditional free): an owned block returns to the pool, a shared
+    block survives for its other holders, and a registered block parks on
+    the cached-free list so later admissions can still alias it."""
     for b in state.block_tables[slot]:
         if b >= 0:
-            state.free.append(int(b))
+            _decref(state, int(b))
     state.block_tables[slot] = -1
     state.lengths[slot] = 0
 
 
 def free_out_of_window(state: PagedState, slot: int, window: int) -> int:
-    """Sliding-window reclamation: return the leading blocks of ``slot``
+    """Sliding-window reclamation: release the leading blocks of ``slot``
     whose every token has fallen out of the attention window.
 
     The next query sits at position ``lengths[slot]`` and attends keys
     with position > ``lengths[slot] - window`` (see layers._attn_mask), so
     table column c is dead once ``(c+1)*bs - 1 <= lengths[slot] - window``.
     Dead columns become holes (-1) that the masked attention never reads
-    and column-indexed ``allocate`` never refills. Returns #blocks freed.
+    and column-indexed ``allocate`` never refills. Out-of-window release
+    is a DECREF like any other: a block another stream still references
+    merely loses this slot's claim. Returns #blocks this slot released.
 
     Called per slot per decode step, so it must not rescan history: dead
     columns below the newly-dead ones are already holes (freed earlier or
@@ -169,15 +291,164 @@ def free_out_of_window(state: PagedState, slot: int, window: int) -> int:
         b = int(state.block_tables[slot, c])
         if b < 0:
             break
-        state.free.append(b)
+        _decref(state, b)
         state.block_tables[slot, c] = -1
         freed += 1
     return freed
 
 
+# ----------------------------------------------------------- prefix cache
+def _chain_keys(tokens, block_size: int) -> List[bytes]:
+    """Content chain hash of every FULL block of ``tokens``: key_c =
+    H(key_{c-1} || tokens[c*bs:(c+1)*bs]). Keying block c on the whole
+    prefix (not just its own tokens) is what makes a hit mean "identical
+    tokens from position 0" — the property that lets cached K/V stand in
+    for a fresh prefill."""
+    toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+    keys, h = [], b""
+    for c in range(len(toks) // block_size):
+        h = hashlib.sha1(
+            h + toks[c * block_size:(c + 1) * block_size].tobytes()).digest()
+        keys.append(h)
+    return keys
+
+
+def match_prefix(state: PagedState, tokens, *,
+                 record: bool = True) -> List[int]:
+    """Longest cached prefix of ``tokens``: returns the pool block ids
+    (in column order) of the leading FULL blocks whose content chain is
+    registered. Read-only apart from the hit/query counters; the caller
+    decides whether to ``adopt_prefix`` the result. Empty when the cache
+    is disabled or nothing matches.
+
+    ``record=False`` skips the counters — the engine uses it so that
+    backpressure retries (the same queued prompt re-matched every step)
+    don't inflate the hit-rate gauge; it records once per ADMITTED
+    request via ``record_lookup``."""
+    if not state.enable_prefix_cache:
+        return []
+    keys = _chain_keys(tokens, state.block_size)
+    if not keys:
+        return []
+    out: List[int] = []
+    for key in keys:
+        b = state.prefix_cache.get(key)
+        if b is None:
+            break
+        out.append(b)
+    if record:
+        state.prefix_queries += len(keys)
+        state.prefix_hits += len(out)
+    return out
+
+
+def record_lookup(state: PagedState, tokens, matched: Sequence[int]):
+    """Count one prefix-cache lookup in the hit-rate gauges: the full
+    blocks of ``tokens`` as queries, ``matched`` as hits (which are also
+    allocations avoided -> blocks_saved_total). Engines call this once
+    per SUCCESSFULLY admitted request — never per attempt, so
+    backpressure retries and fork-failure requeues don't skew the
+    gauges."""
+    state.prefix_queries += len(tokens) // state.block_size
+    state.prefix_hits += len(matched)
+    state.blocks_saved_total += len(matched)
+
+
+def adopt_prefix(state: PagedState, slot: int, block_ids: Sequence[int],
+                 n_tokens: int):
+    """Alias a matched prefix into ``slot``: INCREF each block and bind it
+    at its column; ``slot`` then owns ``n_tokens`` of context without a
+    single pool write or prefill FLOP. ``n_tokens`` may stop short of the
+    aliased span (the engine caps it at prompt_len - 1 so there is always
+    at least one suffix token to recompute for first-token logits — the
+    write-back into the shared tail block is what copy-on-write forks).
+    Requires an empty slot row at those columns."""
+    assert n_tokens <= len(block_ids) * state.block_size
+    for c, b in enumerate(block_ids):
+        assert state.block_tables[slot, c] < 0, \
+            f"adopt into occupied column {c} of slot {slot}"
+        _incref(state, int(b))
+        state.block_tables[slot, c] = int(b)
+    state.lengths[slot] = n_tokens
+
+
+def register_prefix(state: PagedState, slot: int, tokens) -> int:
+    """Publish ``slot``'s FULL, fully-written blocks into the prefix
+    cache so later admissions can alias them. First binding of a key
+    wins; partially-filled tail blocks and window holes are skipped.
+    Registration does not change ownership — the block stays with its
+    refcount, it merely becomes discoverable (and, once its refcount
+    drops to 0, parks on cached_free instead of the free list).
+    Returns the number of newly registered blocks."""
+    if not state.enable_prefix_cache:
+        return 0
+    n = 0
+    for c, key in enumerate(_chain_keys(tokens, state.block_size)):
+        b = int(state.block_tables[slot, c])
+        if b < 0 or key in state.prefix_cache or b in state.block_key:
+            continue
+        state.prefix_cache[key] = b
+        state.block_key[b] = key
+        n += 1
+    return n
+
+
+def ensure_writable(state: PagedState, slot: int, start: int,
+                    n_tokens: int) -> int:
+    """Copy-on-write: fork every SHARED block that the write of
+    ``n_tokens`` tokens at position ``start`` would touch. A fork takes a
+    fresh block (OutOfBlocks if none — no partial table corruption: the
+    failing column is untouched), device-copies the shared block's pool
+    content, rebinds ``slot``'s column to the private copy and DECREFs
+    the original (which stays alive for its other holders, cache entry
+    included). Owned (refcount-1) blocks pass through untouched — writes
+    there are already private. Returns the number of forks performed."""
+    if n_tokens <= 0:
+        return 0
+    bs = state.block_size
+    pairs = []              # (shared src block, private dst block)
+    try:
+        for c in range(start // bs, (start + n_tokens - 1) // bs + 1):
+            if c >= state.block_tables.shape[1]:
+                break
+            b = int(state.block_tables[slot, c])
+            if b < 0 or int(state.refcount[b]) <= 1:
+                continue
+            nb = _pop_block(state)
+            state.refcount[nb] = 1
+            state.refcount[b] -= 1  # still >= 1: other holders keep it
+            state.block_tables[slot, c] = nb
+            state.cow_forks += 1
+            pairs.append((b, nb))
+    finally:
+        # ONE batched gather+scatter for all forks (a functional pool
+        # update copies the whole array, so per-fork .set calls would
+        # cost N pool copies); the finally keeps already-rebound columns
+        # backed by real content even when a later column's pop raises
+        if pairs:
+            src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+            dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+            state.k = state.k.at[:, dst].set(state.k[:, src])
+            state.v = state.v.at[:, dst].set(state.v[:, src])
+    return len(pairs)
+
+
+def prefix_stats(state: PagedState) -> Dict:
+    """The pool's sharing gauges (engine/orchestrator telemetry)."""
+    q = state.prefix_queries
+    return {"queries": q, "hits": state.prefix_hits,
+            "hit_rate": state.prefix_hits / q if q else 0.0,
+            "cow_forks": state.cow_forks,
+            "blocks_saved_total": state.blocks_saved_total,
+            "blocks_saved_now": state.shared_blocks_saved(),
+            "cached_blocks": len(state.prefix_cache)}
+
+
+# ------------------------------------------------------------- pool writes
 def write_tokens(state: PagedState, slot: int, k_new, v_new):
     """Append k/v for S new tokens of one request (k_new/v_new:
-    [L, S, KV, hd]). Requires allocate() first."""
+    [L, S, KV, hd]). Requires allocate() first; if any touched column is
+    shared, the caller must ``ensure_writable`` first (the engine does)."""
     return write_tokens_batch(state, [slot], k_new[:, None], v_new[:, None])
 
 
@@ -193,9 +464,11 @@ def write_tokens_batch(state: PagedState, slots, k_new, v_new,
 
     A functional ``.at[].set`` copies the whole pool, so batching a
     G-request admission wave into one scatter per pool costs 2 copies
-    instead of 2·G. Requires allocate() first (for the true lengths).
-    Returns the updated (functional) device arrays stored back into
-    ``state``.
+    instead of 2·G. Requires allocate() first (for the true lengths), and
+    — refcount contract — every written column must be OWNED (refcount 1)
+    by its slot: the engine forks shared columns via ``ensure_writable``
+    before scattering. Returns the updated (functional) device arrays
+    stored back into ``state``.
     """
     L, G, S = k_new.shape[:3]
     bs = state.block_size
@@ -228,13 +501,20 @@ def write_tokens_batch(state: PagedState, slots, k_new, v_new,
     return state
 
 
+# --------------------------------------------------- migration wire format
 def export_blocks(state: PagedState, slot: int) -> Dict:
     """Serialize one request's KV to the block-granular migration wire
     format (DESIGN.md §block-migration): the live block-table COLUMNS
     (absolute position // block_size — holes from sliding-window freeing
-    are preserved), the pool blocks at those columns as host arrays, and
-    the token count. Does NOT free the source blocks — callers pair this
-    with ``free_slot`` once the payload is safely away.
+    are preserved), the pool blocks at those columns as host arrays, the
+    token count, and — for prefix-registered blocks — their content-chain
+    ``keys`` (hex, per column) so the destination can re-seed its own
+    prefix cache. SHARED blocks are materialized (content copied into the
+    payload): refcounts never cross pools, so the payload is always
+    self-contained and import-side correctness cannot depend on the
+    source pool's sharing structure. Does NOT free or decref the source
+    blocks — callers pair this with ``free_slot`` once the payload is
+    safely away.
     """
     cols = np.nonzero(state.block_tables[slot] >= 0)[0].astype(np.int32)
     if len(cols):
@@ -245,19 +525,29 @@ def export_blocks(state: PagedState, slot: int) -> Dict:
         L, _, KV, bs, hd = state.k.shape
         k = np.zeros((L, 0, KV, bs, hd), state.k.dtype)
         v = np.zeros((L, 0, KV, bs, hd), state.v.dtype)
+    keys = {}
+    for c in cols:
+        b = int(state.block_tables[slot, c])
+        if b in state.block_key:
+            keys[int(c)] = state.block_key[b].hex()
     return {"cols": cols, "k": k, "v": v,
             "length": int(state.lengths[slot]),
             "block_size": state.block_size,
+            "keys": keys,
             "nbytes": int(k.nbytes + v.nbytes)}
 
 
 def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
     """Materialize an exported request into ``slot`` of (another) pool:
-    allocate fresh pool blocks, rebind them at the SAME table columns
-    (absolute positions are preserved, so RoPE/window masking and the
-    counter-based sampling replay are untouched), and scatter the block
-    data in. Raises OutOfBlocks without mutating state when the pool or
-    the table row can't hold the payload."""
+    allocate fresh OWNED (refcount-1) blocks, rebind them at the SAME
+    table columns (absolute positions are preserved, so RoPE/window
+    masking and the counter-based sampling replay are untouched), and
+    scatter the block data in. Carried prefix ``keys`` are re-registered
+    into this pool's cache (first binding wins) so admissions AFTER the
+    migration can alias the migrated prompt — sharing structure survives
+    the hop even though refcounts are pool-local. Raises OutOfBlocks
+    without mutating state when the pool or the table row can't hold the
+    payload."""
     if payload["block_size"] != state.block_size:
         raise ValueError(
             f"block_size mismatch: payload {payload['block_size']} "
@@ -266,13 +556,16 @@ def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
         raise ValueError(f"import into non-empty slot {slot}")
     cols = np.asarray(payload["cols"], np.int64)
     n = len(cols)
-    if n > len(state.free):
-        raise OutOfBlocks(f"import needs {n} blocks, {len(state.free)} free")
+    if n > state.free_block_count():
+        raise OutOfBlocks(f"import needs {n} blocks, "
+                          f"{state.free_block_count()} free")
     if n and int(cols.max()) >= state.block_tables.shape[1]:
         raise OutOfBlocks(
             f"import needs column {int(cols.max())}, table holds "
             f"{state.block_tables.shape[1]}")
-    ids = [state.free.pop() for _ in range(n)]
+    ids = [_pop_block(state) for _ in range(n)]
+    for b in ids:
+        state.refcount[b] = 1
     state.block_tables[slot, cols] = np.asarray(ids, np.int32)
     state.lengths[slot] = payload["length"]
     if n:
@@ -281,12 +574,24 @@ def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
             jnp.asarray(payload["k"]).astype(state.k.dtype))
         state.v = state.v.at[:, idx].set(
             jnp.asarray(payload["v"]).astype(state.v.dtype))
+    if state.enable_prefix_cache:
+        for c, hexkey in payload.get("keys", {}).items():
+            key = bytes.fromhex(hexkey)
+            ci = int(c)
+            b = int(state.block_tables[slot, ci])
+            if key in state.prefix_cache or b in state.block_key:
+                continue                    # existing binding wins
+            state.prefix_cache[key] = b
+            state.block_key[b] = key
     return state
 
 
+# ------------------------------------------------------------ dense views
 def gather_request(state: PagedState, slot: int, max_len: int):
     """Materialize a request's KV as dense [L, max_len, KV, hd] (oracle /
-    fallback path; the paged kernel reads blocks directly)."""
+    fallback path, and the context splice for shared-prefix suffix
+    prefill; the paged kernel reads blocks directly). Rows past the
+    slot's allocated columns are garbage — callers mask by position."""
     bs = state.block_size
     n_blk = -(-max_len // bs)
     tbl = state.block_tables[slot, :n_blk]

@@ -1,0 +1,396 @@
+"""Prefix sharing with copy-on-write block refcounts (ISSUE-3 tentpole).
+
+Pool-level: refcount lifecycle (free -> owned -> shared -> CoW-forked),
+cached-free revival and LRU eviction, wire-format key carriage.
+Engine-level: shared-system-prompt admissions alias cached blocks, skip
+the shared span's prefill, stay token-identical to sharing-off (greedy
+AND sampled), and use measurably fewer pool blocks. Orchestrator-level:
+scale-down migration of streams holding shared blocks stays zero-drop
+and token-identical.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import paged_kv as PK
+from repro.serving.engine import Engine, Request
+from repro.serving.orchestrator import Orchestrator
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _clone(r: Request) -> Request:
+    """Fresh copy with per-run mutable state reset (dataclasses.replace
+    alone would SHARE the generated list across runs)."""
+    return dataclasses.replace(r, generated=[], slot=None, submit_time=0.0,
+                               first_token_time=None, finish_time=None,
+                               preemptions=0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    return cfg, params
+
+
+def _check_invariants(st: PK.PagedState):
+    """The PagedState refcount invariants from the dataclass docstring."""
+    held = np.zeros(st.n_blocks, np.int64)
+    for row in st.block_tables:
+        for b in row:
+            if b >= 0:
+                held[b] += 1
+    np.testing.assert_array_equal(held, st.refcount)
+    for b in st.free:
+        assert st.refcount[b] == 0 and b not in st.block_key
+    for b in st.cached_free:
+        assert st.refcount[b] == 0 and b in st.block_key
+    for key, b in st.prefix_cache.items():
+        assert st.block_key[b] == key
+    assert len(st.prefix_cache) == len(st.block_key)
+
+
+# ------------------------------------------------------------- pool level
+def test_refcount_lifecycle(tiny):
+    """free -> owned -> shared -> cached-free -> revived -> evicted."""
+    cfg, _ = tiny
+    st = PK.init_paged(cfg, 3, 8, block_size=4, dtype="float32",
+                       max_len=32, prefix_cache=True)
+    toks = np.arange(2, 11, dtype=np.int32)         # 9 tokens: 2 full blocks
+    PK.allocate(st, 0, len(toks))
+    assert st.blocks_in_use() == 3                  # cols 0,1,2 owned
+    assert PK.register_prefix(st, 0, toks) == 2     # partial col 2 skipped
+    _check_invariants(st)
+
+    # a second slot with the same prompt aliases both full blocks
+    matched = PK.match_prefix(st, toks)
+    assert len(matched) == 2
+    PK.adopt_prefix(st, 1, matched, 8)
+    assert st.shared_blocks_saved() == 2
+    assert st.blocks_in_use() == 3                  # no new physical block
+    _check_invariants(st)
+
+    # owner leaves: shared blocks survive, its private tail returns
+    PK.free_slot(st, 0)
+    assert st.shared_blocks_saved() == 0            # refcounts back to 1
+    assert st.blocks_in_use() == 2
+    _check_invariants(st)
+
+    # last holder leaves: registered blocks PARK on cached_free...
+    PK.free_slot(st, 1)
+    assert st.blocks_in_use() == 0
+    assert len(st.cached_free) == 2
+    # ...and a fresh match still revives them
+    revived = PK.match_prefix(st, toks)
+    assert revived == matched
+    PK.adopt_prefix(st, 2, revived, 8)
+    assert not st.cached_free
+    _check_invariants(st)
+    PK.free_slot(st, 2)
+
+    # allocation pressure evicts cached-free blocks (oldest first) and
+    # drops their cache entries — the pool never refuses while they exist
+    PK.allocate(st, 0, 8 * 4)                       # claim the whole pool
+    assert st.blocks_in_use() == 8
+    assert not st.prefix_cache and not st.cached_free
+    _check_invariants(st)
+    with pytest.raises(PK.OutOfBlocks):
+        PK.allocate(st, 1, 4)
+
+
+def test_cow_fork_isolates_writer(tiny):
+    """ensure_writable forks a shared block: the writer gets a private
+    copy (same content), the co-holder's view is untouched."""
+    cfg, _ = tiny
+    st = PK.init_paged(cfg, 2, 8, block_size=4, dtype="float32",
+                       max_len=32, prefix_cache=True)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(0)
+    toks = rng.integers(2, 100, size=8).astype(np.int32)
+    kv = jnp.asarray(rng.normal(size=(L, 8, KV, hd)), jnp.float32)
+    PK.allocate(st, 0, 8)
+    st = PK.write_tokens(st, 0, kv, kv * 2)
+    PK.register_prefix(st, 0, toks)
+    PK.adopt_prefix(st, 1, PK.match_prefix(st, toks), 7)
+
+    assert PK.ensure_writable(st, 1, 7, 1) == 1     # forks shared col 1
+    assert st.cow_forks == 1
+    assert st.refcount[st.block_tables[0, 1]] == 1
+    assert st.block_tables[0, 1] != st.block_tables[1, 1]
+    assert st.block_tables[0, 0] == st.block_tables[1, 0]  # col 0 untouched
+    _check_invariants(st)
+    # fork copied content; owner's blocks still hold the original
+    k0, _ = PK.gather_request(st, 0, 8)
+    k1, _ = PK.gather_request(st, 1, 8)
+    np.testing.assert_array_equal(np.asarray(k0), np.asarray(k1))
+    # owned (refcount-1) columns are never forked
+    assert PK.ensure_writable(st, 1, 7, 1) == 0
+
+
+def test_out_of_window_release_is_decref(tiny):
+    """A shared block going out of one stream's window survives for the
+    other holder instead of returning to the free list."""
+    cfg, _ = tiny
+    st = PK.init_paged(cfg, 2, 8, block_size=4, dtype="float32",
+                       max_len=64, prefix_cache=True)
+    toks = np.arange(2, 10, dtype=np.int32)
+    PK.allocate(st, 0, 8)
+    PK.register_prefix(st, 0, toks)
+    PK.adopt_prefix(st, 1, PK.match_prefix(st, toks), 8)
+    shared0 = int(st.block_tables[0, 0])
+    st.lengths[0] = 9                       # pretend slot 0 decoded past
+    assert PK.free_out_of_window(st, 0, window=4) == 1
+    assert st.refcount[shared0] == 1        # slot 1 still holds it
+    assert st.block_tables[1, 0] == shared0
+    _check_invariants(st)
+
+
+def test_export_import_carries_prefix_keys(tiny):
+    """The migration wire format materializes shared blocks and re-seeds
+    the destination's prefix cache from the carried keys."""
+    cfg, _ = tiny
+    src = PK.init_paged(cfg, 2, 8, block_size=4, dtype="float32",
+                        max_len=32, prefix_cache=True)
+    dst = PK.init_paged(cfg, 2, 8, block_size=4, dtype="float32",
+                        max_len=32, prefix_cache=True)
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(1)
+    toks = rng.integers(2, 100, size=9).astype(np.int32)
+    kv = jnp.asarray(rng.normal(size=(L, 9, KV, hd)), jnp.float32)
+    PK.allocate(src, 0, 9)
+    src = PK.write_tokens(src, 0, kv, kv * 2)
+    PK.register_prefix(src, 0, toks)
+    PK.adopt_prefix(src, 1, PK.match_prefix(src, toks), 8)  # now SHARED
+
+    payload = PK.export_blocks(src, 0)
+    assert len(payload["keys"]) == 2                # the 2 full blocks
+    before_k, _ = PK.gather_request(src, 0, 9)
+    PK.import_blocks(dst, 0, payload)
+    after_k, _ = PK.gather_request(dst, 0, 9)
+    np.testing.assert_array_equal(np.asarray(before_k), np.asarray(after_k))
+    _check_invariants(dst)
+    # the destination now serves the migrated prompt from its own cache
+    assert len(PK.match_prefix(dst, toks)) == 2
+    # source co-holder unaffected by releasing the migrated slot
+    PK.free_slot(src, 0)
+    assert src.refcount[src.block_tables[1, 0]] == 1
+    _check_invariants(src)
+
+
+# ----------------------------------------------------------- engine level
+def _shared_prompt_requests(cfg, n, sys_len=24, temp=0.0, top_k=0):
+    rng = np.random.default_rng(7)
+    sys_prompt = rng.integers(2, cfg.vocab_size, size=sys_len).astype(np.int32)
+    reqs = []
+    for i in range(n):
+        user = rng.integers(2, cfg.vocab_size, size=3 + i).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=np.concatenate([sys_prompt, user]),
+                            max_new_tokens=6, temperature=temp, top_k=top_k,
+                            seed=5 + i))
+    return reqs
+
+
+def _run_engine(cfg, params, reqs, share, **kw):
+    eng = Engine(cfg, params, max_batch=4, max_len=64, cache_kind="paged",
+                 block_size=8, prefix_sharing=share, **kw)
+    for r in reqs:
+        eng.submit(r)
+    peak, done = 0, []
+    while eng.queue or eng.active:
+        done += eng.step() or []
+        peak = max(peak, eng.pstate.blocks_in_use())
+    return {r.rid: r.generated for r in done}, peak, eng
+
+
+@pytest.mark.parametrize("temperature,top_k", [(0.0, 0), (0.8, 16)])
+def test_sharing_token_identical_and_saves_blocks(tiny, temperature, top_k):
+    """The acceptance bar: sharing ON equals sharing OFF token-for-token
+    (greedy and sampled) while a shared-system-prompt workload holds
+    measurably fewer pool blocks."""
+    cfg, params = tiny
+
+    def reqs():
+        return _shared_prompt_requests(cfg, 6, temp=temperature, top_k=top_k)
+
+    off, peak_off, _ = _run_engine(cfg, params, reqs(), share=False)
+    on, peak_on, eng = _run_engine(cfg, params, reqs(), share=True)
+    assert on == off
+    assert peak_on < peak_off, (peak_on, peak_off)
+    stats = eng.prefix_stats()
+    assert stats["hits"] > 0 and stats["hit_rate"] > 0.5
+    assert stats["blocks_saved_total"] > 0
+    assert eng.pstate.blocks_in_use() == 0          # fully drained
+    _check_invariants(eng.pstate)
+
+
+def test_aligned_duplicate_prompt_triggers_cow(tiny):
+    """Identical block-aligned prompts alias EVERY prompt block; the
+    recomputed last token's write forks the shared tail (copy-on-write)
+    and the streams still match the unshared run exactly."""
+    cfg, params = tiny
+    prompt = np.random.default_rng(3).integers(
+        2, cfg.vocab_size, size=16).astype(np.int32)
+
+    def dup():
+        return [Request(rid=i, prompt=prompt.copy(), max_new_tokens=5)
+                for i in range(2)]
+
+    on, _, eng = _run_engine(cfg, params, dup(), share=True)
+    off, _, _ = _run_engine(cfg, params, dup(), share=False)
+    assert on == off
+    assert eng.pstate.cow_forks >= 1
+    assert eng.pstate.blocks_in_use() == 0
+    _check_invariants(eng.pstate)
+
+
+def test_sharing_with_preemption_replays_identically(tiny):
+    """Pool pressure preempts a stream holding shared blocks: decref on
+    eviction + cache-hit on re-admission keep outputs identical to an
+    unconstrained pool."""
+    cfg, params = tiny
+    reqs = _shared_prompt_requests(cfg, 4, sys_len=16)
+    for r in reqs:
+        r.max_new_tokens = 16
+    big, _, _ = _run_engine(cfg, params, [_clone(r) for r in reqs],
+                            share=True)
+    # a pool too small for all four: forces preemption mid-decode
+    small, _, eng = _run_engine(cfg, params, [_clone(r) for r in reqs],
+                                share=True, n_blocks=11)
+    assert small == big
+    assert eng.preempt_count > 0, "scenario exercised no preemption"
+    assert eng.pstate.blocks_in_use() == 0
+    _check_invariants(eng.pstate)
+
+
+def test_sharing_skips_prefill_compute_for_shared_span(tiny):
+    """A cache-hit admission compiles/pays only the SUFFIX prefill: the
+    padded prefill shapes it adds are suffix-sized, far below the full
+    prompt bucket."""
+    cfg, params = tiny
+    reqs = _shared_prompt_requests(cfg, 2, sys_len=32)   # 35/36-token prompts
+    _, _, eng = _run_engine(cfg, params, reqs, share=True)
+    shapes = eng._prefill_shapes
+    full = [S for _, S in shapes if S >= 64]     # rid 0's full-prompt bucket
+    suffix = [S for _, S in shapes if S <= 16]   # rid 1's suffix-only bucket
+    assert full and suffix, shapes
+
+
+def test_hit_admits_under_pressure_that_stalls_cold_request(tiny):
+    """Backpressure accounts for aliasing: a request whose prefix is
+    RESIDENT (held by an active stream) admits when the pool only has
+    room for its suffix — the same request without sharing stays queued
+    until the holder finishes."""
+    cfg, params = tiny
+    rng = np.random.default_rng(5)
+    sys_prompt = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+    users = [rng.integers(2, cfg.vocab_size, size=5).astype(np.int32)
+             for _ in range(2)]
+
+    def run(share):
+        # 5-block pool: the holder takes 3, a COLD 21-token admission
+        # wants blocks_needed=3 > 2 free; the suffix alone needs 1
+        eng = Engine(cfg, params, max_batch=2, max_len=64,
+                     cache_kind="paged", block_size=8, n_blocks=5,
+                     prefix_sharing=share)
+        eng.submit(Request(rid=0,
+                           prompt=np.concatenate([sys_prompt, users[0]]),
+                           max_new_tokens=3))
+        eng.step()                         # rid 0 admitted, holds 3 blocks
+        assert 0 in {r.rid for r in eng.active.values()}
+        eng.submit(Request(rid=1,
+                           prompt=np.concatenate([sys_prompt, users[1]]),
+                           max_new_tokens=3))
+        eng.step()
+        admitted = 1 in {r.rid for r in eng.active.values()}
+        done = eng.run_until_done()
+        return admitted, {r.rid: r.generated for r in done}
+
+    stalled_admit, off = run(share=False)
+    shared_admit, on = run(share=True)
+    assert not stalled_admit, "cold request should stall on a full pool"
+    assert shared_admit, "aliased request should admit alongside holder"
+    assert on == off                        # and still token-identical
+
+
+# ----------------------------------------------------- orchestrator level
+def test_migration_of_shared_blocks_token_identical(tiny):
+    """Scale-down migration of a stream whose blocks are SHARED with a
+    stream staying behind: zero drops, token-identical on both sides, and
+    the destination learns the prefix for later admissions."""
+    cfg, params = tiny
+    rng = np.random.default_rng(11)
+    sys_prompt = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(2, cfg.vocab_size,
+                                      size=4 + i).astype(np.int32)]),
+                    max_new_tokens=10, temperature=0.8, top_k=16,
+                    seed=3 + i) for i in range(2)]
+
+    # unmigrated oracle: each request solo on a fresh engine
+    ref = {}
+    for r in reqs:
+        e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+        e.submit(_clone(r))
+        ref[r.rid] = e.run_until_done()[0].generated
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)
+    for r in reqs:
+        orch._home[r.rid] = 0
+        orch.engines[0].submit(r)               # both on A: blocks shared
+    for _ in range(4):
+        orch.step()
+    assert orch.engines[0].pstate.shared_blocks_saved() > 0, \
+        "scenario exercised no sharing"
+    # migrate ONLY rid 0; rid 1 keeps its claim on the shared blocks
+    slot0 = reqs[0].slot
+    recs = orch.migrate_requests(0, 1, max_requests=1)
+    assert len(recs) == 1 and recs[0].resumed and recs[0].rid == 0
+    del slot0
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+    for e in orch.engines:
+        assert e.pstate.blocks_in_use() == 0
+        _check_invariants(e.pstate)
+    snap = orch.snapshot()
+    assert snap.prefix_hit_rate >= 0.0          # gauge surfaced
+    assert orch.stats()["prefix_hit_rate"] > 0.0
+
+
+def test_snapshot_surfaces_sharing_gauges(tiny):
+    """MetricsSnapshot carries prefix_hit_rate/blocks_saved while streams
+    are live — the controller's vacancy signal reflects sharing."""
+    cfg, params = tiny
+    reqs = _shared_prompt_requests(cfg, 4, sys_len=16)
+    orch = Orchestrator(cfg, params, n_instances=1, max_batch=4,
+                        max_len=64, block_size=8, n_blocks=32,
+                        telemetry_every=10_000)
+    for r in reqs:
+        orch.submit(r)
+    for _ in range(3):
+        orch.step()
+    snap = orch.snapshot()
+    assert snap.prefix_hit_rate > 0.0
+    assert snap.blocks_saved > 0
+    # the snapshot reads the EngineTelemetry mirrors, which must agree
+    # with the engines' own counters
+    tel = orch.telemetry[0]
+    stats = orch.engines[0].prefix_stats()
+    assert tel.prefix_hit_rate() == stats["hit_rate"]
+    assert tel.blocks_saved == stats["blocks_saved_now"]
+    assert orch.monitor is not None
+    orch.monitor.record(snap)
+    assert orch.monitor.prefix_hit_rate() == snap.prefix_hit_rate
+    assert orch.monitor.blocks_saved_by_sharing() == snap.blocks_saved
+    orch.run_until_done()
