@@ -1,0 +1,21 @@
+"""Smoke-mode switch for the bench harness (``run.py --smoke``).
+
+CI / pre-merge wants every bench to EXECUTE (imports, shapes, JSON
+emission, summary rows) without paying full measurement sizes. run.py
+sets ``REPRO_BENCH_SMOKE=1`` under ``--smoke``; benches shrink their
+workload knobs through ``pick(normal, smoke)``. Smoke numbers are NOT
+comparable across runs — the JSON reports carry a ``"smoke": true``
+flag so nobody trends them by accident.
+"""
+import os
+
+ENV = "REPRO_BENCH_SMOKE"
+
+
+def is_smoke() -> bool:
+    return os.environ.get(ENV) == "1"
+
+
+def pick(normal, smoke):
+    """The workload knob selector: full size normally, toy under smoke."""
+    return smoke if is_smoke() else normal

@@ -23,15 +23,18 @@ import time
 import jax
 import numpy as np
 
+from benchmarks._smoke import is_smoke, pick
+
 ARCH = "tinyllama-1.1b"
 MAX_LEN = 128
 MAX_BATCH = 3
 BLOCK_SIZE = 8
 N_BLOCKS = 96
 PROMPT_LEN = 12
-MAX_NEW = 12
-BASE_REQUESTS = 6
-BURST_REQUESTS = 12
+MAX_NEW = pick(12, 6)
+BASE_REQUESTS = pick(6, 3)
+BURST_REQUESTS = pick(12, 4)
+CALIB_LARGE_TOKENS = pick(64 * BLOCK_SIZE, 16 * BLOCK_SIZE)
 SLO_STEPS = 40.0
 
 OUT_PATH = os.path.join(os.path.dirname(__file__),
@@ -66,7 +69,7 @@ def _calibrate_migration(cfg):
 
     fit = fit_migration_model(cfg, block_size=BLOCK_SIZE,
                               small_tokens=2 * BLOCK_SIZE,
-                              large_tokens=64 * BLOCK_SIZE)
+                              large_tokens=CALIB_LARGE_TOKENS)
     t_mid, b_mid = probe_block_migration(cfg, 16 * BLOCK_SIZE,
                                          block_size=BLOCK_SIZE)
     est_mid = estimate_cost(b_mid, fit["bandwidth_Bps"],
@@ -156,6 +159,7 @@ def run():
 
     s = orch.stats()
     report = {
+        "smoke": is_smoke(),
         "config": {"arch": f"{ARCH} (reduced)", "max_len": MAX_LEN,
                    "max_batch": MAX_BATCH, "block_size": BLOCK_SIZE,
                    "n_blocks": N_BLOCKS, "base_requests": BASE_REQUESTS,

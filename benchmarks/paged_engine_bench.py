@@ -22,11 +22,13 @@ import time
 import jax
 import numpy as np
 
-MAX_LEN = 2048          # dense cache capacity per slot
+from benchmarks._smoke import is_smoke, pick
+
+MAX_LEN = pick(2048, 512)   # dense cache capacity per slot
 PROMPT_LEN = 24
-MAX_NEW = 24            # mean context ~= 36  ->  MAX_LEN >= 4x mean
+MAX_NEW = pick(24, 8)       # mean context ~= 36  ->  MAX_LEN >= 4x mean
 MAX_BATCH = 4
-N_REQUESTS = 12
+N_REQUESTS = pick(12, 4)
 BLOCK_SIZE = 16
 POOL_BLOCKS = 64        # paged pool sized to the workload, not worst case
 
@@ -101,6 +103,7 @@ def run():
            for kind in ("dense", "paged")}
     speedup = res["paged"]["tokens_per_s"] / res["dense"]["tokens_per_s"]
     report = {
+        "smoke": is_smoke(),
         "config": {"arch": "tinyllama-1.1b (reduced)", "max_len": MAX_LEN,
                    "prompt_len": PROMPT_LEN, "max_new_tokens": MAX_NEW,
                    "max_batch": MAX_BATCH, "n_requests": N_REQUESTS,

@@ -21,11 +21,13 @@ import time
 import jax
 import numpy as np
 
+from benchmarks._smoke import is_smoke, pick
+
 SYS_PROMPT_LEN = 48     # the shared span (3 full blocks at BLOCK_SIZE=16)
 USER_LEN = 8            # private per-request suffix
-MAX_NEW = 16
+MAX_NEW = pick(16, 6)
 MAX_BATCH = 4
-N_REQUESTS = 12
+N_REQUESTS = pick(12, 4)
 BLOCK_SIZE = 16
 POOL_BLOCKS = 48
 MAX_LEN = 256
@@ -97,6 +99,7 @@ def run():
     saved = (res["sharing_off"]["peak_blocks_in_use"]
              - res["sharing_on"]["peak_blocks_in_use"])
     report = {
+        "smoke": is_smoke(),
         "config": {"arch": "tinyllama-1.1b (reduced)",
                    "sys_prompt_len": SYS_PROMPT_LEN, "user_len": USER_LEN,
                    "max_new_tokens": MAX_NEW, "max_batch": MAX_BATCH,

@@ -1,17 +1,28 @@
 """Benchmark harness — one module per paper table/figure (+ roofline and
-kernel micro-benches). Prints a final ``name,us_per_call,derived`` CSV."""
+kernel micro-benches). Prints a final ``name,us_per_call,derived`` CSV.
+
+``--smoke`` runs EVERY suite at toy sizes (sets ``REPRO_BENCH_SMOKE=1``
+before any bench module loads its knobs): a CI-speed execution check of
+the full harness — imports, shapes, JSON emission, summary rows — whose
+numbers are flagged ``"smoke": true`` and never comparable."""
+import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
-    from benchmarks import (ablations, fig6_replication, fig8_single,
-                            fig9_memory, fig10_multi, fig11_robustness,
-                            kernels_bench, module_scaling_bench,
-                            paged_engine_bench, prefix_sharing_bench,
-                            roofline, speedup_model, table1_modules,
-                            table2_scaling_cost)
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        from benchmarks._smoke import ENV
+        os.environ[ENV] = "1"
+        print("# smoke mode: toy sizes, numbers not comparable")
+    from benchmarks import (ablations, distributed_bench, fig6_replication,
+                            fig8_single, fig9_memory, fig10_multi,
+                            fig11_robustness, kernels_bench,
+                            module_scaling_bench, paged_engine_bench,
+                            prefix_sharing_bench, roofline, speedup_model,
+                            table1_modules, table2_scaling_cost)
     suites = [
         ("table1", table1_modules),
         ("table2", table2_scaling_cost),
@@ -26,6 +37,7 @@ def main() -> None:
         ("paged_engine", paged_engine_bench),
         ("prefix_sharing", prefix_sharing_bench),
         ("module_scaling", module_scaling_bench),
+        ("distributed", distributed_bench),
         ("roofline", roofline),
     ]
     rows = []

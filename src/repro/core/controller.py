@@ -64,9 +64,16 @@ class Controller:
         orchestrator from real engine instrumentation) into the monitor."""
         self.monitor.record(snap)
 
-    def tick(self) -> Optional[str]:
-        """One control period. Returns the action taken (or None)."""
-        if self._cooldown > 0:
+    def tick(self, in_burst: bool = False) -> Optional[str]:
+        """One control period. Returns the action taken (or None).
+
+        ``in_burst=True`` marks a FEEDBACK iteration inside the same
+        control burst (the live executor applied a remediation, fed the
+        post-action snapshot back via ``observe``, and is asking whether
+        Alg. 2 wants another phase): the cooldown gate is bypassed and
+        not re-armed — the burst's FIRST action already armed it, and a
+        burst is one remediation episode, not several."""
+        if self._cooldown > 0 and not in_burst:
             self._cooldown -= 1
             return None
         snap = self.monitor.latest
@@ -106,5 +113,6 @@ class Controller:
         if action:
             self.log.append(action)
             self.on_plan_change(self.plan, self.batch_size)
-            self._cooldown = self.cfg.cooldown_ticks
+            if not in_burst:
+                self._cooldown = self.cfg.cooldown_ticks
         return action

@@ -10,6 +10,16 @@ fall back to a single dense engine with the same submission loop.
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 24 --rps 4 --instances 2
+
+``--workers N`` lifts the same loop onto the DISTRIBUTED serving plane:
+N engine-server processes are spawned (one real paged Engine each,
+serving/remote_engine.py) and the orchestrator drives them over the RPC
+wire protocol — admissions, telemetry snapshots, controller plans and
+block migrations all travel as length-prefixed frames, no shared
+memory:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --requests 24 --rps 4 --workers 2 --drain
 """
 from __future__ import annotations
 
@@ -33,6 +43,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="spawn N engine-server PROCESSES and drive them "
+                         "over the RPC transport (the distributed serving "
+                         "plane); 0 = in-process instances")
     ap.add_argument("--slo", type=float, default=40.0,
                     help="engine-clock latency SLO (steps)")
     ap.add_argument("--drain", action="store_true",
@@ -75,13 +89,18 @@ def main(argv=None):
         return len(finished)
 
     from repro.serving.orchestrator import Orchestrator
-    orch = Orchestrator(cfg, params, n_instances=args.instances,
+    n_instances = args.workers or args.instances
+    orch = Orchestrator(cfg, params, n_instances=n_instances,
                         max_batch=args.max_batch, max_len=128,
-                        slo_latency=args.slo, telemetry_every=4)
+                        slo_latency=args.slo, telemetry_every=4,
+                        remote=bool(args.workers))
+    if args.workers:
+        print(f"[serve] distributed plane: {args.workers} engine-server "
+              f"processes over RPC")
     submitted, step = 0, 0
     seen_actions = 0
     while len(orch.finished) < args.requests and step < 5000:
-        clock = orch.engines[0].clock
+        clock = orch.clock()
         while submitted < args.requests and submitted <= clock * args.rps:
             orch.submit(make_request(submitted))
             submitted += 1
@@ -93,23 +112,28 @@ def main(argv=None):
                   f"P sum={sum(orch.plan.p)}")
         seen_actions = len(log)
 
-    if args.drain and args.instances > 1:
-        recs = orch.drain_instance(args.instances - 1)
+    if args.drain and n_instances > 1:
+        recs = orch.drain_instance(n_instances - 1)
         for r in recs:
-            print(f"[serve] drained rid={r.rid} "
+            print(f"[serve] drained rid={r.rid} ({r.mode}) "
                   f"{r.n_blocks} blocks / {r.bytes_moved / 1e6:.2f} MB "
-                  f"in {r.seconds * 1e3:.1f} ms "
+                  f"in {r.seconds * 1e3:.1f} ms, "
+                  f"stream stalled {r.stall_s * 1e3:.1f} ms "
                   f"(est {r.est_seconds * 1e3:.0f} ms)")
         orch.run_until_done()
 
     _report(orch.finished, time.time() - t_start)
     s = orch.stats()
-    print(f"[serve] instances={args.instances} dropped={s['dropped']} "
-          f"migrations={s['migrations']} preemptions={s['preemptions']}")
+    print(f"[serve] instances={n_instances} dropped={s['dropped']} "
+          f"migrations={s['migrations']} "
+          f"(overlapped={s['overlapped_migrations']}) "
+          f"preemptions={s['preemptions']} recoveries={s['recoveries']}")
     print(f"[serve] prefix sharing: hit_rate={s['prefix_hit_rate']:.2f} "
-          f"blocks_saved_now={s['blocks_saved_now']}")
+          f"blocks_saved_now={s['blocks_saved_now']} "
+          f"dedup_imports={s['dedup_imports']}")
     print(f"[serve] final plan P (first 8): {orch.plan.p[:8]}, "
           f"continuity breaks: {orch.plan.continuity_breaks()}")
+    orch.close()
     return len(orch.finished)
 
 

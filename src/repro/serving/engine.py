@@ -12,7 +12,8 @@ primary decode path (``cache_kind="paged"``):
   with an already-cached full-block prefix ALIASES those blocks
   (refcounted, copy-on-write — paged_kv's prefix cache) and prefills
   only its private suffix against the spliced shared context
-  (``_prefill_shared``), so a shared system prompt is stored and
+  (``_prefill_shared_batch``, one bucketed extend per (context, suffix)
+  group of hits), so a shared system prompt is stored and
   prefilled once per pool, not once per request. Block
   allocation/eviction is driven by the host-side free list — admission
   applies backpressure (requests wait in the queue) when the pool is out
@@ -39,6 +40,11 @@ step (static jit arg -> unrolled ``forward_paged`` with batch-sharding
 hooks), and ``pause_request``/``resume_request`` export/import one
 request's KV blocks + position + sampling counters so an orchestrator
 (serving/orchestrator.py) can migrate it mid-stream, token-identically.
+The two-phase OVERLAPPED variant splits that into ``snapshot_request``
+(bulk export, stream keeps decoding) -> destination ``prepare_resume``
+(staged import into an admission-excluded slot) -> ``pause_request(...,
+since_epoch)`` (dirty-set delta only) -> ``commit_resume`` — the stream
+leaves decode rotation just for the delta copy (DESIGN.md §7).
 
 The legacy dense path (``cache_kind="dense"``, a ``[B, max_len]`` cache)
 remains for MLA/SSM/hybrid/audio families and as the parity oracle; it
@@ -208,6 +214,9 @@ class Engine:
         self.prefill_chunk = prefill_chunk  # 0 = one-shot prefill
         self.cache_kind = cache_kind
         self.active: Dict[int, Request] = {}   # slot -> request
+        # slots holding a phase-1 migration import awaiting its delta
+        # (commit_resume / abort_resume); excluded from admission
+        self._staged: Dict[int, int] = {}      # slot -> rid
         self.queue: Deque[Request] = collections.deque()
         self.clock = 0.0
         self._step_count = 0
@@ -288,7 +297,8 @@ class Engine:
         self.queue.append(req)
 
     def _free_slots(self):
-        return [s for s in range(self.max_batch) if s not in self.active]
+        return [s for s in range(self.max_batch)
+                if s not in self.active and s not in self._staged]
 
     @staticmethod
     def _prefill_tokens(req: Request) -> np.ndarray:
@@ -470,7 +480,7 @@ class Engine:
                 if self.prefix_sharing and not self.window:
                     # publish this prompt's full blocks NOW so wave-mates
                     # behind it match them: their reads (context gather
-                    # in _prefill_shared) run only after this wave's
+                    # in _prefill_shared_batch) run only after this wave's
                     # prefill writes, so the content is there by the time
                     # it's read. Hit requests register AFTER their suffix
                     # prefill instead — it can still fail (CoW fork under
@@ -509,26 +519,56 @@ class Engine:
                 lengths=lens)
             for i, req in enumerate(reqs):
                 first_of[id(req)] = None if req.generated else firsts[i]
-        failed: List[Request] = []
-        for req in admitted:        # cache hits: prefill the suffix only
+        # cache hits: prefill the suffix only — BUCKETED like the miss
+        # wave: hits group by (pow2 context bucket, pow2 suffix bucket)
+        # and each group runs ONE batched extend + ONE suffix scatter +
+        # ONE sampling call, instead of one of each per hit request
+        hit_groups: Dict[tuple, List[Request]] = {}
+        for req in admitted:
             if id(req) not in ctx_of:
                 continue
-            try:
-                logits = self._prefill_shared(req, slot_of[id(req)],
-                                              ptoks[id(req)],
-                                              ctx_of[id(req)])
-            except PK.OutOfBlocks:
-                # a copy-on-write fork found no free block (wave-mates
-                # consumed the headroom): release — nothing was written
-                # or registered for this request — and retry next step
-                PK.free_slot(self.pstate, slot_of[id(req)])
-                failed.append(req)
+            ctx = ctx_of[id(req)]
+            n_new = len(ptoks[id(req)]) - ctx
+            key = (_pow2_at_least(max(ctx, 1)), _pow2_at_least(n_new))
+            hit_groups.setdefault(key, []).append(req)
+        failed: List[Request] = []
+        for (cb, Sb), greqs in hit_groups.items():
+            ok: List[Request] = []
+            for req in greqs:
+                # copy-on-write forks BEFORE the group forward: the
+                # suffix write may land inside an aliased tail block. A
+                # fork that finds no free block (wave-mates consumed the
+                # headroom) drops just that request — nothing was
+                # written or registered for it — and it retries next step
+                try:
+                    PK.ensure_writable(self.pstate, slot_of[id(req)],
+                                       ctx_of[id(req)],
+                                       len(ptoks[id(req)]) - ctx_of[id(req)])
+                    ok.append(req)
+                except PK.OutOfBlocks:
+                    PK.free_slot(self.pstate, slot_of[id(req)])
+                    failed.append(req)
+            if not ok:
                 continue
+            # pad the GROUP dim to a power of two as well (dummy rows
+            # replicate the last member; their pool writes drop, their
+            # logits are discarded) so executables are keyed on
+            # (pow2 G, pow2 ctx, pow2 suffix) — a warmed wave shape
+            # serves every later wave regardless of its exact hit count
+            Gb = _pow2_at_least(len(ok))
+            pad = [ok[-1]] * (Gb - len(ok))
+            logits = self._prefill_shared_batch(
+                [slot_of[id(r)] for r in ok + pad],
+                [ptoks[id(r)] for r in ok + pad],
+                [ctx_of[id(r)] for r in ok + pad], cb, Sb,
+                n_real=len(ok))
             if self.prefix_sharing and not self.window:
-                PK.register_prefix(self.pstate, slot_of[id(req)],
-                                   ptoks[id(req)])
-            first_of[id(req)] = (None if req.generated
-                                 else self._sample_batch(logits, [req])[0])
+                for r in ok:
+                    PK.register_prefix(self.pstate, slot_of[id(r)],
+                                       ptoks[id(r)])
+            firsts = self._sample_batch(logits, ok + pad)[:len(ok)]
+            for i, r in enumerate(ok):
+                first_of[id(r)] = None if r.generated else firsts[i]
         if failed:
             for r in reversed(failed):      # preserve submission order
                 self.queue.appendleft(r)
@@ -548,51 +588,58 @@ class Engine:
                 if req.slot is not None:  # may have retired at admission
                     PK.free_out_of_window(self.pstate, req.slot, self.window)
 
-    def _prefill_shared(self, req: Request, slot: int, toks, ctx: int):
-        """Suffix-only prefill for a prefix-cache hit: splice the adopted
-        shared blocks' K/V (read straight from the pool) into a throwaway
-        dense cache as attention context, run a decode-mode continuation
-        over just the suffix tokens, and scatter ONLY the suffix K/V back
-        into the pool (the shared span is never re-written). Prefill
-        compute therefore scales with the unshared suffix, not the full
-        prompt. Shapes are power-of-two bucketed (suffix length AND cache
-        capacity) so the executable count stays O(log² max_len)."""
-        S = len(toks)
-        n_new = S - ctx
-        # copy-on-write happens HERE, not at adoption: the suffix write
-        # may land inside the aliased tail block (fully-aliased aligned
-        # prompts recompute their last token), and the fork must copy the
-        # block AFTER the wave's miss-prefills have written it
-        PK.ensure_writable(self.pstate, slot, ctx, n_new)
-        Sb = _pow2_at_least(n_new)
-        cache_len = _pow2_at_least(ctx + Sb)
-        self._prefill_shapes.add((1, Sb))
-        rcache = T.init_cache(self.cfg, 1, cache_len, self.dtype)
-        cb = min(_pow2_at_least(max(ctx, 1)), cache_len)
-        pk, pv = PK.gather_request(self.pstate, slot, cb)
-        rcache["layers"]["k"] = rcache["layers"]["k"].at[:, 0, :cb].set(
+    def _prefill_shared_batch(self, slots: List[int], toks_list,
+                              ctxs: List[int], cb: int, Sb: int,
+                              n_real: Optional[int] = None):
+        """Bucketed suffix-only prefill for a GROUP of prefix-cache hits:
+        splice every hit's adopted shared-block K/V (ONE batched pool
+        gather) into a shared throwaway dense cache as attention context,
+        run one decode-mode continuation over the padded suffix rows, and
+        scatter ONLY the suffix K/V back (one batched pool write — the
+        shared spans are never re-written). Prefill compute scales with
+        the unshared suffixes, and executable count with the number of
+        (context, suffix) power-of-two buckets — O(log² max_len) — not
+        with the number of hit requests. Per-row true context lengths
+        ride in the positions array (poisoned past ctx_i: BIG_POS rows
+        are masked out of attention), so one executable serves every
+        member of the bucket. Callers run ``ensure_writable`` (CoW fork)
+        per member beforehand."""
+        G = len(slots)
+        n_real = G if n_real is None else n_real
+        # dummy pad rows (duplicated slots past n_real) scatter nothing:
+        # their new-token count is forced to 0 below, which the batched
+        # pool write drops row-wise
+        n_news = [(len(t) - c) if i < n_real else 0
+                  for i, (t, c) in enumerate(zip(toks_list, ctxs))]
+        cache_len = _pow2_at_least(cb + Sb)
+        self._prefill_shapes.add((G, Sb))
+        rcache = T.init_cache(self.cfg, G, cache_len, self.dtype)
+        pk, pv = PK.gather_requests(self.pstate, slots, cb)
+        rcache["layers"]["k"] = rcache["layers"]["k"].at[:, :, :cb].set(
             pk.astype(rcache["layers"]["k"].dtype))
-        rcache["layers"]["v"] = rcache["layers"]["v"].at[:, 0, :cb].set(
+        rcache["layers"]["v"] = rcache["layers"]["v"].at[:, :, :cb].set(
             pv.astype(rcache["layers"]["v"].dtype))
-        # positions: real for the spliced context, poisoned (BIG_POS ->
-        # masked out of attention) for the garbage rows past ctx that the
-        # block-granular gather may have dragged in
-        pos = np.full((1, cache_len), int(T.BIG_POS), np.int32)
-        pos[0, :ctx] = np.arange(ctx)
+        pos = np.full((G, cache_len), int(T.BIG_POS), np.int32)
+        suffix = np.zeros((G, Sb), np.int32)
+        spos = np.zeros((G, Sb), np.int32)
+        for i, (toks, ctx, n_new) in enumerate(zip(toks_list, ctxs,
+                                                   n_news)):
+            pos[i, :ctx] = np.arange(ctx)
+            suffix[i, :n_new] = toks[ctx:ctx + n_new]
+            spos[i] = np.arange(ctx, ctx + Sb)
         rcache["positions"] = jnp.asarray(pos)
-        suffix = np.zeros((1, Sb), np.int32)
-        suffix[0, :n_new] = toks[ctx:]
-        spos = jnp.broadcast_to(
-            jnp.arange(ctx, ctx + Sb, dtype=jnp.int32), (1, Sb))
         logits, rcache, _ = _extend_last_fn(
-            self.params, jnp.asarray(suffix), spos, rcache,
-            jnp.asarray([n_new - 1], jnp.int32),
+            self.params, jnp.asarray(suffix), jnp.asarray(spos), rcache,
+            jnp.asarray(np.asarray(n_news, np.int32) - 1),
             cfg=self.cfg, window=self.window)
-        self.pstate = PK.write_tokens_batch(
-            self.pstate, [slot],
-            rcache["layers"]["k"][:, :, ctx:ctx + Sb],
-            rcache["layers"]["v"][:, :, ctx:ctx + Sb],
-            lengths=[n_new])
+        # each row's suffix K/V landed at cache slots [ctx_i, ctx_i+Sb):
+        # a per-row gather pulls them out for the batched pool scatter
+        # (write_tokens_batch drops the pad rows past each true n_new)
+        idx = jnp.asarray(spos)[None, :, :, None, None]
+        k_sfx = jnp.take_along_axis(rcache["layers"]["k"], idx, axis=2)
+        v_sfx = jnp.take_along_axis(rcache["layers"]["v"], idx, axis=2)
+        self.pstate = PK.write_tokens_batch(self.pstate, slots,
+                                            k_sfx, v_sfx, lengths=n_news)
         return logits
 
     def _admit(self):
@@ -695,6 +742,12 @@ class Engine:
                 max_top_k=max_top_k, degrees=self._step_degrees)
             toks = jax.device_get(toks_dev)     # the ONE host sync
             st.lengths[active_mask] += 1
+            # dirty-set bookkeeping for overlapped migration: the fused
+            # step scattered each active slot's token into the block at
+            # its pre-step write head (host arithmetic only — no sync)
+            PK.mark_written(st, [
+                int(st.block_tables[s, int(pre_lengths[s]) // bs])
+                for s in self.active])
             if self.window:
                 for slot in self.active:
                     PK.free_out_of_window(st, slot, self.window)
@@ -774,7 +827,8 @@ class Engine:
             self._step_degrees = tuple(R.quantize_degrees(list(p), mesh_n))
 
     # --------------------------------------- request migration (paged)
-    def pause_request(self, slot: int) -> dict:
+    def pause_request(self, slot: int,
+                      since_epoch: Optional[int] = None) -> dict:
         """Detach the ACTIVE request in ``slot`` and export its full
         serving state: KV blocks (paged_kv.export_blocks wire format),
         position (token count), and the counter-based sampling state —
@@ -784,13 +838,20 @@ class Engine:
         the slot then releases its claim (decref — co-holders of shared
         blocks are untouched, sole-owned blocks return to the pool).
         ``resume_request`` on any engine with identical cfg/params
-        continues the stream token-identically."""
+        continues the stream token-identically.
+
+        ``since_epoch`` (a prior ``snapshot_request``'s ``epoch``) makes
+        this the phase-2 pause of an OVERLAPPED migration: the payload
+        carries only the blocks written since the snapshot — the short
+        delta the destination's ``commit_resume`` applies over its
+        staged phase-1 base."""
         if self.cache_kind != "paged":
             raise ValueError("pause/resume migrates paged KV blocks; "
                              "dense slabs go through core.migration")
         req = self.active.pop(slot)
         self._admit_order.remove(slot)
-        payload = PK.export_blocks(self.pstate, slot)
+        payload = PK.export_blocks(self.pstate, slot,
+                                   since_epoch=since_epoch)
         PK.free_slot(self.pstate, slot)
         req.slot = None
         # "position"/"counter" are INFORMATIONAL wire-format mirrors (for
@@ -826,3 +887,65 @@ class Engine:
         self.active[slot] = req
         self._admit_order.append(slot)  # migrated-in = youngest
         return True
+
+    # ------------------------------- overlapped (two-phase) migration
+    def snapshot_request(self, slot: int) -> dict:
+        """Phase 1 of an overlapped migration: export the ACTIVE request
+        in ``slot`` WITHOUT detaching it — the stream keeps decoding
+        while the bulk payload travels and the destination stages it
+        (``prepare_resume``). The returned ``epoch`` is the dirty-set
+        cursor: pass it to ``pause_request(slot, since_epoch=epoch)``
+        for the phase-2 delta (blocks written since this snapshot)."""
+        if self.cache_kind != "paged":
+            raise ValueError("snapshot_request needs a paged engine")
+        req = self.active[slot]
+        payload = PK.export_blocks(self.pstate, slot)
+        return {"rid": req.rid, "kv": payload, "epoch": payload["epoch"],
+                "position": payload["length"]}
+
+    def prepare_resume(self, snap: dict) -> Optional[int]:
+        """Stage a phase-1 snapshot into this pool: import the blocks
+        into a free slot that admission cannot touch (``_staged``), but
+        do NOT activate anything — the request itself is still decoding
+        at the source. Returns the staging slot, or None (without
+        mutating the pool) when no slot or not enough blocks are free."""
+        if self.cache_kind != "paged":
+            raise ValueError("prepare_resume needs a paged engine")
+        free = self._free_slots()
+        if not free:
+            return None
+        slot = free[0]
+        try:
+            PK.import_blocks(self.pstate, slot, snap["kv"])
+        except PK.OutOfBlocks:
+            return None
+        self._staged[slot] = snap["rid"]
+        return slot
+
+    def commit_resume(self, slot: int, payload: dict) -> bool:
+        """Phase 2: apply the pause-time delta over the staged base and
+        put the request into decode rotation. ``payload`` is the source's
+        ``pause_request(slot, since_epoch=snapshot epoch)`` result. On
+        OutOfBlocks (the delta needed new columns a now-full pool can't
+        provide) the staging is rolled back and False returned — the
+        caller re-queues the request, which replays deterministically."""
+        assert slot in self._staged, f"slot {slot} holds no staged import"
+        req = payload["request"]
+        try:
+            PK.import_blocks_delta(self.pstate, slot, payload["kv"])
+        except PK.OutOfBlocks:
+            self.abort_resume(slot)
+            return False
+        del self._staged[slot]
+        req.slot = slot
+        self.active[slot] = req
+        self._admit_order.append(slot)  # migrated-in = youngest
+        return True
+
+    def abort_resume(self, slot: int):
+        """Drop a staged phase-1 import (source died, request finished
+        at the source, or the caller chose replay): free the staged
+        blocks and return the slot to admission."""
+        if slot in self._staged:
+            del self._staged[slot]
+            PK.free_slot(self.pstate, slot)

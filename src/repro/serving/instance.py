@@ -1,0 +1,258 @@
+"""InstanceHandle — the orchestrator's transport-agnostic view of one
+serving instance.
+
+The §5 control loop (serving/orchestrator.py) composes N model replicas.
+Before the distributed plane, those were N in-process ``Engine`` objects
+and the orchestrator reached straight into their attributes; now an
+instance may equally be a real paged Engine living in ANOTHER PROCESS
+behind the RPC wire protocol (serving/transport.py +
+serving/remote_engine.py). This module defines the one interface both
+sides present, so the orchestrator contains no transport knowledge at
+all:
+
+* **serving ops** — ``submit`` / ``step`` / ``apply_plan`` and the queue
+  surgery the zero-drop paths need (``requeue_front``, ``push_queue``,
+  ``drain_queue``);
+* **telemetry** — every handle owns an ``EngineTelemetry`` (local:
+  recorded around the direct call; remote: a mirror refreshed from the
+  server's serialized snapshot piggybacked on each step reply) plus the
+  point gauges ``free_blocks`` / ``blocks_in_use`` / ``queue_len`` /
+  ``active_rids`` / ``clock`` / ``preempt_count`` / ``prefix_stats``
+  the orchestrator folds into ``core.monitor.MetricsSnapshot``;
+* **migration** — the stop-the-world pair (``pause_request`` /
+  ``resume_request``) and the two-phase overlapped quartet
+  (``snapshot_request`` → ``prepare_resume`` → ``pause_request(...,
+  since_epoch)`` → ``commit_resume`` | ``abort_resume``).
+  ``prepare_resume_async`` returns a waitable so the orchestrator can
+  keep the bulk phase-1 import in flight on the destination while it
+  keeps STEPPING the source — the overlap that bounds the victim
+  stream's stall to the phase-2 delta;
+* **liveness** — ``alive`` / ``close``; a dead remote raises
+  ``transport.TransportClosed`` from any op, which the orchestrator's
+  crash recovery turns into re-queue + deterministic replay of the
+  handle's ``inflight_requests`` mirror.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+
+from repro.serving import instrument as INS
+from repro.serving.engine import Engine, Request
+from repro.serving.instrument import EngineTelemetry
+
+
+def pristine(req: Request) -> Request:
+    """A replayable clone: same identity/sampling state (rid, prompt,
+    seed, counters restart at 0), all per-run mutable state reset.
+    Counter-based sampling keys make re-running it from scratch
+    reproduce the original stream token-for-token — the zero-drop
+    recovery primitive."""
+    return dataclasses.replace(
+        req, generated=[], slot=None, submit_time=0.0,
+        first_token_time=None, finish_time=None, preemptions=0)
+
+
+class Completed:
+    """Already-resolved stand-in for a transport ``Pending`` (local
+    handles execute synchronously)."""
+
+    def __init__(self, value):
+        self._value = value
+
+    def wait(self):
+        return self._value
+
+
+class InstanceHandle:
+    """Abstract control surface of one serving instance (see module
+    docstring). Concrete: ``LocalInstance`` below,
+    ``remote_engine.EngineProxy`` for the multi-process plane."""
+
+    telemetry: EngineTelemetry
+
+    # ------------------------------------------------------ serving ops
+    def submit(self, req: Request):
+        raise NotImplementedError
+
+    def step(self) -> List[Request]:
+        raise NotImplementedError
+
+    def apply_plan(self, p: List[int]):
+        raise NotImplementedError
+
+    def requeue_front(self, req: Request):
+        raise NotImplementedError
+
+    def push_queue(self, req: Request):
+        raise NotImplementedError
+
+    def drain_queue(self) -> List[Request]:
+        raise NotImplementedError
+
+    # -------------------------------------------------------- telemetry
+    def queue_len(self) -> int:
+        raise NotImplementedError
+
+    def active_rids(self) -> Dict[int, int]:
+        """slot -> rid of every ACTIVE request."""
+        raise NotImplementedError
+
+    def active_count(self) -> int:
+        return len(self.active_rids())
+
+    def free_blocks(self) -> int:
+        raise NotImplementedError
+
+    def blocks_in_use(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def n_blocks(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def max_batch(self) -> int:
+        raise NotImplementedError
+
+    def pool_bytes(self) -> int:
+        raise NotImplementedError
+
+    def clock(self) -> float:
+        raise NotImplementedError
+
+    def preempt_count(self) -> int:
+        raise NotImplementedError
+
+    def prefix_stats(self) -> dict:
+        raise NotImplementedError
+
+    # -------------------------------------------------------- migration
+    def pause_request(self, slot: int,
+                      since_epoch: Optional[int] = None) -> dict:
+        raise NotImplementedError
+
+    def resume_request(self, payload: dict) -> bool:
+        raise NotImplementedError
+
+    def snapshot_request(self, slot: int) -> dict:
+        raise NotImplementedError
+
+    def prepare_resume(self, snap: dict) -> Optional[int]:
+        return self.prepare_resume_async(snap).wait()
+
+    def prepare_resume_async(self, snap: dict):
+        raise NotImplementedError
+
+    def commit_resume(self, slot: int, payload: dict) -> bool:
+        raise NotImplementedError
+
+    def abort_resume(self, slot: int):
+        raise NotImplementedError
+
+    # --------------------------------------------------------- liveness
+    def alive(self) -> bool:
+        return True
+
+    def inflight_requests(self) -> List[Request]:
+        """Replayable clones of every request this instance currently
+        holds (queued or active) — the crash-recovery worklist. Local
+        instances die with the orchestrator, so theirs is empty."""
+        return []
+
+    def close(self):
+        pass
+
+
+class LocalInstance(InstanceHandle):
+    """An Engine in this process behind the handle interface — the
+    degenerate transport. Telemetry is recorded around the direct call
+    (mirroring what a remote engine server does around its)."""
+
+    def __init__(self, engine: Engine,
+                 telemetry: Optional[EngineTelemetry] = None):
+        self.engine = engine
+        self.telemetry = telemetry or EngineTelemetry()
+
+    # ------------------------------------------------------ serving ops
+    def submit(self, req: Request):
+        self.engine.submit(req)
+
+    def step(self) -> List[Request]:
+        return INS.timed_step(self.engine, self.telemetry)
+
+    def apply_plan(self, p):
+        self.engine.apply_plan(p)
+
+    def requeue_front(self, req: Request):
+        self.engine.queue.appendleft(req)
+
+    def push_queue(self, req: Request):
+        self.engine.queue.append(req)
+
+    def drain_queue(self) -> List[Request]:
+        out = []
+        while self.engine.queue:
+            out.append(self.engine.queue.popleft())
+        return out
+
+    # -------------------------------------------------------- telemetry
+    def queue_len(self) -> int:
+        return len(self.engine.queue)
+
+    def active_rids(self) -> Dict[int, int]:
+        return {slot: r.rid for slot, r in self.engine.active.items()}
+
+    def free_blocks(self) -> int:
+        return self.engine.pstate.free_block_count()
+
+    def blocks_in_use(self) -> int:
+        return self.engine.pstate.blocks_in_use()
+
+    @property
+    def n_blocks(self) -> int:
+        return self.engine.pstate.n_blocks
+
+    @property
+    def max_batch(self) -> int:
+        return self.engine.max_batch
+
+    def pool_bytes(self) -> int:
+        return self.engine.pstate.pool_bytes()
+
+    def clock(self) -> float:
+        return self.engine.clock
+
+    def preempt_count(self) -> int:
+        return self.engine.preempt_count
+
+    def prefix_stats(self) -> dict:
+        return self.engine.prefix_stats()
+
+    # -------------------------------------------------------- migration
+    def pause_request(self, slot: int,
+                      since_epoch: Optional[int] = None) -> dict:
+        return self.engine.pause_request(slot, since_epoch=since_epoch)
+
+    def resume_request(self, payload: dict) -> bool:
+        ok = self.engine.resume_request(payload)
+        jax.block_until_ready((self.engine.pstate.k,
+                               self.engine.pstate.v))
+        return ok
+
+    def snapshot_request(self, slot: int) -> dict:
+        return self.engine.snapshot_request(slot)
+
+    def prepare_resume_async(self, snap: dict) -> Completed:
+        return Completed(self.engine.prepare_resume(snap))
+
+    def commit_resume(self, slot: int, payload: dict) -> bool:
+        ok = self.engine.commit_resume(slot, payload)
+        jax.block_until_ready((self.engine.pstate.k,
+                               self.engine.pstate.v))
+        return ok
+
+    def abort_resume(self, slot: int):
+        self.engine.abort_resume(slot)

@@ -97,6 +97,55 @@ class EngineTelemetry:
         lats = np.asarray(self.finished_latencies)
         return float((lats > slo_latency).mean())
 
+    # ------------------------------------------------ wire serialization
+    # A remote engine server (serving/remote_engine.py) measures its own
+    # steps — wall seconds WITHOUT the RPC round trip — and ships this
+    # state back piggybacked on every step reply; the orchestrator-side
+    # mirror is refreshed with load_state, so core/monitor sees the same
+    # schema whether the engine is a local object or another process.
+
+    def to_state(self) -> dict:
+        return {"window": self.step_seconds.maxlen,
+                "step_seconds": list(self.step_seconds),
+                "step_tokens": list(self.step_tokens),
+                "finished_latencies": list(self.finished_latencies),
+                "total_tokens": self.total_tokens,
+                "total_finished": self.total_finished,
+                "preemptions_seen": self.preemptions_seen,
+                "prefix_queries": self.prefix_queries,
+                "prefix_hits": self.prefix_hits,
+                "blocks_saved": self.blocks_saved}
+
+    def load_state(self, state: dict):
+        """Overwrite this telemetry with a serialized snapshot (in place:
+        the orchestrator holds a reference to this object)."""
+        w = state.get("window") or self.step_seconds.maxlen
+        self.step_seconds = deque(state["step_seconds"], maxlen=w)
+        self.step_tokens = deque(state["step_tokens"], maxlen=w)
+        self.finished_latencies = deque(state["finished_latencies"],
+                                        maxlen=w)
+        self.total_tokens = state["total_tokens"]
+        self.total_finished = state["total_finished"]
+        self.preemptions_seen = state["preemptions_seen"]
+        self.prefix_queries = state["prefix_queries"]
+        self.prefix_hits = state["prefix_hits"]
+        self.blocks_saved = state["blocks_saved"]
+
+
+def timed_step(engine, telemetry: EngineTelemetry):
+    """Run one engine step and record it into ``telemetry`` — THE step
+    accounting definition, shared by the local handle
+    (serving/instance.LocalInstance) and the remote engine server
+    (serving/remote_engine.EngineServer) so the two planes' metrics can
+    never silently diverge. Returns the finished requests."""
+    import time
+    t0 = time.perf_counter()
+    done = engine.step() or []
+    telemetry.record_step(time.perf_counter() - t0,
+                          len(engine.active) + len(done))
+    telemetry.record_finished(done)
+    return done
+
 
 @contextlib.contextmanager
 def count_host_syncs():

@@ -1,35 +1,58 @@
 """Serving orchestrator — the paper's §5 control loop closed over LIVE
-paged engines instead of synthetic traces.
+paged engines, local or in other processes, behind one interface.
 
-One Orchestrator owns N ``Engine(cache_kind="paged")`` instances (the
-deployment's model replicas), routes incoming requests, and every
+One Orchestrator owns N serving instances (the deployment's model
+replicas) as ``serving.instance.InstanceHandle``s: a handle is either a
+``LocalInstance`` (an in-process ``Engine``) or a
+``remote_engine.EngineProxy`` (a real paged Engine in a CHILD PROCESS
+behind the RPC wire protocol of serving/transport.py — the distributed
+serving plane; ``remote=True`` or an explicit ``handles=[...]`` mix
+selects the topology). The orchestrator itself contains no transport
+knowledge: everything it does goes through the handle surface, so the
+same control loop drives one process or a fleet. Every
 ``telemetry_every`` steps:
 
-1. **telemetry**  — folds each engine's real counters (block-pool
-   vacancy, queue depth, per-step wall latency from
-   ``serving.instrument.EngineTelemetry``, SLO violations measured on
-   finished requests, prefix-sharing hit rate and blocks saved) into a
+1. **telemetry**  — folds each instance's counters (block-pool vacancy,
+   queue depth, per-step wall latency from
+   ``serving.instrument.EngineTelemetry`` — recorded in-process for
+   local instances, mirrored from the engine server's serialized
+   snapshots for remote ones — SLO violations measured on finished
+   requests, prefix-sharing hit rate and blocks saved) into a
    ``core.monitor.MetricsSnapshot``;
 2. **decision**   — runs ``core.controller.Controller.tick()`` (Alg. 1
    scale-up on vacancy, Alg. 2 scale-down on SLO violation / pool
-   pressure) against a Cluster whose devices mirror the instances;
+   pressure) against a Cluster whose devices mirror the instances.
+   After a scale-down executes, the POST-ACTION snapshot is fed back
+   and Alg. 2 iterates further phases within the same burst (bounded by
+   ``max_phases``) instead of waiting a full tick per remediation;
 3. **execution**  — applies the decision to the RUNNING instances,
    mid-decode, without draining:
 
    * scale-up: the plan's per-layer replication degrees go to every
-     engine via ``Engine.apply_plan`` (the ``layer_hook_from_degrees``
-     batch-sharding constraints on the live fused decode step);
+     instance via ``InstanceHandle.apply_plan`` (for a remote instance
+     the degree list rides an RPC frame);
    * scale-down / rebalance: KV BLOCKS of live requests migrate between
-     instances' pools — ``Engine.pause_request`` exports blocks +
-     position + counter-based sampling state, ``resume_request`` rebinds
-     them at the same block-table columns on the destination, so the
-     continuation is token-identical (greedy AND sampled). A destination
-     that can't hold the blocks re-queues the request instead of
-     dropping it (deterministic replay), keeping the loop zero-drop by
-     construction.
+     instances' pools — OVERLAPPED and two-phase by default
+     (``migrate_requests_overlapped``): a phase-1 snapshot of the
+     victim's blocks streams to the destination and is staged there
+     WHILE THE SOURCE KEEPS DECODING (the destination import is
+     pipelined; the source steps in between), then phase 2
+     pause-copies only the short dirty-set delta (blocks written since
+     the snapshot, tracked by paged_kv write epochs) and resumes at the
+     destination — the victim stream leaves decode rotation only for
+     the delta, at most one decode step. A destination that can't hold
+     the blocks re-queues the request instead of dropping it
+     (deterministic counter-based replay), keeping the loop zero-drop
+     by construction.
 
-The telemetry -> controller -> operation dataflow and the block-migration
-wire format are documented in DESIGN.md.
+Crash recovery: a remote instance that dies (its next RPC raises
+``transport.TransportClosed``) has its in-flight streams re-queued on
+surviving instances from the proxy's pristine-clone mirror; replay is
+deterministic, so a worker loss costs recompute, never output or drops.
+
+The telemetry -> controller -> operation dataflow, the block-migration
+wire format, and the two-phase migration timeline are documented in
+DESIGN.md (§3, §4, §7).
 """
 from __future__ import annotations
 
@@ -37,16 +60,15 @@ import dataclasses
 import time
 from typing import Dict, List, Optional
 
-import jax
-
 from repro.configs.base import ModelConfig
 from repro.core import migration as MIG
 from repro.core.cluster import Cluster, Device, layer_weight_bytes
 from repro.core.controller import Controller, ControllerConfig
 from repro.core.monitor import MetricsSnapshot, Monitor
 from repro.core.plan import PlacementPlan
+from repro.serving import transport as TR
 from repro.serving.engine import Engine, Request
-from repro.serving.instrument import EngineTelemetry
+from repro.serving.instance import InstanceHandle, LocalInstance
 
 
 @dataclasses.dataclass
@@ -57,9 +79,13 @@ class MigrationRecord:
     dst: int
     n_blocks: int
     bytes_moved: int
-    seconds: float
+    seconds: float          # end-to-end wall (begin -> resumed)
     est_seconds: float
     resumed: bool           # False = destination re-queued (replay) instead
+    mode: str = "stw"       # "stw" (stop-the-world) | "overlapped"
+    stall_s: float = 0.0    # wall time the stream was in NO decode rotation
+    delta_blocks: int = 0   # overlapped only: blocks in the phase-2 delta
+    delta_bytes: int = 0
 
 
 class Orchestrator:
@@ -69,23 +95,41 @@ class Orchestrator:
                  dtype="float32", slo_latency: float = 50.0,
                  telemetry_every: int = 4,
                  controller_cfg: Optional[ControllerConfig] = None,
-                 link_bandwidth: float = 50e9, **engine_kw):
-        assert n_instances >= 1
+                 link_bandwidth: float = 50e9, remote: bool = False,
+                 handles: Optional[List[InstanceHandle]] = None,
+                 max_phases: int = 3, **engine_kw):
         self.cfg = cfg
         self.slo_latency = slo_latency
         self.telemetry_every = telemetry_every
         self.link_bandwidth = link_bandwidth
-        self.engines: List[Engine] = [
-            Engine(cfg, params, max_batch=max_batch, max_len=max_len,
-                   dtype=dtype, cache_kind="paged", block_size=block_size,
-                   n_blocks=n_blocks, **engine_kw)
-            for _ in range(n_instances)]
-        self.telemetry = [EngineTelemetry() for _ in range(n_instances)]
+        self.max_phases = max_phases
+        if handles is not None:
+            self.instances: List[InstanceHandle] = list(handles)
+        elif remote:
+            from repro.serving.remote_engine import EngineProxy
+            self.instances = [
+                EngineProxy(cfg, params, max_batch=max_batch,
+                            max_len=max_len, dtype=dtype,
+                            block_size=block_size, n_blocks=n_blocks,
+                            **engine_kw)
+                for _ in range(n_instances)]
+        else:
+            self.instances = [
+                LocalInstance(Engine(cfg, params, max_batch=max_batch,
+                                     max_len=max_len, dtype=dtype,
+                                     cache_kind="paged",
+                                     block_size=block_size,
+                                     n_blocks=n_blocks, **engine_kw))
+                for _ in range(n_instances)]
+        assert self.instances, "need at least one instance"
+        n_instances = len(self.instances)
+        self.telemetry = [h.telemetry for h in self.instances]
         self._preempt_seen = [0] * n_instances
 
         # one Device per live instance; capacity = its pool + headroom for
         # layer replicas so Alg. 1's free-mem gate has room to say yes
-        pool_bytes = self.engines[0].pstate.pool_bytes()
+        pool_bytes = self.instances[0].pool_bytes()
+        mb = self.instances[0].max_batch
         ccfg = controller_cfg or ControllerConfig(
             replica_size=layer_weight_bytes(cfg, dtype_bytes=4))
         if ccfg.module_bytes is None:
@@ -95,7 +139,7 @@ class Orchestrator:
             ccfg = dataclasses.replace(
                 ccfg, module_bytes={
                     "layer": rs, "attn": rs / 3, "ffn": 2 * rs / 3,
-                    "kv_cache": pool_bytes / max(max_batch, 1)})
+                    "kv_cache": pool_bytes / max(mb, 1)})
         cap = pool_bytes + 2 * cfg.num_layers * ccfg.replica_size
         self.cluster = Cluster(
             devices=[Device(i, mem_capacity=cap, compute_flops=1.0)
@@ -105,104 +149,155 @@ class Orchestrator:
         self.monitor = Monitor()
         self.controller = Controller(
             ccfg, self.cluster, self.plan, self.monitor,
-            batch_size=max_batch,
-            # the live loop can't re-measure inside one tick: each
-            # scale-down applies ONE remediation and re-evaluates at the
-            # next telemetry snapshot (graduated response over ticks)
+            batch_size=mb,
+            # the live loop can't re-measure inside ONE scale_down call;
+            # instead control_tick feeds the post-action snapshot back
+            # and iterates Alg. 2's phases across the same burst
             is_violating=lambda plan, bs: False,
             on_plan_change=self._on_plan_change)
         self.finished: List[Request] = []
         self.migrations: List[MigrationRecord] = []
+        self.recoveries: List[dict] = []    # crash-recovery audit trail
         self.dropped = 0                    # never incremented: zero-drop
         self._tick = 0
         self._home: Dict[int, int] = {}     # rid -> instance
+        self._recovered: set = set()        # instances already recovered
+        # finishes collected by migrate_requests_overlapped's internal
+        # overlap steps: already in self.finished, surfaced through the
+        # NEXT step()'s return so run_until_done callers never miss one
+        self._orphans: List[Request] = []
+
+    # ------------------------------------------------------------ topology
+    @property
+    def engines(self) -> List[Engine]:
+        """The raw in-process Engines (tests / single-host tooling).
+        Remote instances have no local engine — use the handle surface."""
+        return [h.engine for h in self.instances
+                if isinstance(h, LocalInstance)]
+
+    def _alive(self) -> List[int]:
+        return [i for i, h in enumerate(self.instances) if h.alive()]
+
+    def clock(self) -> float:
+        alive = self._alive()
+        return self.instances[alive[0]].clock() if alive else 0.0
+
+    def close(self):
+        for h in self.instances:
+            try:
+                h.close()
+            except TR.TransportError:
+                pass
 
     # -------------------------------------------------------------- intake
     def submit(self, req: Request):
-        """Route to the instance with the most free pool blocks (ties:
-        shortest queue, lowest id) — block vacancy is the live resource
-        the paper's admission reasons about. The count includes
+        """Route to the alive instance with the most free pool blocks
+        (ties: shortest queue, lowest id) — block vacancy is the live
+        resource the paper's admission reasons about. The count includes
         cached-free blocks (refcount-0 prefix-cache residents): they are
         evictable on demand, so they ARE vacancy."""
         i = self._route()
         self._home[req.rid] = i
-        self.engines[i].submit(req)
+        self.instances[i].submit(req)
 
-    def _route(self) -> int:
+    def _route(self, among: Optional[List[int]] = None) -> int:
+        cands = among if among is not None else self._alive()
+        assert cands, "no alive instance to route to"
+
         def score(i: int):
-            e = self.engines[i]
-            return (-e.pstate.free_block_count(), len(e.queue), i)
-        return min(range(len(self.engines)), key=score)
+            h = self.instances[i]
+            return (-h.free_blocks(), h.queue_len(), i)
+        return min(cands, key=score)
 
     # ------------------------------------------------------------ main loop
     def step(self) -> List[Request]:
-        """One orchestrator iteration: step every engine (measuring real
-        wall latency), collect finishes, and on telemetry ticks run the
-        monitor -> controller -> execute pipeline."""
+        """One orchestrator iteration: step every alive instance (each
+        handle records real wall latency into its telemetry), collect
+        finishes, recover any instance whose transport died, and on
+        telemetry ticks run the monitor -> controller -> execute
+        pipeline."""
         fin: List[Request] = []
-        for i, eng in enumerate(self.engines):
-            t0 = time.perf_counter()
-            done = eng.step() or []
-            self.telemetry[i].record_step(time.perf_counter() - t0,
-                                          len(eng.active) + len(done))
-            self.telemetry[i].record_finished(done)
-            fin.extend(done)
+        for i, h in enumerate(self.instances):
+            if not h.alive():
+                continue
+            try:
+                fin.extend(h.step())
+            except TR.TransportClosed:
+                self.handle_instance_failure(i)
         self.finished.extend(fin)
         self._tick += 1
         if self._tick % self.telemetry_every == 0:
             self.control_tick()
-        return fin
+        return self._drain_orphans() + fin
+
+    def _drain_orphans(self) -> List[Request]:
+        """Finishes collected inside migrate_requests_overlapped's
+        overlap steps (already in ``self.finished``), handed to the next
+        step()/run_until_done() return so no caller misses one."""
+        out, self._orphans = self._orphans, []
+        return out
 
     def run_until_done(self, max_steps: int = 10_000) -> List[Request]:
-        out: List[Request] = []
+        out: List[Request] = self._drain_orphans()
         steps = 0
-        while any(e.queue or e.active for e in self.engines) \
-                and steps < max_steps:
+        while steps < max_steps and any(
+                h.alive() and (h.queue_len() or h.active_rids())
+                for h in self.instances):
             out.extend(self.step())
             steps += 1
         return out
 
     # ------------------------------------------------------------ telemetry
     def snapshot(self) -> MetricsSnapshot:
-        """Fold live engine counters into the Monitor's schema. All
+        """Fold live instance counters into the Monitor's schema. All
         quantities are measured, none synthetic: utilization is occupied
         decode slots, memory is pool blocks in use (shared blocks counted
         ONCE — prefix sharing directly inflates the vacancy signal the
         controller scales on, with prefix_hit_rate/blocks_saved gauges
         saying how much), latency/SLO come from finished requests'
-        engine-clock timestamps."""
+        engine-clock timestamps. A dead instance reports full/busy so the
+        controller neither targets it nor counts it as vacancy."""
         util, memf, vac = [], [], []
         new_preempts = 0
-        for i, eng in enumerate(self.engines):
-            util.append(len(eng.active) / eng.max_batch)
-            used = eng.pstate.blocks_in_use() / eng.pstate.n_blocks
+        for i, h in enumerate(self.instances):
+            if not h.alive():
+                util.append(1.0)
+                memf.append(1.0)
+                vac.append(0.0)
+                continue
+            util.append(h.active_count() / h.max_batch)
+            used = h.blocks_in_use() / h.n_blocks
             memf.append(used)
             vac.append(1.0 - used)
-            n = eng.preempt_count
+            n = h.preempt_count()
             new_preempts += n - self._preempt_seen[i]
             self._preempt_seen[i] = n
-            ps = eng.prefix_stats()
-            self.telemetry[i].record_prefix(ps["queries"], ps["hits"],
-                                            ps["blocks_saved_now"])
+            ps = h.prefix_stats()
+            h.telemetry.record_prefix(ps["queries"], ps["hits"],
+                                      ps["blocks_saved_now"])
         # fleet sharing gauges are READ BACK from the telemetry mirrors
-        # just written — EngineTelemetry is the metrics source of record
-        pq = sum(t.prefix_queries for t in self.telemetry)
-        ph = sum(t.prefix_hits for t in self.telemetry)
-        saved = sum(t.blocks_saved for t in self.telemetry)
-        lats = [t.latency_quantile(0.5) for t in self.telemetry]
-        tps = sum(t.tokens_per_s() for t in self.telemetry)
-        viol = [t.slo_violation_rate(self.slo_latency)
-                for t in self.telemetry]
+        # just written — EngineTelemetry is the metrics source of record.
+        # Folds cover ALIVE instances only: a dead worker's frozen mirror
+        # (e.g. a pinned SLO-violation rate) must not drive the
+        # controller after its streams were replayed elsewhere.
+        tel = [self.telemetry[i] for i in self._alive()]
+        pq = sum(t.prefix_queries for t in tel)
+        ph = sum(t.prefix_hits for t in tel)
+        saved = sum(t.blocks_saved for t in tel)
+        lats = [t.latency_quantile(0.5) for t in tel]
+        tps = sum(t.tokens_per_s() for t in tel)
+        viol = [t.slo_violation_rate(self.slo_latency) for t in tel]
         return MetricsSnapshot(
-            t=self.engines[0].clock,
+            t=self.clock(),
             tokens_per_s=tps,
             p50_latency=max(lats) if lats else 0.0,
-            p95_latency=max(t.latency_quantile(0.95)
-                            for t in self.telemetry),
+            p95_latency=max((t.latency_quantile(0.95) for t in tel),
+                            default=0.0),
             slo_violation_rate=max(viol) if viol else 0.0,
-            queue_len=sum(len(e.queue) for e in self.engines),
+            queue_len=sum(self.instances[i].queue_len()
+                          for i in self._alive()),
             device_util=util, device_mem_frac=memf, block_vacancy=vac,
-            step_seconds=max(t.mean_step_s() for t in self.telemetry),
+            step_seconds=max((t.mean_step_s() for t in tel), default=0.0),
             preemptions=new_preempts,
             prefix_hit_rate=ph / pq if pq else 0.0,
             blocks_saved=saved)
@@ -210,72 +305,115 @@ class Orchestrator:
     def _sync_cluster(self, snap: MetricsSnapshot):
         for d, u, m in zip(self.cluster.devices, snap.device_util,
                            snap.device_mem_frac):
-            pool = self.engines[d.device_id].pstate.pool_bytes()
+            h = self.instances[d.device_id]
+            pool = h.pool_bytes() if h.alive() else d.mem_capacity
             d.util_compute = u
             d.used_mem = m * pool
 
     # ------------------------------------------------------------- control
-    def control_tick(self) -> Optional[str]:
-        """One monitor -> controller -> execute round (also callable
-        directly by tests/benchmarks to inject a decision point)."""
-        snap = self.snapshot()
-        self.controller.observe(snap)
-        self._sync_cluster(snap)
-        action = self.controller.tick()
-        if action and action.startswith("scale-down"):
-            self._execute_scale_down()
+    def control_tick(self, max_phases: Optional[int] = None
+                     ) -> Optional[str]:
+        """One monitor -> controller -> execute BURST (also callable
+        directly by tests/benchmarks to inject a decision point).
+
+        Scale-down iterates: after executing a remediation, the
+        post-action MetricsSnapshot — which already reflects the moved
+        blocks, queue handoffs and cleared preemption pressure — is fed
+        back into the Controller and Alg. 2 runs another phase within
+        the same burst, until it stops demanding one, a phase moves
+        nothing, or ``max_phases`` is hit. This is the live analogue of
+        Alg. 2's "re-check after each phase": measure, act, re-measure —
+        not one optimistic remediation per tick."""
+        phases = self.max_phases if max_phases is None else max_phases
+        last = None
+        for phase in range(phases):
+            snap = self.snapshot()
+            self.controller.observe(snap)
+            self._sync_cluster(snap)
+            action = self.controller.tick(in_burst=phase > 0)
+            if action:
+                last = action
+            if not (action and action.startswith("scale-down")):
+                break
+            if self._execute_scale_down() == 0:
+                break       # nothing left to move: the burst is done
         self.plan = self.controller.plan
-        return action
+        return last
 
     def _on_plan_change(self, plan: PlacementPlan, batch_size: int):
         """Controller callback: push the new replication degrees to every
         LIVE instance — the next decode step of each engine runs under
-        the plan's per-layer batch sharding, no drain, no restart."""
+        the plan's per-layer batch sharding, no drain, no restart (for a
+        remote instance the degree list travels as an RPC frame)."""
         self.plan = plan
-        for eng in self.engines:
-            eng.apply_plan(plan)
+        for i in self._alive():
+            self.instances[i].apply_plan(list(plan.p))
 
-    def _execute_scale_down(self):
+    def _execute_scale_down(self) -> int:
         """Realize the controller's Phase-1 module migrations as KV-block
         transfers: whatever module the plan nominally moves, what a live
         instance can shed mid-decode is the memory-intensive module —
         its requests' paged KV (§3.3's preferred migrant). One rebalance
-        per (src, dst) pair per tick."""
+        per (src, dst) pair per phase, each OVERLAPPED (the source keeps
+        decoding while the bulk snapshot stages at the destination).
+        Returns the number of requests actually moved — the feedback
+        signal ``control_tick``'s burst iteration keys on."""
         res = self.controller.last_scale_down
         if res is None:
-            return
+            return 0
         seen = set()
+        moved = 0
         for layer, comp, src, dst in res.migrations:
             if (src, dst) in seen or src == dst:
                 continue
+            if not (self.instances[src].alive()
+                    and self.instances[dst].alive()):
+                continue
             seen.add((src, dst))
-            self.migrate_requests(src, dst)
+            moved += len(self.migrate_requests_overlapped(src, dst))
+        return moved
 
     # ------------------------------------------------------------ migration
     def migrate_requests(self, src: int, dst: int,
                          max_requests: Optional[int] = None
                          ) -> List[MigrationRecord]:
-        """Move active requests' KV blocks from instance ``src`` to
-        ``dst``, mid-stream. Never drops: a request the destination pool
-        can't hold is re-queued there and replays deterministically
-        (counter-based sampling keys). Requests holding SHARED
-        (refcounted) blocks migrate safely: the export materializes
-        shared content into the payload and carries the prefix keys, so
-        the stream stays token-identical and the destination's prefix
-        cache learns the migrated prompt."""
-        seng, deng = self.engines[src], self.engines[dst]
-        slots = sorted(seng.active.keys())
+        """STOP-THE-WORLD migration (the baseline the overlapped path is
+        benchmarked against): pause, ship everything, resume — the
+        victim stream is out of decode rotation for the full transfer.
+        Never drops: a request the destination pool can't hold is
+        re-queued there and replays deterministically (counter-based
+        sampling keys). Requests holding SHARED (refcounted) blocks
+        migrate safely: the export materializes shared content into the
+        payload and carries the prefix keys, so the stream stays
+        token-identical and the destination's prefix cache learns the
+        migrated prompt."""
+        hsrc, hdst = self.instances[src], self.instances[dst]
+        slots = sorted(hsrc.active_rids().keys())
         if max_requests is not None:
             slots = slots[:max_requests]
         out: List[MigrationRecord] = []
         for slot in slots:
             t0 = time.perf_counter()
-            payload = seng.pause_request(slot)
+            try:
+                payload = hsrc.pause_request(slot)
+            except TR.TransportClosed:
+                # source died: its inflight mirror (which still holds
+                # this stream) replays on survivors
+                self.handle_instance_failure(src)
+                break
             req = payload["request"]
-            ok = deng.resume_request(payload)
-            if not ok:
-                deng.queue.appendleft(req)   # zero-drop fallback: replay
-            jax.block_until_ready((deng.pstate.k, deng.pstate.v))
+            try:
+                ok = hdst.resume_request(payload)
+                if not ok:
+                    hdst.requeue_front(req)  # zero-drop fallback: replay
+            except TR.TransportClosed:
+                # destination died AFTER the source detached the stream:
+                # the payload in hand is the only copy — hand it back to
+                # the (alive) source for deterministic replay, then
+                # recover whatever else the destination held
+                hsrc.requeue_front(req)
+                self.handle_instance_failure(dst)
+                break
             dt = time.perf_counter() - t0
             nbytes = payload["kv"]["nbytes"]
             rec = MigrationRecord(
@@ -283,41 +421,195 @@ class Orchestrator:
                 n_blocks=len(payload["kv"]["cols"]),
                 bytes_moved=nbytes, seconds=dt,
                 est_seconds=MIG.estimate_cost(nbytes, self.link_bandwidth),
-                resumed=ok)
+                resumed=ok, mode="stw", stall_s=dt)
             self._home[req.rid] = dst
             self.migrations.append(rec)
             out.append(rec)
         return out
 
+    def begin_migration(self, src: int, dst: int, slot: int) -> dict:
+        """Phase 1 of an overlapped migration: snapshot the victim's
+        blocks at the source WITHOUT pausing it, and pipeline the staging
+        import at the destination (``prepare_resume_async`` — for a
+        remote destination the import runs in its process while this one
+        keeps stepping the source). Returns the migration ticket for
+        ``finish_migration``."""
+        hsrc, hdst = self.instances[src], self.instances[dst]
+        t0 = time.perf_counter()
+        snap = hsrc.snapshot_request(slot)
+        pending = hdst.prepare_resume_async(snap)
+        return {"src": src, "dst": dst, "slot": slot, "rid": snap["rid"],
+                "epoch": snap["epoch"], "pending": pending,
+                "snap_blocks": len(snap["kv"]["cols"]),
+                "snap_bytes": snap["kv"]["nbytes"], "t0": t0}
+
+    def finish_migration(self, ticket: dict) -> Optional[MigrationRecord]:
+        """Phase 2: pause the victim, ship ONLY the dirty-set delta
+        (blocks written since the phase-1 snapshot), commit at the
+        destination, rotate the stream back in. The stream is out of
+        decode rotation exactly for this window (``stall_s``). Falls
+        back zero-drop at every exit: source finished/preempted the
+        stream meanwhile -> abort staging; staging failed or the commit
+        can't fit -> full re-queue + deterministic replay; a transport
+        death -> crash recovery. Returns None when there was nothing
+        left to move."""
+        src, dst, slot = ticket["src"], ticket["dst"], ticket["slot"]
+        hsrc, hdst = self.instances[src], self.instances[dst]
+        try:
+            staged = ticket["pending"].wait()
+        except TR.TransportClosed:
+            self.handle_instance_failure(dst)
+            return None
+        payload = None
+        try:
+            still = hsrc.active_rids().get(slot) == ticket["rid"]
+            if not still:
+                # finished or preempted at the source in the meantime:
+                # its tokens/queue entry live there — nothing to move
+                if staged is not None:
+                    hdst.abort_resume(staged)
+                return None
+            t_pause = time.perf_counter()
+            if staged is None:
+                # destination couldn't stage the bulk: classic path
+                payload = hsrc.pause_request(slot)
+                ok = hdst.resume_request(payload)
+            else:
+                payload = hsrc.pause_request(slot,
+                                             since_epoch=ticket["epoch"])
+                ok = hdst.commit_resume(staged, payload)
+            req = payload["request"]
+            if not ok:
+                hdst.requeue_front(req)  # zero-drop fallback: replay
+            stall = time.perf_counter() - t_pause
+        except TR.TransportClosed:
+            dead = src if not hsrc.alive() else dst
+            if payload is not None and dead == dst and hsrc.alive():
+                # the destination died AFTER the source detached the
+                # stream: the payload in hand is the only copy — hand it
+                # back to the source for deterministic replay
+                hsrc.requeue_front(payload["request"])
+            if staged is not None and hdst.alive():
+                try:
+                    hdst.abort_resume(staged)
+                except TR.TransportClosed:
+                    pass
+            self.handle_instance_failure(dead)
+            return None
+        shipped = payload["kv"]["nbytes"]   # delta, or the full re-ship
+        delta_bytes = shipped if staged is not None else 0
+        nbytes = ticket["snap_bytes"] + shipped
+        rec = MigrationRecord(
+            rid=req.rid, src=src, dst=dst,
+            n_blocks=ticket["snap_blocks"],
+            bytes_moved=nbytes, seconds=time.perf_counter() - ticket["t0"],
+            est_seconds=MIG.estimate_cost(nbytes, self.link_bandwidth),
+            resumed=ok, mode="overlapped", stall_s=stall,
+            delta_blocks=(len(payload["kv"]["cols"])
+                          if staged is not None else 0),
+            delta_bytes=delta_bytes)
+        self._home[req.rid] = dst
+        self.migrations.append(rec)
+        return rec
+
+    def migrate_requests_overlapped(self, src: int, dst: int,
+                                    max_requests: Optional[int] = None,
+                                    overlap_steps: int = 1
+                                    ) -> List[MigrationRecord]:
+        """Two-phase migration of the source's active requests: begin
+        (snapshot + pipelined staging) for every victim, keep the WORLD
+        decoding for ``overlap_steps`` engine steps — the source
+        included: that is the overlap, and what the phase-2 dirty-set
+        delta exists for — then finish (pause-delta-commit) each. The
+        victim streams lose at most the one step in which their delta is
+        copied."""
+        hsrc = self.instances[src]
+        slots = sorted(hsrc.active_rids().keys())
+        if max_requests is not None:
+            slots = slots[:max_requests]
+        tickets = [self.begin_migration(src, dst, slot) for slot in slots]
+        for _ in range(overlap_steps):
+            for i in self._alive():
+                try:
+                    done = self.instances[i].step()
+                except TR.TransportClosed:
+                    self.handle_instance_failure(i)
+                    continue
+                self.finished.extend(done)
+                self._orphans.extend(done)  # surfaced by the next step()
+        out = []
+        for t in tickets:
+            rec = self.finish_migration(t)
+            if rec is not None:
+                out.append(rec)
+        return out
+
     def drain_instance(self, idx: int) -> List[MigrationRecord]:
-        """Scale-down consolidation: move EVERYTHING (active KV blocks +
-        queued requests) off instance ``idx`` onto the least-loaded other
-        instance, leaving ``idx`` empty and removable."""
-        others = [i for i in range(len(self.engines)) if i != idx]
+        """Scale-down consolidation: move EVERYTHING (queued requests +
+        active KV blocks, the latter overlapped) off instance ``idx``
+        onto the least-loaded other instance, leaving ``idx`` empty and
+        removable. The queue hands off FIRST so the overlap steps can't
+        re-admit at the source (submit_time is preserved: straight
+        handoff, no re-submit)."""
+        others = [i for i in self._alive() if i != idx]
         assert others, "cannot drain a single-instance deployment"
-        dst = min(others, key=lambda i: (len(self.engines[i].active),
-                                         len(self.engines[i].queue)))
-        recs = self.migrate_requests(idx, dst)
-        src = self.engines[idx]
-        while src.queue:                     # preserve submit_time: no
-            req = src.queue.popleft()        # re-submit, straight handoff
+        dst = min(others, key=lambda i: (self.instances[i].active_count(),
+                                         self.instances[i].queue_len()))
+        for req in self.instances[idx].drain_queue():
             self._home[req.rid] = dst
-            self.engines[dst].queue.append(req)
-        return recs
+            self.instances[dst].push_queue(req)
+        return self.migrate_requests_overlapped(idx, dst)
+
+    # ------------------------------------------------------ crash recovery
+    def handle_instance_failure(self, idx: int) -> List[Request]:
+        """A remote instance died (transport EOF): re-queue replayable
+        clones of every stream it held — queued AND mid-decode — on the
+        surviving instances. Counter-based sampling keys make the
+        replays token-identical to the lost continuations, so the
+        failure costs recompute, never output: the zero-drop invariant
+        survives worker loss. Idempotent: one death can surface from
+        several in-flight operations (a step, several migration
+        tickets); only the FIRST observation replays — a duplicate
+        replay would decode the same streams twice. Returns the
+        replayed requests."""
+        if idx in self._recovered:
+            return []
+        self._recovered.add(idx)
+        h = self.instances[idx]
+        replay = h.inflight_requests()
+        try:
+            h.close()
+        except TR.TransportError:
+            pass
+        survivors = self._alive()
+        assert survivors, "every instance died: nothing to recover onto"
+        for req in replay:
+            j = self._route(survivors)
+            self._home[req.rid] = j
+            self.instances[j].submit(req)
+        self.recoveries.append({"instance": idx,
+                                "rids": sorted(r.rid for r in replay)})
+        return replay
 
     # -------------------------------------------------------------- summary
     def stats(self) -> Dict:
-        ps = [e.prefix_stats() for e in self.engines]
+        ps = [self.instances[i].prefix_stats() for i in self._alive()]
         pq = sum(p["queries"] for p in ps)
         ph = sum(p["hits"] for p in ps)
+        ov = [m for m in self.migrations if m.mode == "overlapped"]
         return {
             "finished": len(self.finished),
             "dropped": self.dropped,
             "migrations": len(self.migrations),
             "migrated_bytes": sum(m.bytes_moved for m in self.migrations),
+            "overlapped_migrations": len(ov),
+            "mean_stall_s": (sum(m.stall_s for m in ov) / len(ov)
+                             if ov else 0.0),
             "preemptions": sum(self._preempt_seen),
+            "recoveries": len(self.recoveries),
             "prefix_hit_rate": ph / pq if pq else 0.0,
             "blocks_saved_now": sum(p["blocks_saved_now"] for p in ps),
+            "dedup_imports": sum(p.get("dedup_imports", 0) for p in ps),
             "controller_log": list(self.controller.log),
             "plan_p": list(self.plan.p),
         }

@@ -59,7 +59,17 @@ Division of labour with the engine:
   KV blocks between instances' pools without touching dense slabs;
   shared blocks are MATERIALIZED into the payload (content copied) and
   their prefix keys travel along, so the destination can re-seed its own
-  cache — sharing survives migration without cross-pool refcounts;
+  cache — sharing survives migration without cross-pool refcounts.
+  An import whose carried prefix key is ALREADY RESIDENT in the
+  destination cache aliases (increfs) the resident block instead of
+  materializing a duplicate — cross-instance dedupe (content-chain keys
+  certify identical content, so aliasing is exact);
+* the DIRTY SET behind overlapped migration: every pool write stamps the
+  written blocks with a monotonically increasing ``write_epoch``
+  (``mark_written``), so ``export_blocks(..., since_epoch=e)`` can ship
+  only the blocks touched after a phase-1 snapshot — the short delta a
+  two-phase migration pause-copies while the bulk streamed overlapped
+  with decode (``import_blocks_delta`` applies it over the staged base);
 * the per-step decode read is ``models.transformer.forward_paged`` — a
   gather over the block table inside the jitted step, or the Pallas kernel
   in kernels/paged_decode.py;
@@ -106,15 +116,21 @@ class PagedState:
     block_key: Dict[int, bytes] = dataclasses.field(default_factory=dict)
     cached_free: "OrderedDict[int, None]" = \
         dataclasses.field(default_factory=OrderedDict)
+    # --- dirty set for overlapped (two-phase) migration ---
+    write_epoch: int = 0                       # bumps once per pool write
+    block_epoch: Optional[np.ndarray] = None   # [n_blocks] int64 last write
     # --- counters (feed serving/instrument + core/monitor gauges) ---
     prefix_queries: int = 0       # full prompt blocks looked up
     prefix_hits: int = 0          # ... of which aliased an existing block
     cow_forks: int = 0            # copy-on-write block copies performed
     blocks_saved_total: int = 0   # cumulative allocations avoided by hits
+    dedup_imports: int = 0        # imported blocks aliased to residents
 
     def __post_init__(self):
         if self.refcount is None:     # direct constructions (tests, tools)
             self.refcount = np.zeros((self.k.shape[1],), np.int32)
+        if self.block_epoch is None:
+            self.block_epoch = np.zeros((self.k.shape[1],), np.int64)
 
     @property
     def n_blocks(self) -> int:
@@ -208,6 +224,20 @@ def _decref(state: PagedState, b: int):
             state.cached_free[b] = None  # most-recently-freed = LRU tail
         else:
             state.free.append(b)
+
+
+def mark_written(state: PagedState, block_ids) -> int:
+    """Stamp ``block_ids`` as written at a fresh ``write_epoch`` — the
+    dirty-set bookkeeping behind two-phase migration: a later
+    ``export_blocks(..., since_epoch=e)`` ships exactly the blocks
+    stamped after epoch ``e``. Called by every pool-content writer: the
+    batched prefill scatter, the fused decode step's host bookkeeping
+    (serving/engine.py), CoW forks, and imports. Returns the new epoch."""
+    state.write_epoch += 1
+    ids = [int(b) for b in block_ids if 0 <= int(b) < state.n_blocks]
+    if ids:
+        state.block_epoch[ids] = state.write_epoch
+    return state.write_epoch
 
 
 # -------------------------------------------------------------- allocation
@@ -430,6 +460,10 @@ def ensure_writable(state: PagedState, slot: int, start: int,
             dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
             state.k = state.k.at[:, dst].set(state.k[:, src])
             state.v = state.v.at[:, dst].set(state.v[:, src])
+            # a fork rebinds the column to a new physical block: the old
+            # stamp lives on the old id, so the copy must be stamped for
+            # the migration dirty set to ship the column's new content
+            mark_written(state, [p[1] for p in pairs])
     return len(pairs)
 
 
@@ -441,6 +475,7 @@ def prefix_stats(state: PagedState) -> Dict:
             "cow_forks": state.cow_forks,
             "blocks_saved_total": state.blocks_saved_total,
             "blocks_saved_now": state.shared_blocks_saved(),
+            "dedup_imports": state.dedup_imports,
             "cached_blocks": len(state.prefix_cache)}
 
 
@@ -490,6 +525,7 @@ def write_tokens_batch(state: PagedState, slots, k_new, v_new,
         state.lengths[slot] = start + n
     bidx = jnp.asarray(np.concatenate(blocks), jnp.int32)   # [G*S]
     oidx = jnp.asarray(np.concatenate(offs), jnp.int32)
+    mark_written(state, np.unique(np.concatenate(blocks)))
     # pool is [L, n_blocks, KV, bs, hd]: advanced indices at axes 1 and 3
     # move to the front, so updates are laid out [G*S, L, KV, hd]
     kf = k_new.reshape(L, G * S, *k_new.shape[3:]).transpose(1, 0, 2, 3)
@@ -502,7 +538,8 @@ def write_tokens_batch(state: PagedState, slots, k_new, v_new,
 
 
 # --------------------------------------------------- migration wire format
-def export_blocks(state: PagedState, slot: int) -> Dict:
+def export_blocks(state: PagedState, slot: int,
+                  since_epoch: Optional[int] = None) -> Dict:
     """Serialize one request's KV to the block-granular migration wire
     format (DESIGN.md §block-migration): the live block-table COLUMNS
     (absolute position // block_size — holes from sliding-window freeing
@@ -515,9 +552,27 @@ def export_blocks(state: PagedState, slot: int) -> Dict:
     source pool's sharing structure. Does NOT free or decref the source
     blocks — callers pair this with ``free_slot`` once the payload is
     safely away.
+
+    ``since_epoch`` selects the DELTA wire format: only columns whose
+    current block was written after that epoch (the dirty set since a
+    phase-1 snapshot — decode-step appends, CoW forks, new columns) are
+    shipped. The payload's ``epoch`` field is the pool's write epoch at
+    export time: pass a snapshot's ``epoch`` back as ``since_epoch`` to
+    get exactly the writes that landed in between.
     """
     cols = np.nonzero(state.block_tables[slot] >= 0)[0].astype(np.int32)
-    if len(cols):
+    if since_epoch is not None and len(cols):
+        ids_np = state.block_tables[slot, cols]
+        dirty = state.block_epoch[ids_np] > since_epoch
+        cols = cols[dirty]
+    if len(cols) == 1:
+        # the overlapped-migration delta is usually ONE tail block: a
+        # static slice + host copy beats the XLA gather by ~10x on CPU
+        # pools, and this runs inside the migration's only stall window
+        b = int(state.block_tables[slot, cols[0]])
+        k = np.asarray(state.k[:, b])[:, None]  # [L, 1, KV, bs, hd]
+        v = np.asarray(state.v[:, b])[:, None]
+    elif len(cols):
         ids = jnp.asarray(state.block_tables[slot, cols], jnp.int32)
         k = np.asarray(state.k[:, ids])        # [L, n, KV, bs, hd]
         v = np.asarray(state.v[:, ids])
@@ -534,7 +589,22 @@ def export_blocks(state: PagedState, slot: int) -> Dict:
             "length": int(state.lengths[slot]),
             "block_size": state.block_size,
             "keys": keys,
+            "epoch": state.write_epoch,
             "nbytes": int(k.nbytes + v.nbytes)}
+
+
+def _register_carried_keys(state: PagedState, slot: int, payload: Dict):
+    """Re-seed this pool's prefix cache from a payload's carried keys —
+    first binding wins, so resident entries are never displaced."""
+    if not state.enable_prefix_cache:
+        return
+    for c, hexkey in payload.get("keys", {}).items():
+        key = bytes.fromhex(hexkey)
+        b = int(state.block_tables[slot, int(c)])
+        if b < 0 or key in state.prefix_cache or b in state.block_key:
+            continue                    # existing binding wins
+        state.prefix_cache[key] = b
+        state.block_key[b] = key
 
 
 def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
@@ -545,9 +615,19 @@ def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
     scatter the block data in. Carried prefix ``keys`` are re-registered
     into this pool's cache (first binding wins) so admissions AFTER the
     migration can alias the migrated prompt — sharing structure survives
-    the hop even though refcounts are pool-local. Raises OutOfBlocks
-    without mutating state when the pool or the table row can't hold the
-    payload."""
+    the hop even though refcounts are pool-local.
+
+    CROSS-INSTANCE DEDUPE: a column whose carried key is already
+    resident in this pool's prefix cache ALIASES the resident block
+    (incref — possibly reviving it off ``cached_free``) instead of
+    materializing a duplicate copy. The content-chain key certifies the
+    token prefix, and K/V is a deterministic function of it, so the
+    resident content IS the payload content for that column. The aliased
+    column arrives SHARED like any prefix hit; writes into it fork first
+    (``ensure_writable``), exactly as for a same-pool alias.
+
+    Raises OutOfBlocks without mutating state when the pool or the
+    table row can't hold the payload."""
     if payload["block_size"] != state.block_size:
         raise ValueError(
             f"block_size mismatch: payload {payload['block_size']} "
@@ -556,52 +636,140 @@ def import_blocks(state: PagedState, slot: int, payload: Dict) -> PagedState:
         raise ValueError(f"import into non-empty slot {slot}")
     cols = np.asarray(payload["cols"], np.int64)
     n = len(cols)
-    if n > state.free_block_count():
-        raise OutOfBlocks(f"import needs {n} blocks, "
-                          f"{state.free_block_count()} free")
     if n and int(cols.max()) >= state.block_tables.shape[1]:
         raise OutOfBlocks(
             f"import needs column {int(cols.max())}, table holds "
             f"{state.block_tables.shape[1]}")
-    ids = [_pop_block(state) for _ in range(n)]
+    alias: Dict[int, int] = {}          # payload index -> resident block
+    if state.enable_prefix_cache:
+        for i, c in enumerate(cols):
+            hexkey = payload.get("keys", {}).get(int(c))
+            if hexkey is None:
+                continue
+            b = state.prefix_cache.get(bytes.fromhex(hexkey))
+            if b is not None:
+                alias[i] = b
+    fresh = [i for i in range(n) if i not in alias]
+    # reviving a cached-free resident consumes a unit of vacancy too —
+    # account for it so the no-mutation-on-raise contract holds exactly
+    revive = len({b for b in alias.values() if int(state.refcount[b]) == 0})
+    if len(fresh) > state.free_block_count() - revive:
+        raise OutOfBlocks(f"import needs {len(fresh)} blocks, "
+                          f"{state.free_block_count() - revive} free")
+    for i, b in alias.items():          # incref FIRST: aliased residents
+        _incref(state, b)               # must not be evicted by the pops
+        state.block_tables[slot, cols[i]] = b
+    ids = [_pop_block(state) for _ in fresh]
     for b in ids:
         state.refcount[b] = 1
-    state.block_tables[slot, cols] = np.asarray(ids, np.int32)
+    if fresh:
+        state.block_tables[slot, cols[fresh]] = np.asarray(ids, np.int32)
     state.lengths[slot] = payload["length"]
-    if n:
+    state.dedup_imports += len(alias)
+    state.blocks_saved_total += len(alias)
+    if fresh:
+        idx = jnp.asarray(ids, jnp.int32)
+        sel = np.asarray(fresh, np.int64)
+        state.k = state.k.at[:, idx].set(
+            jnp.asarray(payload["k"][:, sel]).astype(state.k.dtype))
+        state.v = state.v.at[:, idx].set(
+            jnp.asarray(payload["v"][:, sel]).astype(state.v.dtype))
+        mark_written(state, ids)
+    _register_carried_keys(state, slot, payload)
+    return state
+
+
+def import_blocks_delta(state: PagedState, slot: int,
+                        payload: Dict) -> PagedState:
+    """Apply a DELTA export (``export_blocks(..., since_epoch=...)``)
+    over a previously imported phase-1 base in ``slot`` — the commit
+    half of two-phase migration. Columns already staged are overwritten
+    in place when the staged block is exclusively owned; a staged block
+    that became shared (an admission aliased it) or registered is
+    REBOUND to a fresh block instead — overwriting it would corrupt its
+    co-holders / its cache key. New columns (decode appends past the
+    snapshot) allocate fresh. ``lengths[slot]`` advances to the source's
+    pause-time length. Raises OutOfBlocks without mutating state when
+    the pool can't hold the new/rebound columns."""
+    if payload["block_size"] != state.block_size:
+        raise ValueError(
+            f"block_size mismatch: payload {payload['block_size']} "
+            f"vs pool {state.block_size}")
+    cols = np.asarray(payload["cols"], np.int64)
+    n = len(cols)
+    if n and int(cols.max()) >= state.block_tables.shape[1]:
+        raise OutOfBlocks(
+            f"delta needs column {int(cols.max())}, table holds "
+            f"{state.block_tables.shape[1]}")
+    def in_place(b):
+        return b >= 0 and int(state.refcount[b]) == 1 \
+            and b not in state.block_key
+    staged = [int(state.block_tables[slot, c]) for c in cols]
+    need = sum(0 if in_place(b) else 1 for b in staged)
+    if need > state.free_block_count():
+        raise OutOfBlocks(f"delta needs {need} blocks, "
+                          f"{state.free_block_count()} free")
+    ids = []
+    for c, b in zip(cols, staged):
+        if in_place(b):
+            ids.append(b)
+            continue
+        nb = _pop_block(state)
+        state.refcount[nb] = 1
+        if b >= 0:
+            _decref(state, b)           # co-holders / cache keep the old one
+        state.block_tables[slot, c] = nb
+        ids.append(nb)
+    state.lengths[slot] = payload["length"]
+    if n == 1:
+        # the common overlapped-migration delta is ONE tail block: a
+        # dynamic_update_slice at the block offset lowers to a cheaper
+        # kernel than a gather-scatter (~2x on CPU pools), and this op
+        # sits inside the migration's only stall window
+        kd = jnp.asarray(payload["k"]).astype(state.k.dtype)
+        vd = jnp.asarray(payload["v"]).astype(state.v.dtype)
+        at = (0, ids[0], 0, 0, 0)
+        state.k = jax.lax.dynamic_update_slice(state.k, kd, at)
+        state.v = jax.lax.dynamic_update_slice(state.v, vd, at)
+        mark_written(state, ids)
+    elif n:
         idx = jnp.asarray(ids, jnp.int32)
         state.k = state.k.at[:, idx].set(
             jnp.asarray(payload["k"]).astype(state.k.dtype))
         state.v = state.v.at[:, idx].set(
             jnp.asarray(payload["v"]).astype(state.v.dtype))
-    if state.enable_prefix_cache:
-        for c, hexkey in payload.get("keys", {}).items():
-            key = bytes.fromhex(hexkey)
-            ci = int(c)
-            b = int(state.block_tables[slot, ci])
-            if key in state.prefix_cache or b in state.block_key:
-                continue                    # existing binding wins
-            state.prefix_cache[key] = b
-            state.block_key[b] = key
+        mark_written(state, ids)
+    _register_carried_keys(state, slot, payload)
     return state
 
 
 # ------------------------------------------------------------ dense views
-def gather_request(state: PagedState, slot: int, max_len: int):
-    """Materialize a request's KV as dense [L, max_len, KV, hd] (oracle /
-    fallback path, and the context splice for shared-prefix suffix
-    prefill; the paged kernel reads blocks directly). Rows past the
-    slot's allocated columns are garbage — callers mask by position."""
+def gather_requests(state: PagedState, slots: Sequence[int], max_len: int):
+    """Materialize G requests' KV as dense [L, G, max_len, KV, hd] in ONE
+    batched pool gather — the context splice for BUCKETED shared-prefix
+    suffix prefill (a whole hit group's contexts in one device op
+    instead of one gather per request). Rows past a slot's allocated
+    columns are garbage — callers mask by position."""
     bs = state.block_size
     n_blk = -(-max_len // bs)
-    tbl = state.block_tables[slot, :n_blk]
-    tbl = np.where(tbl >= 0, tbl, 0)
-    k = state.k[:, jnp.asarray(tbl, jnp.int32)]      # [L, n_blk, KV, bs, hd]
-    v = state.v[:, jnp.asarray(tbl, jnp.int32)]
+    G = len(slots)
+    tbl = state.block_tables[np.asarray(slots, np.int64), :n_blk]
+    tbl = jnp.asarray(np.where(tbl >= 0, tbl, 0), jnp.int32)   # [G, n_blk]
     L, _, KV, _, hd = state.k.shape
-    k = k.transpose(0, 1, 3, 2, 4).reshape(L, n_blk * bs, KV, hd)[:, :max_len]
-    v = v.transpose(0, 1, 3, 2, 4).reshape(L, n_blk * bs, KV, hd)[:, :max_len]
+    k = state.k[:, tbl]                       # [L, G, n_blk, KV, bs, hd]
+    v = state.v[:, tbl]
+    k = k.transpose(0, 1, 2, 4, 3, 5).reshape(
+        L, G, n_blk * bs, KV, hd)[:, :, :max_len]
+    v = v.transpose(0, 1, 2, 4, 3, 5).reshape(
+        L, G, n_blk * bs, KV, hd)[:, :, :max_len]
     return k, v
+
+
+def gather_request(state: PagedState, slot: int, max_len: int):
+    """Single-request ``gather_requests`` (oracle / fallback path):
+    dense [L, max_len, KV, hd]."""
+    k, v = gather_requests(state, [slot], max_len)
+    return k[:, 0], v[:, 0]
 
 
 def paged_attention_ref(q, state: PagedState, slots, *, layer: int):

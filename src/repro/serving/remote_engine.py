@@ -1,0 +1,369 @@
+"""Multi-process serving instances: a real paged ``Engine`` in a child
+process behind an engine-server loop, driven through ``EngineProxy``.
+
+Topology (one proxy <-> one server, one AF_UNIX stream each)::
+
+    orchestrator process                      engine-server process
+    ────────────────────                      ─────────────────────
+    EngineProxy ──frames──▶ transport.serve ──▶ Engine(cache_kind=paged)
+       │  submit/step/apply_plan/pause/...          │ real JAX execution
+       ◀── step reply: finished Requests,  ◀────────┘
+           serialized EngineTelemetry, gauge dict
+
+The child is SPAWNED (never forked — JAX runtimes do not survive a
+fork), connects back to the parent's rendezvous socket, receives one
+``init`` frame ({cfg, params as a host-array tree, engine kwargs}),
+builds the engine, and enters the dispatch loop. Everything after init
+is msgpack frames: admissions, telemetry, controller plans (replication
+degree lists), and the column-keyed block payloads of
+``paged_kv.export_blocks`` — the same wire format the in-process path
+uses, now actually crossing a process boundary. No shared memory, no
+fork-inherited state: what the frames carry is ALL the two sides share,
+which is exactly the multi-host contract (the same bytes over TCP serve
+a cross-machine deployment).
+
+Liveness: the proxy keeps a ``pristine`` clone of every request the
+server currently holds (``inflight_requests``). When the child dies —
+crash, OOM kill, or the test-only ``crash`` op — the next RPC raises
+``TransportClosed`` and the orchestrator re-queues those clones on a
+surviving instance; counter-based sampling keys replay them
+token-identically, so a worker loss costs recompute, never output.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+from typing import Dict, List, Optional
+
+from repro.serving import instrument as INS
+from repro.serving import transport as TR
+from repro.serving.instance import InstanceHandle, pristine
+from repro.serving.instrument import EngineTelemetry
+from repro.serving.engine import Request
+
+
+# ============================================================ server side
+class EngineServer:
+    """Dispatch table around one Engine (runs in the child process)."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.telemetry = EngineTelemetry()
+
+    # ---- serving ops
+    def submit(self, req: Request):
+        self.engine.submit(req)
+        return len(self.engine.queue)
+
+    def step(self):
+        done = INS.timed_step(self.engine, self.telemetry)
+        return {"finished": done, "telemetry": self.telemetry.to_state(),
+                "info": self.info()}
+
+    def apply_plan(self, p: List[int]):
+        self.engine.apply_plan(list(p))
+        return True
+
+    def requeue_front(self, req: Request):
+        self.engine.queue.appendleft(req)
+        return len(self.engine.queue)
+
+    def push_queue(self, req: Request):
+        self.engine.queue.append(req)
+        return len(self.engine.queue)
+
+    def drain_queue(self):
+        out = []
+        while self.engine.queue:
+            out.append(self.engine.queue.popleft())
+        return out
+
+    # ---- telemetry
+    def info(self) -> dict:
+        e = self.engine
+        return {"clock": e.clock,
+                "queue_len": len(e.queue),
+                "active": {int(s): r.rid for s, r in e.active.items()},
+                "free_blocks": e.pstate.free_block_count(),
+                "blocks_in_use": e.pstate.blocks_in_use(),
+                "n_blocks": e.pstate.n_blocks,
+                "max_batch": e.max_batch,
+                "pool_bytes": e.pstate.pool_bytes(),
+                "preempt_count": e.preempt_count,
+                "prefix_stats": e.prefix_stats()}
+
+    # ---- migration (each blocks until device state is real — the reply
+    # frame doubles as the transfer-complete barrier — and piggybacks
+    # the gauge dict so the proxy's cache stays fresh without a second
+    # round trip inside the migration stall window)
+    def _sync(self):
+        import jax
+        jax.block_until_ready((self.engine.pstate.k, self.engine.pstate.v))
+
+    def pause_request(self, slot: int, since_epoch=None):
+        payload = self.engine.pause_request(slot, since_epoch=since_epoch)
+        return {"result": payload, "info": self.info()}
+
+    def resume_request(self, payload: dict):
+        ok = self.engine.resume_request(payload)
+        self._sync()
+        return {"result": ok, "info": self.info()}
+
+    def snapshot_request(self, slot: int):
+        return self.engine.snapshot_request(slot)
+
+    def prepare_resume(self, snap: dict):
+        slot = self.engine.prepare_resume(snap)
+        self._sync()
+        return {"result": slot, "info": self.info()}
+
+    def commit_resume(self, slot: int, payload: dict):
+        ok = self.engine.commit_resume(slot, payload)
+        self._sync()
+        return {"result": ok, "info": self.info()}
+
+    def abort_resume(self, slot: int):
+        self.engine.abort_resume(slot)
+        return {"result": True, "info": self.info()}
+
+    # ---- liveness
+    def ping(self):
+        return "pong"
+
+    def crash(self):
+        """Test-only fault injection: die without a word — the parent's
+        next recv sees EOF, exactly like a kill -9 / OOM kill."""
+        os._exit(17)
+
+    def dispatch(self) -> dict:
+        return {op: getattr(self, op) for op in (
+            "submit", "step", "apply_plan", "requeue_front", "push_queue",
+            "drain_queue", "info", "pause_request", "resume_request",
+            "snapshot_request", "prepare_resume", "commit_resume",
+            "abort_resume", "ping", "crash")}
+
+
+def engine_server_main(address: str):
+    """Child-process entry: connect back, build the engine from the init
+    frame, serve until shutdown or parent hangup."""
+    conn = TR.connect(address)
+    init = conn.recv()
+    from repro.serving.engine import Engine  # import after spawn, in-child
+    engine = Engine(init["cfg"], init["params"], **init["engine_kw"])
+    server = EngineServer(engine)
+    conn.send({"id": 0, "ok": True, "result": "ready"})
+    TR.serve(conn, server.dispatch())
+    conn.close()
+
+
+# ============================================================= proxy side
+class _PendingStage:
+    """Pipelined prepare_resume: unwraps the piggybacked gauge dict on
+    completion and maps a dead peer to TransportClosed."""
+
+    def __init__(self, proxy: "EngineProxy", pending: TR.Pending):
+        self._proxy = proxy
+        self._pending = pending
+
+    def wait(self):
+        try:
+            return self._proxy._unwrap(self._pending.wait())
+        except TR.TransportClosed:
+            self._proxy._dead = True
+            raise
+
+
+class EngineProxy(InstanceHandle):
+    """The orchestrator-side handle of a remote engine: mirrors the
+    in-process ``Engine`` control surface over RPC frames. Gauges
+    (queue depth, pool vacancy, clock, prefix stats) read a cache
+    refreshed by every step reply — one RPC round trip per orchestrator
+    step in steady state."""
+
+    def __init__(self, cfg, params, *, start_timeout: float = 120.0,
+                 **engine_kw):
+        import jax
+        import numpy as np
+
+        self.telemetry = EngineTelemetry()
+        self._inflight: Dict[int, Request] = {}   # rid -> pristine clone
+        self._dead = False
+        address = TR.listener_address()
+        srv = TR.listen(address)
+        ctx = mp.get_context("spawn")     # never fork a live JAX runtime
+        self.process = ctx.Process(target=engine_server_main,
+                                   args=(address,), daemon=True)
+        self.process.start()
+        try:
+            self.conn = TR.accept(srv, timeout=start_timeout)
+        finally:
+            srv.close()
+            try:
+                os.unlink(address)
+            except OSError:
+                pass
+        self.rpc = TR.Rpc(self.conn)
+        host_params = jax.tree_util.tree_map(np.asarray, params)
+        self.conn.send({"cfg": cfg, "params": host_params,
+                        "engine_kw": dict(engine_kw,
+                                          cache_kind="paged")})
+        ready = self.conn.recv()          # init ack doubles as ready gate
+        assert ready.get("result") == "ready", ready
+        self._info = self._call("info")
+
+    # ------------------------------------------------------------- rpc
+    def _call(self, op, *args, **kw):
+        if self._dead:
+            raise TR.TransportClosed(f"instance already dead ({op})")
+        try:
+            return self.rpc.call(op, *args, **kw)
+        except TR.TransportClosed:
+            self._dead = True
+            raise
+
+    # ------------------------------------------------------ serving ops
+    # Queue/migration mutations refresh the cached gauge dict (the queue
+    # ops piggyback the server's returned depth; migration ops re-pull
+    # info — they are rare, the extra round trip is noise), so routing
+    # and run-until-done loops never act on a stale zero.
+    def submit(self, req: Request):
+        self._inflight[req.rid] = pristine(req)
+        self._info["queue_len"] = self._call("submit", req)
+
+    def step(self) -> List[Request]:
+        reply = self._call("step")
+        self.telemetry.load_state(reply["telemetry"])
+        self._info = reply["info"]
+        done = reply["finished"]
+        for r in done:
+            self._inflight.pop(r.rid, None)
+        return done
+
+    def apply_plan(self, p):
+        p = list(p.p) if hasattr(p, "p") else list(p)
+        self._call("apply_plan", p)
+
+    def requeue_front(self, req: Request):
+        self._inflight[req.rid] = pristine(req)
+        self._info["queue_len"] = self._call("requeue_front", req)
+
+    def push_queue(self, req: Request):
+        self._inflight[req.rid] = pristine(req)
+        self._info["queue_len"] = self._call("push_queue", req)
+
+    def drain_queue(self) -> List[Request]:
+        out = self._call("drain_queue")
+        for r in out:
+            self._inflight.pop(r.rid, None)
+        self._info["queue_len"] = 0
+        return out
+
+    # -------------------------------------------------------- telemetry
+    def refresh_info(self):
+        self._info = self._call("info")
+
+    def queue_len(self) -> int:
+        return self._info["queue_len"]
+
+    def active_rids(self) -> Dict[int, int]:
+        return {int(s): rid for s, rid in self._info["active"].items()}
+
+    def free_blocks(self) -> int:
+        return self._info["free_blocks"]
+
+    def blocks_in_use(self) -> int:
+        return self._info["blocks_in_use"]
+
+    @property
+    def n_blocks(self) -> int:
+        return self._info["n_blocks"]
+
+    @property
+    def max_batch(self) -> int:
+        return self._info["max_batch"]
+
+    def pool_bytes(self) -> int:
+        return self._info["pool_bytes"]
+
+    def clock(self) -> float:
+        return self._info["clock"]
+
+    def preempt_count(self) -> int:
+        return self._info["preempt_count"]
+
+    def prefix_stats(self) -> dict:
+        return self._info["prefix_stats"]
+
+    # -------------------------------------------------------- migration
+    def _unwrap(self, reply: dict):
+        """Migration replies piggyback the server's gauge dict."""
+        self._info = reply["info"]
+        return reply["result"]
+
+    def pause_request(self, slot: int,
+                      since_epoch: Optional[int] = None) -> dict:
+        payload = self._unwrap(self._call("pause_request", slot,
+                                          since_epoch=since_epoch))
+        self._inflight.pop(payload["request"].rid, None)
+        return payload
+
+    def resume_request(self, payload: dict) -> bool:
+        ok = self._unwrap(self._call("resume_request", payload))
+        if ok:
+            self._inflight[payload["request"].rid] = \
+                pristine(payload["request"])
+        return ok
+
+    def snapshot_request(self, slot: int) -> dict:
+        return self._call("snapshot_request", slot)
+
+    def prepare_resume_async(self, snap: dict) -> "_PendingStage":
+        if self._dead:
+            raise TR.TransportClosed("instance already dead "
+                                     "(prepare_resume)")
+        return _PendingStage(self, self.rpc.call_async("prepare_resume",
+                                                       snap))
+
+    def commit_resume(self, slot: int, payload: dict) -> bool:
+        ok = self._unwrap(self._call("commit_resume", slot, payload))
+        if ok:
+            self._inflight[payload["request"].rid] = \
+                pristine(payload["request"])
+        return ok
+
+    def abort_resume(self, slot: int):
+        self._unwrap(self._call("abort_resume", slot))
+
+    # --------------------------------------------------------- liveness
+    def alive(self) -> bool:
+        return not self._dead and self.process.is_alive()
+
+    def inflight_requests(self) -> List[Request]:
+        return list(self._inflight.values())
+
+    def kill(self):
+        """Hard-kill the child (crash-recovery tests): SIGKILL, no
+        cleanup — the next RPC observes TransportClosed."""
+        self.process.kill()
+        self.process.join(timeout=10)
+
+    def inject_crash(self):
+        """Ask the server to os._exit mid-protocol (fault injection)."""
+        try:
+            self.rpc.call_async("crash")    # no reply will ever come
+        except TR.TransportClosed:
+            pass
+        self.process.join(timeout=10)
+
+    def close(self):
+        if not self._dead and self.process.is_alive():
+            try:
+                self.rpc.call("shutdown")
+            except TR.TransportError:
+                pass
+        self._dead = True
+        self.process.join(timeout=10)
+        if self.process.is_alive():       # pragma: no cover - stuck child
+            self.process.terminate()
+            self.process.join(timeout=5)
+        self.rpc.close()

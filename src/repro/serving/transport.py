@@ -1,0 +1,313 @@
+"""Message-framed RPC wire protocol for the distributed serving plane.
+
+The multi-process deployment (serving/remote_engine.py) runs each paged
+``Engine`` in its own OS process behind an engine-server loop; everything
+the orchestrator exchanges with it — admissions, per-step telemetry,
+controller plans, and the column-keyed block-migration payloads of
+``serving/paged_kv.export_blocks`` — travels through THIS module as
+length-prefixed frames over a stream socket (AF_UNIX on the same host;
+the same framing works unchanged over TCP between hosts). No shared
+memory anywhere: a frame is the only way state crosses a process
+boundary, which is what makes the plane deployable across machines
+(FlexPipe's "explicit wire protocol" requirement).
+
+Frame layout (all integers big-endian)::
+
+    +--------+-----------+----------------------+
+    | u32    | u8        | payload              |
+    | length | codec tag | ``length - 1`` bytes |
+    +--------+-----------+----------------------+
+
+Codec tag ``M`` is msgpack with two extension conventions — numpy
+arrays as ``{b"__nd__": (dtype str, shape, C-bytes)}`` and
+``serving.engine.Request`` as ``{b"__req__": field dict}`` — so the hot
+payloads (block data, token arrays) move as raw bytes with zero pickle
+overhead. Tag ``P`` is a pickle fallback for messages msgpack cannot
+express (configs, arbitrary trees: the one-time ``init`` message). The
+receiver dispatches on the tag, so both ends can mix codecs freely and
+a container without msgpack still interoperates.
+
+RPC on top of frames is deliberately minimal: requests are
+``{"id": n, "op": name, "args": [...], "kw": {...}}``, replies are
+``{"id": n, "ok": True, "result": ...}`` or ``{"id": n, "ok": False,
+"error": repr, "kind": exception-class-name}``. ``Rpc.call`` blocks for
+the matching reply; ``Rpc.call_async`` pipelines — the server processes
+in order, so a caller can keep a slow operation (a phase-1 block
+import) in flight on one peer while it keeps stepping another: that is
+the overlap in "overlapped migration".
+"""
+from __future__ import annotations
+
+import io
+import os
+import pickle
+import socket
+import struct
+import tempfile
+import uuid
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+try:  # optional: the frame format downgrades to pickle without it
+    import msgpack  # type: ignore
+except ImportError:  # pragma: no cover - CI bakes msgpack in
+    msgpack = None
+
+_LEN = struct.Struct(">I")
+TAG_MSGPACK = b"M"
+TAG_PICKLE = b"P"
+MAX_FRAME = 1 << 31  # sanity bound: a corrupt length prefix fails loudly
+
+
+class TransportError(RuntimeError):
+    """Framing/codec violation on a live connection."""
+
+
+class TransportClosed(TransportError):
+    """Peer hung up (EOF mid-frame or closed socket) — the signal the
+    orchestrator's crash recovery (re-queue + replay) keys on."""
+
+
+class RemoteError(RuntimeError):
+    """An exception raised INSIDE the peer's handler, re-raised at the
+    caller with the remote repr. ``kind`` preserves the remote class
+    name so callers can branch (e.g. on ``OutOfBlocks``) without
+    importing anything."""
+
+    def __init__(self, kind: str, message: str):
+        super().__init__(f"{kind}: {message}")
+        self.kind = kind
+
+
+# ------------------------------------------------------------------ codecs
+def _np_encode(arr: np.ndarray):
+    a = np.ascontiguousarray(arr)
+    return {b"__nd__": (str(a.dtype), list(a.shape), a.tobytes())}
+
+
+def _msgpack_default(obj):
+    # jnp arrays arrive here too (they fail the isinstance below only if
+    # jax is absent, which cannot happen in this repo) — np.asarray is a
+    # host copy either way, which the wire format needs regardless.
+    if isinstance(obj, np.ndarray):
+        return _np_encode(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if type(obj).__name__ == "ArrayImpl":  # jax array without importing jax
+        return _np_encode(np.asarray(obj))
+    if type(obj).__name__ == "Request":
+        import dataclasses
+        return {b"__req__": dataclasses.asdict(obj)}
+    raise TypeError(f"not msgpack-encodable: {type(obj)!r}")
+
+
+def _msgpack_object_hook(obj: dict):
+    if b"__nd__" in obj and len(obj) == 1:
+        dtype, shape, buf = obj[b"__nd__"]
+        return np.frombuffer(buf, dtype=np.dtype(dtype)).reshape(shape).copy()
+    if b"__req__" in obj and len(obj) == 1:
+        from repro.serving.engine import Request
+        return Request(**obj[b"__req__"])
+    return obj
+
+
+def encode(obj: Any, prefer: str = "msgpack") -> bytes:
+    """Serialize ``obj`` to one frame body (tag byte + payload)."""
+    if prefer == "msgpack" and msgpack is not None:
+        try:
+            body = msgpack.packb(obj, default=_msgpack_default,
+                                 use_bin_type=True, strict_types=False)
+            return TAG_MSGPACK + body
+        except (TypeError, ValueError):
+            pass  # not msgpack-shaped (configs, pytrees): pickle frame
+    return TAG_PICKLE + pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def decode(frame: bytes) -> Any:
+    tag, body = frame[:1], frame[1:]
+    if tag == TAG_MSGPACK:
+        if msgpack is None:  # pragma: no cover
+            raise TransportError("msgpack frame but msgpack unavailable")
+        return msgpack.unpackb(body, object_hook=_msgpack_object_hook,
+                               raw=False, strict_map_key=False)
+    if tag == TAG_PICKLE:
+        return pickle.loads(body)
+    raise TransportError(f"unknown codec tag {tag!r}")
+
+
+# ------------------------------------------------------------- connections
+class Connection:
+    """One framed, bidirectional message stream over a socket."""
+
+    def __init__(self, sock: socket.socket):
+        self._sock = sock
+        self._rx = sock.makefile("rb")
+        self.tx_frames = 0
+        self.rx_frames = 0
+        self.tx_bytes = 0
+        self.rx_bytes = 0
+
+    def send(self, obj: Any):
+        frame = encode(obj)
+        if len(frame) >= MAX_FRAME:
+            raise TransportError(f"frame too large: {len(frame)} bytes")
+        try:
+            self._sock.sendall(_LEN.pack(len(frame)) + frame)
+        except (BrokenPipeError, ConnectionResetError, OSError) as e:
+            raise TransportClosed(f"send on dead connection: {e}") from e
+        self.tx_frames += 1
+        self.tx_bytes += len(frame) + _LEN.size
+
+    def _read_exact(self, n: int) -> bytes:
+        buf = self._rx.read(n)
+        if buf is None or len(buf) != n:
+            raise TransportClosed(
+                f"peer closed mid-frame (wanted {n} bytes, "
+                f"got {0 if not buf else len(buf)})")
+        return buf
+
+    def recv(self) -> Any:
+        try:
+            (length,) = _LEN.unpack(self._read_exact(_LEN.size))
+        except TransportClosed:
+            raise
+        except (OSError, ValueError) as e:
+            raise TransportClosed(f"recv on dead connection: {e}") from e
+        if not 0 < length < MAX_FRAME:
+            raise TransportError(f"corrupt frame length {length}")
+        frame = self._read_exact(length)
+        self.rx_frames += 1
+        self.rx_bytes += length + _LEN.size
+        return decode(frame)
+
+    def close(self):
+        for closer in (self._rx.close, self._sock.close):
+            try:
+                closer()
+            except OSError:
+                pass
+
+
+def socketpair() -> tuple:
+    """In-process connected pair (tests, threads) with the same framing."""
+    a, b = socket.socketpair()
+    return Connection(a), Connection(b)
+
+
+def listener_address() -> str:
+    """Fresh AF_UNIX rendezvous path for one parent<->child connection."""
+    return os.path.join(tempfile.gettempdir(),
+                        f"repro-engine-{os.getpid()}-{uuid.uuid4().hex}.sock")
+
+
+def listen(address: str) -> socket.socket:
+    srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    srv.bind(address)
+    srv.listen(1)
+    return srv
+
+
+def accept(srv: socket.socket, timeout: Optional[float] = 60.0) -> Connection:
+    srv.settimeout(timeout)
+    try:
+        sock, _ = srv.accept()
+    except socket.timeout as e:
+        raise TransportError("engine server never connected") from e
+    finally:
+        srv.settimeout(None)
+    sock.settimeout(None)
+    return Connection(sock)
+
+
+def connect(address: str, timeout: float = 60.0) -> Connection:
+    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+    sock.settimeout(timeout)
+    sock.connect(address)
+    sock.settimeout(None)
+    return Connection(sock)
+
+
+# -------------------------------------------------------------------- rpc
+class Pending:
+    """Handle for a pipelined ``call_async``; ``wait()`` blocks until the
+    matching reply arrives (draining any earlier pipelined replies)."""
+
+    def __init__(self, rpc: "Rpc", call_id: int):
+        self._rpc = rpc
+        self.call_id = call_id
+
+    def wait(self) -> Any:
+        return self._rpc._wait(self.call_id)
+
+
+class Rpc:
+    """Client side: request/reply (+ pipelining) over a Connection."""
+
+    def __init__(self, conn: Connection):
+        self.conn = conn
+        self._next_id = 0
+        self._replies: Dict[int, Any] = {}
+
+    def call_async(self, op: str, *args, **kw) -> Pending:
+        self._next_id += 1
+        cid = self._next_id
+        self.conn.send({"id": cid, "op": op, "args": list(args), "kw": kw})
+        return Pending(self, cid)
+
+    def call(self, op: str, *args, **kw) -> Any:
+        return self.call_async(op, *args, **kw).wait()
+
+    def _wait(self, call_id: int) -> Any:
+        while call_id not in self._replies:
+            reply = self.conn.recv()
+            self._replies[reply["id"]] = reply
+        reply = self._replies.pop(call_id)
+        if not reply.get("ok"):
+            raise RemoteError(reply.get("kind", "RuntimeError"),
+                              reply.get("error", "remote failure"))
+        return reply.get("result")
+
+    def close(self):
+        self.conn.close()
+
+
+def serve(conn: Connection, dispatch: Dict[str, Callable],
+          *, stop_op: str = "shutdown"):
+    """Server side: dispatch loop until ``stop_op`` or peer hangup.
+
+    Handler exceptions are caught and returned as error replies (the
+    server survives an ``OutOfBlocks`` on import); transport errors end
+    the loop — the parent is gone, so is our reason to exist."""
+    while True:
+        try:
+            msg = conn.recv()
+        except TransportClosed:
+            return
+        cid, op = msg.get("id"), msg.get("op")
+        if op == stop_op:
+            conn.send({"id": cid, "ok": True, "result": None})
+            return
+        fn = dispatch.get(op)
+        try:
+            if fn is None:
+                raise KeyError(f"unknown op {op!r}")
+            result = fn(*msg.get("args", ()), **msg.get("kw", {}))
+            reply = {"id": cid, "ok": True, "result": result}
+        except Exception as e:  # noqa: BLE001 - proxied to the caller
+            reply = {"id": cid, "ok": False,
+                     "kind": type(e).__name__, "error": str(e)}
+        try:
+            conn.send(reply)
+        except TransportClosed:
+            return
+
+
+def _np_roundtrip_selftest():  # pragma: no cover - debugging aid
+    buf = io.BytesIO()
+    a = np.arange(6, dtype=np.int32).reshape(2, 3)
+    buf.write(encode({"a": a}))
+    out = decode(buf.getvalue())
+    assert (out["a"] == a).all()

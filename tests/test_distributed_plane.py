@@ -1,0 +1,235 @@
+"""Distributed serving plane (tier-2: spawns real engine-server
+processes; run with ``pytest -m slow``).
+
+The ISSUE-4 acceptance scenario: a 2-worker MULTI-PROCESS deployment
+(spawned processes, RPC frames over AF_UNIX sockets, no shared memory)
+completes a burst with live scale-up and an overlapped scale-down
+migration that is zero-drop and token-identical — plus crash recovery:
+a remote instance killed mid-migration has its streams re-queued on a
+surviving instance with zero drops, asserted token-identical via
+counter-based replay.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.engine import Engine, Request
+from repro.serving.instance import LocalInstance
+from repro.serving.orchestrator import Orchestrator
+
+pytestmark = pytest.mark.slow
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    return cfg, params
+
+
+def _clone(r: Request) -> Request:
+    return dataclasses.replace(r, generated=[], slot=None, submit_time=0.0,
+                               first_token_time=None, finish_time=None,
+                               preemptions=0)
+
+
+def _reference_outputs(cfg, params, requests):
+    out = {}
+    for r in requests:
+        e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+        e.submit(_clone(r))
+        out[r.rid] = e.run_until_done()[0].generated
+    return out
+
+
+def test_two_worker_burst_scale_up_and_overlapped_scale_down(tiny):
+    """2 spawned engine-server processes behind RPC: a burst triggers
+    live scale-up (replication degrees over the wire), then a drain
+    executes an overlapped scale-down migration — zero drops and
+    token-identical outputs for every migrated (and unmigrated) stream,
+    with each worker's telemetry arriving as serialized snapshots."""
+    cfg, params = tiny
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(2, cfg.vocab_size,
+                                        size=8 + i % 4).astype(np.int32),
+                    max_new_tokens=8, temperature=0.7 if i % 2 else 0.0,
+                    top_k=8 if i % 2 else 0, seed=11 + i)
+            for i in range(8)]
+    ref = _reference_outputs(cfg, params, reqs)
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=32,
+                        slo_latency=30.0, telemetry_every=2, remote=True)
+    try:
+        assert not orch.engines     # no local engine anywhere: all-RPC
+        for r in reqs[:6]:          # the burst wave
+            orch.submit(_clone(r))
+        for _ in range(12):
+            orch.step()
+        # scale-up happened and reached the REMOTE engines (the degree
+        # list rode an RPC frame; the next steps ran under the plan)
+        assert any(a.startswith("scale-up") for a in orch.controller.log)
+        assert sum(orch.plan.p) > cfg.num_layers
+
+        for r in reqs[6:]:          # tail traffic, then consolidate
+            orch.submit(_clone(r))
+        for _ in range(3):
+            orch.step()
+        src = max((0, 1),
+                  key=lambda i: orch.instances[i].active_count())
+        if orch.instances[src].active_rids():
+            recs = orch.drain_instance(src)
+            assert recs, "drain moved no requests"
+            assert all(r.mode == "overlapped" for r in recs)
+            assert not orch.instances[src].active_rids()
+        orch.run_until_done()
+
+        all_done = {r.rid: r.generated for r in orch.finished}
+        assert set(all_done) == {r.rid for r in reqs}
+        for rid, gen in all_done.items():
+            assert gen == ref[rid], f"rid {rid} diverged"
+        assert orch.dropped == 0
+        # telemetry mirrors were fed from the servers' serialized state
+        assert all(t.total_tokens > 0 for t in orch.telemetry)
+    finally:
+        orch.close()
+
+
+def test_remote_crash_mid_migration_replays_on_survivor(tiny):
+    """A REMOTE instance killed mid-migration (phase 1 staged, phase 2
+    never arrives): its streams — active mid-decode and queued — are
+    re-queued on the surviving instance and replayed via counter-based
+    sampling, token-identical, with zero drops. Mixed topology: the
+    survivor is a local in-process engine, proving local and remote
+    compose behind one InstanceHandle interface."""
+    cfg, params = tiny
+    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                    max_new_tokens=10, temperature=0.8, top_k=16,
+                    seed=7 + i) for i in range(3)]
+    ref = _reference_outputs(cfg, params, reqs)
+
+    from repro.serving.remote_engine import EngineProxy
+    local = LocalInstance(Engine(cfg, params, max_batch=3, max_len=64,
+                                 cache_kind="paged", block_size=8,
+                                 n_blocks=32))
+    remote = EngineProxy(cfg, params, max_batch=3, max_len=64,
+                         block_size=8, n_blocks=32)
+    orch = Orchestrator(cfg, params, handles=[local, remote],
+                        telemetry_every=10_000)
+    try:
+        # two active + one queued-ish on the REMOTE instance
+        for r in reqs:
+            orch._home[r.rid] = 1
+            orch.instances[1].submit(_clone(r))
+        for _ in range(3):
+            orch.step()
+        assert orch.instances[1].active_rids()
+        victim_slot = sorted(orch.instances[1].active_rids())[0]
+
+        ticket = orch.begin_migration(1, 0, victim_slot)
+        orch.instances[1].kill()            # dies with phase 1 staged
+        rec = orch.finish_migration(ticket)
+        assert rec is None
+        assert len(orch.recoveries) == 1
+        assert sorted(orch.recoveries[0]["rids"]) == [0, 1, 2]
+        # the local survivor's staged phase-1 blocks were freed
+        assert not local.engine._staged
+
+        orch.run_until_done()
+        all_done = {r.rid: r.generated for r in orch.finished}
+        assert set(all_done) == {0, 1, 2}
+        for rid, gen in all_done.items():
+            assert gen == ref[rid], f"rid {rid} diverged after replay"
+        assert orch.dropped == 0
+        assert local.engine.pstate.blocks_in_use() == 0
+    finally:
+        orch.close()
+
+
+def test_destination_death_after_pause_replays_at_source(tiny):
+    """The nastiest migration failure: the destination dies AFTER the
+    source has already detached the stream (pause done, commit never
+    lands) — the payload in hand is the stream's only copy. The finish
+    path must hand it back to the (alive) source for deterministic
+    replay: zero drops, token-identical, and recovery fires exactly
+    once despite the death being observable from several operations."""
+    cfg, params = tiny
+    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                    max_new_tokens=10, temperature=0.8, top_k=16,
+                    seed=7 + i) for i in range(2)]
+    ref = _reference_outputs(cfg, params, reqs)
+
+    from repro.serving.remote_engine import EngineProxy
+    local = LocalInstance(Engine(cfg, params, max_batch=2, max_len=64,
+                                 cache_kind="paged", block_size=8,
+                                 n_blocks=32))
+    remote = EngineProxy(cfg, params, max_batch=2, max_len=64,
+                         block_size=8, n_blocks=32)
+    orch = Orchestrator(cfg, params, handles=[local, remote],
+                        telemetry_every=10_000)
+    try:
+        for r in reqs:
+            orch._home[r.rid] = 0
+            orch.instances[0].submit(_clone(r))
+        for _ in range(3):
+            orch.step()
+        victim_slot = sorted(orch.instances[0].active_rids())[0]
+        ticket = orch.begin_migration(0, 1, victim_slot)
+
+        real_commit = remote.commit_resume
+
+        def dying_commit(slot, payload):
+            remote.kill()               # dies with the delta in flight
+            return real_commit(slot, payload)
+
+        remote.commit_resume = dying_commit
+        rec = orch.finish_migration(ticket)
+        assert rec is None
+        # the paused stream went BACK to the source's queue for replay
+        assert len(local.engine.queue) == 1
+        assert len(orch.recoveries) == 1
+        # a second observation of the same death must not replay again
+        assert orch.handle_instance_failure(1) == []
+        assert len(orch.recoveries) == 1
+
+        orch.run_until_done()
+        all_done = {r.rid: r.generated for r in orch.finished}
+        assert set(all_done) == {0, 1}
+        for rid, gen in all_done.items():
+            assert gen == ref[rid], f"rid {rid} diverged"
+        assert orch.dropped == 0
+        assert local.engine.pstate.blocks_in_use() == 0
+    finally:
+        orch.close()
+
+
+def test_remote_streams_match_local_streams(tiny):
+    """The same workload through a remote proxy and a local engine
+    produces byte-identical token streams — the wire protocol carries
+    admissions/sampling state losslessly."""
+    cfg, params = tiny
+    reqs = [Request(rid=i, prompt=np.arange(3 + i, 13 + i, dtype=np.int32),
+                    max_new_tokens=6, temperature=0.9, top_k=12,
+                    seed=21 + i) for i in range(3)]
+    ref = _reference_outputs(cfg, params, reqs)
+    from repro.serving.remote_engine import EngineProxy
+    px = EngineProxy(cfg, params, max_batch=3, max_len=64, block_size=8)
+    try:
+        for r in reqs:
+            px.submit(_clone(r))
+        done = []
+        for _ in range(40):
+            done += px.step()
+            if not px.active_rids() and px.queue_len() == 0:
+                break
+        assert {r.rid: r.generated for r in done} == ref
+    finally:
+        px.close()

@@ -225,6 +225,154 @@ def test_controller_scale_down_triggers_block_migration(tiny):
     assert orch.dropped == 0
 
 
+# ----------------------------------------------- overlapped (two-phase)
+@pytest.mark.parametrize("temperature,top_k", [(0.0, 0), (0.8, 16)])
+def test_overlapped_migration_token_identical(tiny, temperature, top_k):
+    """Two-phase migration: the bulk snapshot stages at the destination
+    while the source KEEPS DECODING (no stall in phase 1 — asserted via
+    token accounting: the victims decode on every overlap step), then
+    the pause-copy-resume delta ships only the dirty set. Streams stay
+    token-identical, greedy AND sampled, and the source loses at most
+    the single step in which its delta is copied (phase 2 runs between
+    engine steps by construction)."""
+    cfg, params = tiny
+    reqs = [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                    max_new_tokens=14, temperature=temperature,
+                    top_k=top_k, seed=7 + i) for i in range(2)]
+    ref = _reference_outputs(cfg, params, reqs)
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)
+    for r in reqs:
+        orch._home[r.rid] = 0
+        orch.engines[0].submit(r)
+    for _ in range(4):
+        orch.step()
+    gen_before = {r.rid: len(r.generated) for r in reqs}
+    recs = orch.migrate_requests_overlapped(0, 1, overlap_steps=3)
+    assert len(recs) == 2 and all(r.resumed for r in recs)
+    assert all(r.mode == "overlapped" for r in recs)
+    # phase 1 did not stall the source: every overlap step decoded —
+    # the victims each gained exactly overlap_steps tokens in between
+    for r in reqs:
+        assert len(r.generated) == gen_before[r.rid] + 3, \
+            (r.rid, gen_before[r.rid], len(r.generated))
+    # ... and those steps are what the phase-2 delta shipped
+    assert all(r.delta_blocks >= 1 for r in recs)
+    assert all(r.delta_bytes < r.bytes_moved for r in recs)
+    assert not orch.engines[0].active
+    assert orch.engines[0].pstate.blocks_in_use() == 0   # nothing leaked
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+
+
+def test_overlapped_migration_victim_finishes_during_overlap(tiny):
+    """A victim that FINISHES at the source between phase 1 and phase 2
+    aborts its staging cleanly: nothing moves, nothing leaks, nothing
+    drops."""
+    cfg, params = tiny
+    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                  max_new_tokens=4)
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=1,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)
+    orch.engines[0].submit(req)
+    orch.step()                       # admitted (+1 admission token)
+    ticket = orch.begin_migration(0, 1, req.slot)
+    for _ in range(6):                # finishes at the source meanwhile
+        orch.step()
+    assert req.done
+    assert orch.finish_migration(ticket) is None
+    assert orch.engines[1].pstate.blocks_in_use() == 0   # staging freed
+    assert not orch.engines[1]._staged
+    assert orch.dropped == 0
+
+
+def test_overlapped_migration_staging_failure_replays(tiny):
+    """Destination pool too small for the phase-1 snapshot: staging
+    fails, the finish falls back to pause + re-queue at the destination,
+    and the replayed continuation is token-identical — zero-drop under
+    pressure."""
+    cfg, params = tiny
+    req = Request(rid=0, prompt=np.arange(2, 18, dtype=np.int32),
+                  max_new_tokens=8)
+    ref = _reference_outputs(cfg, params, [req])
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=1,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)
+    orch.engines[0].submit(req)
+    for _ in range(3):
+        orch.step()
+    orch.engines[1].pstate.free = orch.engines[1].pstate.free[:1]
+    recs = orch.migrate_requests_overlapped(0, 1)
+    assert len(recs) == 1 and not recs[0].resumed
+    assert len(orch.engines[1].queue) == 1
+    orch.engines[1].pstate.free = list(range(24))  # pool recovers
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+
+
+# --------------------------------------------- controller burst feedback
+def test_control_tick_iterates_scale_down_phases(tiny):
+    """Alg. 2 feedback within a burst: after a scale-down remediation
+    executes, control_tick re-measures (the post-action snapshot is fed
+    back through Controller.observe) and lets Alg. 2 run further phases
+    in the SAME call — stopping when a phase moves nothing. The monitor
+    history length is the witness that post-action snapshots were
+    actually observed."""
+    cfg, params = tiny
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=4,
+                        max_len=64, block_size=8, n_blocks=32,
+                        slo_latency=1e-9,    # everything violates
+                        telemetry_every=10_000, max_phases=3)
+    # two short requests finish fast (latency > 0 > SLO: the violation
+    # signal) while two long ones stay mid-decode (the migrants)
+    for i, max_new in enumerate((2, 2, 30, 30)):
+        req = Request(rid=i, prompt=np.arange(2, 10, dtype=np.int32),
+                      max_new_tokens=max_new)
+        orch._home[i] = 0
+        orch.engines[0].submit(req)
+    for _ in range(5):
+        orch.step()
+    assert any(r.done for r in orch.finished)
+    assert orch.engines[0].active
+    hist0 = len(orch.monitor.history)
+    log0 = len(orch.controller.log)
+    action = orch.control_tick()
+    assert action and action.startswith("scale-down")
+    n_obs = len(orch.monitor.history) - hist0
+    n_actions = len(orch.controller.log) - log0
+    assert n_obs >= 2, "no post-action snapshot was fed back"
+    assert n_actions == n_obs or n_obs == orch.max_phases, \
+        (n_actions, n_obs)
+    # burst iteration bypasses the cooldown gate but arms it ONCE
+    assert orch.controller._cooldown == orch.controller.cfg.cooldown_ticks
+    orch.run_until_done()
+    assert {r.rid for r in orch.finished} == {0, 1, 2, 3}
+    assert orch.dropped == 0
+
+
+def test_control_tick_burst_stops_when_nothing_moves(tiny):
+    """The feedback loop's termination: a scale-down whose execution
+    migrates zero requests ends the burst after one phase."""
+    cfg, params = tiny
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=32,
+                        slo_latency=1e-9, telemetry_every=10_000)
+    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                  max_new_tokens=2)
+    orch.submit(req)
+    orch.run_until_done()             # finished: nothing active anywhere
+    hist0 = len(orch.monitor.history)
+    action = orch.control_tick()
+    if action is not None:            # violation observed, nothing to move
+        assert len(orch.monitor.history) - hist0 == 1
+    assert orch.dropped == 0
+
+
 # ------------------------------------------------- sliding-window + paged
 def test_swa_paged_matches_dense_across_window_boundary(tiny):
     """Sliding-window archs now run PAGED: ragged prompt lengths decode

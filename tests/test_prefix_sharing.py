@@ -368,6 +368,126 @@ def test_migration_of_shared_blocks_token_identical(tiny):
     assert orch.stats()["prefix_hit_rate"] > 0.0
 
 
+def test_import_dedupes_resident_prefix_blocks(tiny):
+    """Cross-instance dedupe: importing a payload whose carried prefix
+    key is already RESIDENT in the destination cache aliases (increfs)
+    the resident block instead of materializing a duplicate copy — and
+    the aliased column behaves like any shared block (CoW on write,
+    decref on release)."""
+    cfg, _ = tiny
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(2)
+    toks = rng.integers(2, 100, size=9).astype(np.int32)  # 2 full blocks
+    kv = jnp.asarray(rng.normal(size=(L, 9, KV, hd)), jnp.float32)
+
+    def fresh_pool():
+        st = PK.init_paged(cfg, 3, 12, block_size=4, dtype="float32",
+                           max_len=32, prefix_cache=True)
+        PK.allocate(st, 0, 9)
+        st = PK.write_tokens(st, 0, kv, kv * 2)
+        PK.register_prefix(st, 0, toks)
+        return st
+
+    src, dst = fresh_pool(), fresh_pool()   # dst already serves the prompt
+    payload = PK.export_blocks(src, 0)
+    used_before = dst.blocks_in_use()
+    PK.import_blocks(dst, 1, payload)
+    # only the partial tail materialized; the 2 full blocks aliased
+    assert dst.dedup_imports == 2
+    assert dst.blocks_in_use() == used_before + 1
+    assert dst.shared_blocks_saved() == 2
+    _check_invariants(dst)
+    # aliased content is exactly the payload content
+    want_k, _ = PK.gather_request(src, 0, 9)
+    got_k, _ = PK.gather_request(dst, 1, 9)
+    np.testing.assert_array_equal(np.asarray(want_k), np.asarray(got_k))
+    # a write into an ALIASED column forks, leaving slot 0's view intact
+    # (position 7 = last row of aliased block 1; the materialized tail at
+    # column 2 is owned and would need no fork)
+    assert PK.ensure_writable(dst, 1, 7, 1) == 1
+    _check_invariants(dst)
+    PK.free_slot(dst, 1)
+    _check_invariants(dst)
+
+
+def test_migration_dedupe_end_to_end_token_identical(tiny):
+    """Orchestrator-level dedupe: migrate a stream whose system prompt
+    is ALREADY resident at the destination (another stream with the same
+    prefix lives there) — the import aliases instead of copying, pools
+    stay consistent, and every stream is token-identical."""
+    cfg, params = tiny
+    rng = np.random.default_rng(13)
+    sys_prompt = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(2, cfg.vocab_size,
+                                      size=4 + i).astype(np.int32)]),
+                    max_new_tokens=8, temperature=0.8, top_k=16,
+                    seed=3 + i) for i in range(2)]
+    ref = {}
+    for r in reqs:
+        e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+        e.submit(_clone(r))
+        ref[r.rid] = e.run_until_done()[0].generated
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000)
+    # same system prompt on BOTH instances: rid 0 on A, rid 1 on B
+    for i, r in enumerate(reqs):
+        orch._home[r.rid] = i
+        orch.engines[i].submit(r)
+    for _ in range(3):
+        orch.step()
+    in_use_before = orch.engines[1].pstate.blocks_in_use()
+    recs = orch.migrate_requests(0, 1)
+    assert len(recs) == 1 and recs[0].resumed
+    st = orch.engines[1].pstate
+    assert st.dedup_imports == 2            # both full sys-prompt blocks
+    assert st.blocks_in_use() < in_use_before + recs[0].n_blocks
+    _check_invariants(st)
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+    assert orch.stats()["dedup_imports"] == 2
+    for e in orch.engines:
+        assert e.pstate.blocks_in_use() == 0
+        _check_invariants(e.pstate)
+
+
+def test_hit_suffix_prefills_are_batched(tiny):
+    """Prefix-hit admissions in one wave run ONE bucketed extend per
+    (context, suffix) group — the hit-path analogue of the miss wave's
+    pow2 buckets — instead of one extend per hit request; outputs still
+    match sharing-off exactly."""
+    cfg, params = tiny
+    rng = np.random.default_rng(9)
+    sys_prompt = rng.integers(2, cfg.vocab_size, size=24).astype(np.int32)
+    # suffix lengths 6..8 share the pow2 bucket 8 AND the context bucket:
+    # one wave => first request misses, three wave-mates hit as a group
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sys_prompt,
+                         rng.integers(2, cfg.vocab_size,
+                                      size=5 + i).astype(np.int32)]),
+                    max_new_tokens=4)
+            for i in range(4)]
+    on, _, eng = _run_engine(cfg, params, [_clone(r) for r in reqs],
+                             share=True)
+    off, _, _ = _run_engine(cfg, params, [_clone(r) for r in reqs],
+                            share=False)
+    assert on == off
+    grouped = [(G, S) for G, S in eng._prefill_shapes if G >= 2 and S <= 16]
+    assert grouped, (
+        f"hit wave did not batch: prefill shapes {eng._prefill_shapes}")
+    stats = eng.prefix_stats()
+    assert stats["hits"] > 0
+    assert eng.pstate.blocks_in_use() == 0
+    _check_invariants(eng.pstate)
+
+
 def test_snapshot_surfaces_sharing_gauges(tiny):
     """MetricsSnapshot carries prefix_hit_rate/blocks_saved while streams
     are live — the controller's vacancy signal reflects sharing."""
