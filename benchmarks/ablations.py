@@ -3,7 +3,6 @@ what. Controller on/off, dop cap, continuity-sorting, and bursty traffic.
 """
 import time
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.cluster import Cluster
@@ -51,7 +50,6 @@ def run():
           f"(x{t_of(frag, m, cluster)/max(t_of(cont, m, cluster),1e-12):.1f})")
 
     print("# Ablation 4: bursty traffic (4x spike mid-run)")
-    from repro.serving import simulator as SIMM
     from repro.serving.workload import generate_trace
     import repro.serving.simulator as sim_mod
     orig = sim_mod.generate

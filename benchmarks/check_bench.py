@@ -1,0 +1,108 @@
+"""Sanity gate over the emitted ``BENCH_*.json`` reports (the nightly
+CI job runs this right after ``benchmarks/run.py --smoke``).
+
+Three checks per file, all cheap and structural — this is a tripwire
+against a bench silently emitting garbage (truncated write, renamed
+key, forgotten smoke flag), not a performance regression gate:
+
+* the file parses as a JSON object;
+* it carries a boolean ``smoke`` flag, and when the run was smoke
+  (``REPRO_BENCH_SMOKE=1``) that flag is True — smoke numbers must
+  never masquerade as comparable measurements;
+* the bench's required top-level keys are present (registry below; a
+  BENCH file nobody registered still gets the parse + smoke checks).
+
+Exit code 0 = all clean; 1 = violations (listed on stderr).
+
+    REPRO_BENCH_SMOKE=1 python benchmarks/check_bench.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+# required top-level keys per report — update when a bench's schema
+# grows a section the acceptance criteria depend on
+REQUIRED_KEYS = {
+    "BENCH_distributed.json": [
+        "config",
+        "migration_stall",
+        "burst",
+        "control_plane",
+        "dropped_requests",
+        "recoveries",
+    ],
+    "BENCH_module_scaling.json": [
+        "config",
+        "scale_up",
+        "migration",
+        "migrated_token_identical",
+        "throughput_tokens_per_s",
+    ],
+    "BENCH_paged_engine.json": [
+        "config",
+        "dense",
+        "paged",
+        "paged_over_dense_speedup",
+    ],
+    "BENCH_prefix_sharing.json": [
+        "config",
+        "sharing_on",
+        "sharing_off",
+        "peak_block_ratio",
+        "token_identical",
+    ],
+}
+
+
+def check_report(path: str, smoke_run: bool) -> list:
+    """All violations for one BENCH file (empty list = clean)."""
+    name = os.path.basename(path)
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{name}: does not parse: {e}"]
+    if not isinstance(report, dict):
+        return [f"{name}: top level is {type(report).__name__}, not an object"]
+    problems = []
+    if "smoke" not in report:
+        problems.append(f"{name}: missing the 'smoke' flag")
+    elif not isinstance(report["smoke"], bool):
+        problems.append(f"{name}: 'smoke' is {report['smoke']!r}, not a bool")
+    elif smoke_run and not report["smoke"]:
+        problems.append(
+            f"{name}: emitted by a smoke run but flagged smoke=false - "
+            "toy numbers would look comparable"
+        )
+    for key in REQUIRED_KEYS.get(name, []):
+        if key not in report:
+            problems.append(f"{name}: missing required key {key!r}")
+    return problems
+
+
+def main(argv=None) -> int:
+    bench_dir = os.path.dirname(os.path.abspath(__file__))
+    paths = sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json")))
+    if argv:  # explicit file list (tests)
+        paths = argv
+    if not paths:
+        print("check_bench: no BENCH_*.json found - did run.py run?", file=sys.stderr)
+        return 1
+    smoke_run = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    problems = []
+    for path in paths:
+        problems.extend(check_report(path, smoke_run))
+    for p in problems:
+        print(f"check_bench: {p}", file=sys.stderr)
+    clean = len(paths) - len({p.split(":")[0] for p in problems})
+    print(
+        f"check_bench: {len(paths)} report(s), {len(problems)} problem(s), "
+        f"{clean} clean"
+    )
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

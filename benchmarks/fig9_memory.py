@@ -8,7 +8,6 @@ off a hot device (modelled as the blocks freed by one Alg.-2 phase-1 pass).
 """
 import time
 
-import numpy as np
 
 from repro.configs import get_config
 from repro.serving import paged_kv as PK

@@ -4,7 +4,7 @@ import glob
 import json
 import os
 
-from benchmarks.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, bytes_model, terms
+from benchmarks.roofline import terms
 
 ART = os.environ.get("DRYRUN_DIR", "dryrun_artifacts")
 

@@ -134,7 +134,7 @@ def run():
     for _ in range(3):
         orch.step()
     src = max(range(2), key=lambda i: len(orch.engines[i].active))
-    recs = orch.drain_instance(src)
+    orch.drain_instance(src)
     post_tps = _phase_tokens_per_s(orch, 6)   # consolidated steady state
     orch.run_until_done()
 

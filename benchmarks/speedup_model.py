@@ -7,7 +7,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.cluster import Cluster
-from repro.core.plan import PlacementPlan
 from repro.core.speedup import SpeedupModelConfig, gamma_of, speedup_homo
 from repro.serving.simulator import InstanceSim, SimConfig
 

@@ -11,7 +11,7 @@ import jax
 
 from repro.configs import get_config
 from repro.core.cluster import layer_weight_bytes
-from repro.core.migration import estimate_cost, migrate_by_path, tree_bytes
+from repro.core.migration import estimate_cost, tree_bytes
 from repro.models import transformer as T
 
 PAPER = {  # layers -> (repl_s, mem_MB)

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Tuple
+from typing import Optional
 
 
 def _round_up(x: int, m: int) -> int:
@@ -221,7 +221,6 @@ class ModelConfig:
             return self
         hd = self.resolved_head_dim
         H = _round_up(self.num_heads, axis)
-        rep = H // self.num_kv_heads
         KV = self.num_kv_heads
         if KV < axis and axis % KV == 0:
             KV = axis

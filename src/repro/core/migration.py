@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import re
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

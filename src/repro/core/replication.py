@@ -23,7 +23,6 @@ import re
 from typing import List, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.plan import PlacementPlan

@@ -12,7 +12,7 @@ from __future__ import annotations
 
 from typing import Callable, List, Optional
 
-from repro.core.cluster import Cluster, Device
+from repro.core.cluster import Cluster
 from repro.core.plan import PlacementPlan
 from repro.core.speedup import speedup_homo
 
@@ -72,7 +72,6 @@ def scale_up(plan: PlacementPlan, cluster: Cluster, *, gamma: float,
     Returns the improved plan P*.
     """
     best = plan.copy()
-    n = best.n_layers
     sp_best = speedup_homo(best.p, gamma)
     for dev in cluster.eligible_nodes(min_vacancy):
         if dev.device_id == plan.home_device and not include_home:

@@ -12,7 +12,7 @@ so explicitly); only ratios are meaningful.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 from repro.core.cluster import Cluster
 from repro.core.plan import PlacementPlan

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_archs
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.models import transformer as T
 from repro.parallel import sharding as SH
 from repro.training import optimizer as OPT

@@ -20,6 +20,15 @@ memory:
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 24 --rps 4 --workers 2 --drain
+
+``--inventory pod.toml`` lifts it across MACHINES: the inventory lists
+nodes (host, first port, capacity, spawn-vs-attach), launch/pod.py
+brings up one engine server per ``tcp://host:port`` endpoint — spawned
+locally or attached where already running — and the SAME orchestrator
+loop drives them over TCP frames:
+
+    PYTHONPATH=src python -m repro.launch.serve --inventory pod.toml \
+        --requests 24 --rps 4 --drain
 """
 from __future__ import annotations
 
@@ -47,6 +56,11 @@ def main(argv=None):
                     help="spawn N engine-server PROCESSES and drive them "
                          "over the RPC transport (the distributed serving "
                          "plane); 0 = in-process instances")
+    ap.add_argument("--inventory", default=None,
+                    help="pod inventory file (.toml/.json): bring up one "
+                         "engine server per tcp:// endpoint it lists "
+                         "(launch/pod.py) and drive them as the serving "
+                         "plane; overrides --workers/--instances")
     ap.add_argument("--slo", type=float, default=40.0,
                     help="engine-clock latency SLO (steps)")
     ap.add_argument("--drain", action="store_true",
@@ -89,14 +103,26 @@ def main(argv=None):
         return len(finished)
 
     from repro.serving.orchestrator import Orchestrator
-    n_instances = args.workers or args.instances
-    orch = Orchestrator(cfg, params, n_instances=n_instances,
-                        max_batch=args.max_batch, max_len=128,
-                        slo_latency=args.slo, telemetry_every=4,
-                        remote=bool(args.workers))
-    if args.workers:
-        print(f"[serve] distributed plane: {args.workers} engine-server "
-              f"processes over RPC")
+    if args.inventory:
+        from repro.launch.pod import launch_pod, load_inventory
+        nodes = load_inventory(args.inventory)
+        handles = launch_pod(cfg, params, nodes,
+                             max_batch=args.max_batch, max_len=128)
+        n_instances = len(handles)
+        orch = Orchestrator(cfg, params, handles=handles,
+                            slo_latency=args.slo, telemetry_every=4)
+        print(f"[serve] pod: {n_instances} engine servers over TCP "
+              f"({sum(n.spawn for n in nodes)} node(s) spawned, "
+              f"{sum(not n.spawn for n in nodes)} attached)")
+    else:
+        n_instances = args.workers or args.instances
+        orch = Orchestrator(cfg, params, n_instances=n_instances,
+                            max_batch=args.max_batch, max_len=128,
+                            slo_latency=args.slo, telemetry_every=4,
+                            remote=bool(args.workers))
+        if args.workers:
+            print(f"[serve] distributed plane: {args.workers} "
+                  f"engine-server processes over RPC")
     submitted, step = 0, 0
     seen_actions = 0
     while len(orch.finished) < args.requests and step < 5000:
@@ -131,6 +157,10 @@ def main(argv=None):
     print(f"[serve] prefix sharing: hit_rate={s['prefix_hit_rate']:.2f} "
           f"blocks_saved_now={s['blocks_saved_now']} "
           f"dedup_imports={s['dedup_imports']}")
+    cp = s["control_plane"]
+    print(f"[serve] control plane: {cp['rpc_polls_per_tick']:.2f} "
+          f"multiplexed polls/tick over "
+          f"{cp['step_rpcs_per_tick']:.1f} step RPCs/tick")
     print(f"[serve] final plan P (first 8): {orch.plan.p[:8]}, "
           f"continuity breaks: {orch.plan.continuity_breaks()}")
     orch.close()

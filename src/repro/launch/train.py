@@ -13,12 +13,11 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, synth_batch
 from repro.models import transformer as T
-from repro.parallel import sharding as SH
 from repro.training import checkpoint as CKPT
 from repro.training import optimizer as OPT
 from repro.training import train as TR

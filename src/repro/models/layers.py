@@ -8,7 +8,6 @@ lowers with a bounded live-score footprint — XLA does not flash-ify a naive
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Optional
 

@@ -266,7 +266,6 @@ def _moe_expert_parallel(p, x, weights, idx, cfg: ModelConfig, rules,
         return out.reshape(Bl, Sl, d).astype(xb.dtype)
 
     bspec = batch_spec
-    tok_spec = P(bspec, None)
     return shard_map(
         block, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, None, None),

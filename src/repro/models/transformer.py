@@ -15,9 +15,7 @@ layers (``unroll=True``) so each layer can carry its own sharding constraint
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

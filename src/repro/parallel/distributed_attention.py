@@ -15,7 +15,6 @@ O(B·H·D) partials.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -85,8 +85,6 @@ def rules_for(cfg: ModelConfig, mesh: Mesh, *, batch_axes=None) -> dict:
     # replicates cleanly): Megatron-style GQA needs H % m == 0.
     heads_ok = _divides(cfg.num_heads, m)
     rules["heads"] = model_ax if heads_ok else None
-    kv_ok = heads_ok and (_divides(cfg.num_kv_heads, m) or m % cfg.num_kv_heads == 0) \
-        if cfg.num_kv_heads else False
     rules["kv_heads"] = model_ax if (heads_ok and _divides(cfg.num_kv_heads, m)) else None
     # ssm heads
     rules["ssm_heads"] = model_ax if _divides(cfg.ssm_heads, m) else None

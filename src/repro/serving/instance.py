@@ -80,6 +80,25 @@ class InstanceHandle:
     def step(self) -> List[Request]:
         raise NotImplementedError
 
+    def step_async(self):
+        """Fan-out half of the orchestrator's batched control-plane
+        poll: return a waitable (``transport.Pending`` for a remote
+        instance, ``Completed`` here) whose resolution is the opaque
+        step reply ``finish_step`` consumes. The default executes the
+        step synchronously — a local engine shares the orchestrator's
+        process, so there is nothing to overlap."""
+        return Completed(self.step())
+
+    def finish_step(self, reply) -> List[Request]:
+        """Consume one resolved ``step_async`` reply, returning the
+        finished requests. Local steps already ARE the finished list."""
+        return reply
+
+    def mark_dead(self):
+        """Record a transport death observed outside a direct call
+        (e.g. a ``closed`` entry from the batched poll). Local
+        instances cannot outlive the orchestrator: no-op."""
+
     def apply_plan(self, p: List[int]):
         raise NotImplementedError
 

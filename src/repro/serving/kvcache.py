@@ -17,8 +17,6 @@ and used by both paths.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T

@@ -166,6 +166,12 @@ class Orchestrator:
         # overlap steps: already in self.finished, surfaced through the
         # NEXT step()'s return so run_until_done callers never miss one
         self._orphans: List[Request] = []
+        # control-plane accounting for the batched poll (benchmarks):
+        # ticks   = _step_all invocations,
+        # polls   = multiplexed drains issued (1 per tick with any
+        #           remote instance — the "one poll per tick" invariant),
+        # step_rpcs = step RPCs fanned out across those polls
+        self.rpc_stats = {"ticks": 0, "polls": 0, "step_rpcs": 0}
 
     # ------------------------------------------------------------ topology
     @property
@@ -210,20 +216,72 @@ class Orchestrator:
         return min(cands, key=score)
 
     # ------------------------------------------------------------ main loop
-    def step(self) -> List[Request]:
-        """One orchestrator iteration: step every alive instance (each
-        handle records real wall latency into its telemetry), collect
-        finishes, recover any instance whose transport died, and on
-        telemetry ticks run the monitor -> controller -> execute
-        pipeline."""
+    def _step_all(self) -> List[Request]:
+        """Step every alive instance through ONE batched control-plane
+        poll: the step request fans out to all of them via
+        ``step_async`` (remote servers start computing concurrently; a
+        local handle executes inline during the fan-out), then a single
+        ``transport.drain_pendings`` wait collects the replies as they
+        land — per-tick wall time is bounded by the SLOWEST instance's
+        step, not the sum of N sequential round trips. Crash detection
+        folds into the same poll: a ``closed`` entry (the instance died
+        before replying) triggers the same idempotent re-queue + replay
+        path as a TransportClosed raised anywhere else."""
         fin: List[Request] = []
+        idxs: List[int] = []
+        pendings: List = []
         for i, h in enumerate(self.instances):
             if not h.alive():
+                if i not in self._recovered:
+                    # died silently since the last tick (nothing raised
+                    # TransportClosed because no op was in flight — e.g.
+                    # a SIGKILLed worker): same replay path, same
+                    # idempotency guard
+                    self.handle_instance_failure(i)
                 continue
             try:
-                fin.extend(h.step())
+                pendings.append(h.step_async())
             except TR.TransportClosed:
                 self.handle_instance_failure(i)
+                continue
+            idxs.append(i)
+        if not pendings:
+            return fin
+        n_remote = sum(isinstance(p, TR.Pending) for p in pendings)
+        self.rpc_stats["ticks"] += 1
+        self.rpc_stats["step_rpcs"] += n_remote
+        if n_remote:
+            self.rpc_stats["polls"] += 1
+        errors = []
+        for i, (status, val) in zip(idxs, TR.drain_pendings(pendings)):
+            h = self.instances[i]
+            if status == "closed":
+                h.mark_dead()
+                self.handle_instance_failure(i)
+            elif status == "error":
+                # don't raise yet: later entries hold other instances'
+                # ALREADY-RECEIVED step replies — skipping finish_step
+                # would lose their finished requests and desync the
+                # inflight mirrors crash replay depends on
+                errors.append(val)
+            else:
+                fin.extend(h.finish_step(val))
+        if errors:
+            # this tick's finishes must survive the raise too — the
+            # callers' extend never runs, so route them through the
+            # orphan path the overlap steps already use
+            self.finished.extend(fin)
+            self._orphans.extend(fin)
+            raise errors[0]
+        return fin
+
+    def step(self) -> List[Request]:
+        """One orchestrator iteration: step every alive instance through
+        the batched poll (each records real wall latency into its
+        telemetry), collect finishes, recover any instance whose
+        transport died, and on telemetry ticks run the monitor ->
+        controller -> execute pipeline."""
+        fin = self._step_all()
         self.finished.extend(fin)
         self._tick += 1
         if self._tick % self.telemetry_every == 0:
@@ -529,14 +587,12 @@ class Orchestrator:
             slots = slots[:max_requests]
         tickets = [self.begin_migration(src, dst, slot) for slot in slots]
         for _ in range(overlap_steps):
-            for i in self._alive():
-                try:
-                    done = self.instances[i].step()
-                except TR.TransportClosed:
-                    self.handle_instance_failure(i)
-                    continue
-                self.finished.extend(done)
-                self._orphans.extend(done)  # surfaced by the next step()
+            # the overlap steps ride the same batched poll as the main
+            # loop — the source keeps decoding while the destination's
+            # staging import is still in flight on its connection
+            done = self._step_all()
+            self.finished.extend(done)
+            self._orphans.extend(done)      # surfaced by the next step()
         out = []
         for t in tickets:
             rec = self.finish_migration(t)
@@ -612,4 +668,18 @@ class Orchestrator:
             "dedup_imports": sum(p.get("dedup_imports", 0) for p in ps),
             "controller_log": list(self.controller.log),
             "plan_p": list(self.plan.p),
+            "control_plane": self.control_plane_stats(),
+        }
+
+    def control_plane_stats(self) -> Dict:
+        """Batched-poll accounting: with any remote instance, every tick
+        issues exactly ONE multiplexed drain (``rpc_polls_per_tick`` ==
+        1.0) regardless of how many step RPCs fanned out under it."""
+        ticks = self.rpc_stats["ticks"]
+        return {
+            "ticks": ticks,
+            "rpc_polls_per_tick": (self.rpc_stats["polls"] / ticks
+                                   if ticks else 0.0),
+            "step_rpcs_per_tick": (self.rpc_stats["step_rpcs"] / ticks
+                                   if ticks else 0.0),
         }

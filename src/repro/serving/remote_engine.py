@@ -19,15 +19,31 @@ degree lists), and the column-keyed block payloads of
 ``paged_kv.export_blocks`` — the same wire format the in-process path
 uses, now actually crossing a process boundary. No shared memory, no
 fork-inherited state: what the frames carry is ALL the two sides share,
-which is exactly the multi-host contract (the same bytes over TCP serve
-a cross-machine deployment).
+which is exactly the multi-host contract.
+
+Three rendezvous modes share that contract (the frames are identical;
+only who dials whom differs):
+
+* **spawned, child dials back** (the PR-4 default): the parent listens
+  on a fresh rendezvous socket — AF_UNIX normally, loopback TCP when
+  ``REPRO_RPC_TRANSPORT=tcp`` — and the spawned child connects back.
+* **spawned, child listens** (``endpoint="tcp://host:port"``): the
+  child binds the endpoint and the parent connects with retry/backoff
+  (a just-spawned server that hasn't bound yet looks like connection
+  refused). This is how launch/pod.py runs local inventory nodes.
+* **attached** (``endpoint=..., spawn=False``): the engine server is
+  already running on ANOTHER HOST (``python -m repro.launch.pod
+  --serve tcp://0.0.0.0:PORT``); the proxy only connects. There is no
+  child process to join — liveness is purely the transport's.
 
 Liveness: the proxy keeps a ``pristine`` clone of every request the
-server currently holds (``inflight_requests``). When the child dies —
-crash, OOM kill, or the test-only ``crash`` op — the next RPC raises
-``TransportClosed`` and the orchestrator re-queues those clones on a
-surviving instance; counter-based sampling keys replay them
-token-identically, so a worker loss costs recompute, never output.
+server currently holds (``inflight_requests``). When the server dies —
+crash, OOM kill, host loss, or the test-only ``crash`` op — the next
+RPC (or the orchestrator's batched poll) raises ``TransportClosed`` and
+the orchestrator re-queues those clones on a surviving instance;
+counter-based sampling keys replay them token-identically, so a worker
+loss costs recompute, never output.
+
 """
 from __future__ import annotations
 
@@ -143,10 +159,9 @@ class EngineServer:
             "abort_resume", "ping", "crash")}
 
 
-def engine_server_main(address: str):
-    """Child-process entry: connect back, build the engine from the init
-    frame, serve until shutdown or parent hangup."""
-    conn = TR.connect(address)
+def _serve_connection(conn: "TR.Connection"):
+    """Shared tail of both server entries: build the engine from the
+    orchestrator's init frame, ack ready, serve until shutdown/hangup."""
     init = conn.recv()
     from repro.serving.engine import Engine  # import after spawn, in-child
     engine = Engine(init["cfg"], init["params"], **init["engine_kw"])
@@ -154,6 +169,26 @@ def engine_server_main(address: str):
     conn.send({"id": 0, "ok": True, "result": "ready"})
     TR.serve(conn, server.dispatch())
     conn.close()
+
+
+def engine_server_main(address: str):
+    """Child-process entry, dial-back mode: connect to the parent's
+    rendezvous listener (AF_UNIX path or ``tcp://host:port``), then
+    serve."""
+    _serve_connection(TR.connect(address))
+
+
+def engine_server_listen(address: str):
+    """Engine-server entry, listening mode: bind ``address`` (normally
+    ``tcp://host:port`` — the multi-host deployment unit), accept ONE
+    orchestrator, serve it, exit. Run standalone on a pod node via
+    ``python -m repro.launch.pod --serve tcp://0.0.0.0:PORT``."""
+    srv = TR.listen(address)
+    try:
+        conn = TR.accept(srv, timeout=None)
+    finally:
+        srv.close()
+    _serve_connection(conn)
 
 
 # ============================================================= proxy side
@@ -173,35 +208,95 @@ class _PendingStage:
             raise
 
 
+def rendezvous_transport() -> str:
+    """Transport family for spawned proxies with no explicit endpoint:
+    ``REPRO_RPC_TRANSPORT=tcp`` lifts the whole plane onto loopback TCP
+    (frames identical; the tier-2 suite runs unchanged under it),
+    anything else keeps the AF_UNIX default."""
+    return os.environ.get("REPRO_RPC_TRANSPORT", "unix").lower()
+
+
 class EngineProxy(InstanceHandle):
     """The orchestrator-side handle of a remote engine: mirrors the
     in-process ``Engine`` control surface over RPC frames. Gauges
     (queue depth, pool vacancy, clock, prefix stats) read a cache
     refreshed by every step reply — one RPC round trip per orchestrator
-    step in steady state."""
+    step in steady state, and the step reply itself is drained through
+    the orchestrator's batched poll (``step_async`` + ``finish_step``),
+    so N instances cost one multiplexed wait, not N sequential ones."""
 
     def __init__(self, cfg, params, *, start_timeout: float = 120.0,
-                 **engine_kw):
-        import jax
-        import numpy as np
-
+                 endpoint: Optional[str] = None, spawn: bool = True,
+                 adopt_process=None, **engine_kw):
         self.telemetry = EngineTelemetry()
         self._inflight: Dict[int, Request] = {}   # rid -> pristine clone
         self._dead = False
-        address = TR.listener_address()
-        srv = TR.listen(address)
-        ctx = mp.get_context("spawn")     # never fork a live JAX runtime
-        self.process = ctx.Process(target=engine_server_main,
-                                   args=(address,), daemon=True)
-        self.process.start()
+        self.process = None
+        self.endpoint = endpoint
         try:
-            self.conn = TR.accept(srv, timeout=start_timeout)
-        finally:
-            srv.close()
+            self._start(cfg, params, start_timeout, endpoint, spawn,
+                        adopt_process, engine_kw)
+        except BaseException:
+            # never leak a spawned engine server: a failed rendezvous /
+            # init handshake reaps the child before propagating
+            if self.process is not None and self.process.is_alive():
+                self.process.kill()
+                self.process.join(timeout=10)
+            raise
+
+    def _start(self, cfg, params, start_timeout, endpoint, spawn,
+               adopt_process, engine_kw):
+        import jax
+        import numpy as np
+
+        ctx = mp.get_context("spawn")     # never fork a live JAX runtime
+        if endpoint is None:
+            # dial-back rendezvous: parent listens, spawned child connects
+            if rendezvous_transport() == "tcp":
+                srv = TR.listen("tcp://127.0.0.1:0")
+                address = TR.bound_endpoint(srv)
+            else:
+                address = TR.listener_address()
+                srv = TR.listen(address)
+            self.endpoint = address
+            self.process = ctx.Process(target=engine_server_main,
+                                       args=(address,), daemon=True)
+            self.process.start()
             try:
-                os.unlink(address)
-            except OSError:
-                pass
+                self.conn = TR.accept(srv, timeout=start_timeout)
+            finally:
+                srv.close()
+                if TR.parse_endpoint(address)[0] == "unix":
+                    try:
+                        os.unlink(address)
+                    except OSError:
+                        pass
+        else:
+            # listening server at a known endpoint: spawn it locally
+            # (pod inventory node on this host), adopt one the pod
+            # launcher already spawned (so liveness/kill still see the
+            # child), or attach to a server running on another host;
+            # either way the proxy dials in, retrying while the server
+            # boots toward its bind
+            if spawn:
+                self.process = ctx.Process(target=engine_server_listen,
+                                           args=(endpoint,), daemon=True)
+                self.process.start()
+            elif adopt_process is not None:
+                self.process = adopt_process
+
+            def child_died() -> Optional[str]:
+                # a spawned server that died before binding (EADDRINUSE
+                # on a colliding inventory port, import failure) would
+                # otherwise look like "still booting" for the whole
+                # connect deadline
+                if self.process is not None and not self.process.is_alive():
+                    return (f"engine server exited with code "
+                            f"{self.process.exitcode} before accepting")
+                return None
+
+            self.conn = TR.connect(endpoint, timeout=start_timeout,
+                                   abort=child_died)
         self.rpc = TR.Rpc(self.conn)
         host_params = jax.tree_util.tree_map(np.asarray, params)
         self.conn.send({"cfg": cfg, "params": host_params,
@@ -231,7 +326,23 @@ class EngineProxy(InstanceHandle):
         self._info["queue_len"] = self._call("submit", req)
 
     def step(self) -> List[Request]:
-        reply = self._call("step")
+        return self.finish_step(self._call("step"))
+
+    def step_async(self) -> TR.Pending:
+        """Fan-out half of the batched control-plane poll: send the step
+        request without waiting. The orchestrator drains the reply via
+        ``transport.drain_pendings`` and hands it to ``finish_step``."""
+        if self._dead:
+            raise TR.TransportClosed("instance already dead (step)")
+        try:
+            return self.rpc.call_async("step")
+        except TR.TransportClosed:
+            self._dead = True
+            raise
+
+    def finish_step(self, reply: dict) -> List[Request]:
+        """Apply one step reply: refresh the telemetry mirror and gauge
+        cache, retire finished requests from the inflight mirror."""
         self.telemetry.load_state(reply["telemetry"])
         self._info = reply["info"]
         done = reply["finished"]
@@ -336,16 +447,30 @@ class EngineProxy(InstanceHandle):
 
     # --------------------------------------------------------- liveness
     def alive(self) -> bool:
-        return not self._dead and self.process.is_alive()
+        if self._dead:
+            return False
+        # attached servers (no child to watch) are alive until the
+        # transport says otherwise
+        return self.process is None or self.process.is_alive()
+
+    def mark_dead(self):
+        """Record a transport death observed OUTSIDE ``_call`` — e.g. a
+        ``closed`` entry from the orchestrator's batched poll."""
+        self._dead = True
 
     def inflight_requests(self) -> List[Request]:
         return list(self._inflight.values())
 
     def kill(self):
-        """Hard-kill the child (crash-recovery tests): SIGKILL, no
-        cleanup — the next RPC observes TransportClosed."""
-        self.process.kill()
-        self.process.join(timeout=10)
+        """Hard-kill the server (crash-recovery tests): SIGKILL for a
+        spawned child, abrupt socket close for an attached one — either
+        way the next RPC observes TransportClosed."""
+        if self.process is not None:
+            self.process.kill()
+            self.process.join(timeout=10)
+        else:
+            self.conn.close()
+            self._dead = True
 
     def inject_crash(self):
         """Ask the server to os._exit mid-protocol (fault injection)."""
@@ -353,17 +478,20 @@ class EngineProxy(InstanceHandle):
             self.rpc.call_async("crash")    # no reply will ever come
         except TR.TransportClosed:
             pass
-        self.process.join(timeout=10)
+        if self.process is not None:
+            self.process.join(timeout=10)
 
     def close(self):
-        if not self._dead and self.process.is_alive():
+        if not self._dead and (self.process is None
+                               or self.process.is_alive()):
             try:
                 self.rpc.call("shutdown")
             except TR.TransportError:
                 pass
         self._dead = True
-        self.process.join(timeout=10)
-        if self.process.is_alive():       # pragma: no cover - stuck child
-            self.process.terminate()
-            self.process.join(timeout=5)
+        if self.process is not None:
+            self.process.join(timeout=10)
+            if self.process.is_alive():   # pragma: no cover - stuck child
+                self.process.terminate()
+                self.process.join(timeout=5)
         self.rpc.close()

@@ -20,8 +20,7 @@ The simulator is intentionally deterministic given (workload seed, config).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import numpy as np
 

@@ -5,11 +5,22 @@ The multi-process deployment (serving/remote_engine.py) runs each paged
 the orchestrator exchanges with it — admissions, per-step telemetry,
 controller plans, and the column-keyed block-migration payloads of
 ``serving/paged_kv.export_blocks`` — travels through THIS module as
-length-prefixed frames over a stream socket (AF_UNIX on the same host;
-the same framing works unchanged over TCP between hosts). No shared
-memory anywhere: a frame is the only way state crosses a process
-boundary, which is what makes the plane deployable across machines
-(FlexPipe's "explicit wire protocol" requirement).
+length-prefixed frames over a stream socket. Two endpoint families share
+the one frame format:
+
+* ``unix`` — an AF_UNIX path (same-host child processes, the PR-4
+  rendezvous);
+* ``tcp://host:port`` — AF_INET between hosts: the multi-host pod
+  (launch/pod.py) runs engine servers as listening TCP endpoints and
+  the orchestrator connects with retry/backoff (a server that is still
+  booting looks exactly like a connection refused). A half-open or
+  reset TCP peer surfaces as ``TransportClosed`` from the next
+  send/recv — the same crash signal the AF_UNIX plane uses, so crash
+  recovery is transport-blind.
+
+No shared memory anywhere: a frame is the only way state crosses a
+process boundary, which is what makes the plane deployable across
+machines (FlexPipe's "explicit wire protocol" requirement).
 
 Frame layout (all integers big-endian)::
 
@@ -35,17 +46,27 @@ the matching reply; ``Rpc.call_async`` pipelines — the server processes
 in order, so a caller can keep a slow operation (a phase-1 block
 import) in flight on one peer while it keeps stepping another: that is
 the overlap in "overlapped migration".
+
+``drain_pendings`` is the control plane's batched poll: fan a request
+out to every peer with ``call_async``, then ONE ``selectors``-
+multiplexed wait drains all replies as they land. The callers' wall
+time is bounded by the slowest peer, not the sum of round trips, and a
+peer that dies mid-poll resolves its entries to ``TransportClosed``
+instead of aborting the drain — crash detection folds into the same
+poll that collects results.
 """
 from __future__ import annotations
 
 import io
 import os
 import pickle
+import selectors
 import socket
 import struct
 import tempfile
+import time
 import uuid
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -58,6 +79,7 @@ _LEN = struct.Struct(">I")
 TAG_MSGPACK = b"M"
 TAG_PICKLE = b"P"
 MAX_FRAME = 1 << 31  # sanity bound: a corrupt length prefix fails loudly
+_RECV_CHUNK = 1 << 16
 
 
 class TransportError(RuntimeError):
@@ -65,8 +87,9 @@ class TransportError(RuntimeError):
 
 
 class TransportClosed(TransportError):
-    """Peer hung up (EOF mid-frame or closed socket) — the signal the
-    orchestrator's crash recovery (re-queue + replay) keys on."""
+    """Peer hung up (EOF mid-frame, reset, or closed socket) — the
+    signal the orchestrator's crash recovery (re-queue + replay) keys
+    on, identical for AF_UNIX children and TCP peers on other hosts."""
 
 
 class RemoteError(RuntimeError):
@@ -138,17 +161,163 @@ def decode(frame: bytes) -> Any:
     raise TransportError(f"unknown codec tag {tag!r}")
 
 
+# --------------------------------------------------------------- endpoints
+def parse_endpoint(address: str) -> Tuple[str, Any]:
+    """``tcp://host:port`` -> ``("tcp", (host, port))``; ``unix://path``
+    or a bare filesystem path -> ``("unix", path)``."""
+    if address.startswith("tcp://"):
+        host, sep, port = address[len("tcp://"):].rpartition(":")
+        if not sep or not host or not port.isdigit():
+            raise ValueError(f"malformed tcp endpoint {address!r} "
+                             "(want tcp://host:port)")
+        return "tcp", (host, int(port))
+    if address.startswith("unix://"):
+        return "unix", address[len("unix://"):]
+    return "unix", address
+
+
+def listener_address() -> str:
+    """Fresh AF_UNIX rendezvous path for one parent<->child connection."""
+    return os.path.join(tempfile.gettempdir(),
+                        f"repro-engine-{os.getpid()}-{uuid.uuid4().hex}.sock")
+
+
+def free_tcp_endpoint(host: str = "127.0.0.1") -> str:
+    """A currently-free ``tcp://host:port`` (bind port 0, read it back).
+    Launcher/test convenience; the port can in principle be reused by
+    another process before the caller binds it."""
+    probe = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    try:
+        probe.bind((host, 0))
+        return f"tcp://{host}:{probe.getsockname()[1]}"
+    finally:
+        probe.close()
+
+
+def bound_endpoint(srv: socket.socket) -> str:
+    """The concrete endpoint a listener bound (resolves ``port 0``)."""
+    if srv.family == socket.AF_INET:
+        host, port = srv.getsockname()[:2]
+        return f"tcp://{host}:{port}"
+    return srv.getsockname()
+
+
+def _tune_tcp(sock: socket.socket):
+    # frames are small and latency-critical (one RPC per control tick):
+    # never Nagle-delay them; keepalive turns a silently half-open peer
+    # (host died, no RST ever arrives) into an eventual TransportClosed
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    sock.setsockopt(socket.SOL_SOCKET, socket.SO_KEEPALIVE, 1)
+
+
+def listen(address: str) -> socket.socket:
+    """Bind + listen on a ``tcp://`` or AF_UNIX endpoint."""
+    kind, target = parse_endpoint(address)
+    if kind == "tcp":
+        srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        srv.bind(target)
+        srv.listen(16)
+    else:
+        srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
+        srv.bind(target)
+        srv.listen(1)
+    return srv
+
+
+def accept(srv: socket.socket, timeout: Optional[float] = 60.0) -> "Connection":
+    srv.settimeout(timeout)
+    try:
+        sock, _ = srv.accept()
+    except socket.timeout as e:
+        raise TransportError("engine server never connected") from e
+    finally:
+        srv.settimeout(None)
+    sock.settimeout(None)
+    if sock.family == socket.AF_INET:
+        _tune_tcp(sock)
+    return Connection(sock)
+
+
+# errors a retry can plausibly outwait: the server exists but hasn't
+# bound/listened yet, or is mid-restart. Anything else (DNS failure on
+# a typo'd host, EACCES, EADDRNOTAVAIL, ...) is a misconfiguration that
+# every retry would reproduce — fail fast instead of eating the timeout.
+_RETRYABLE_CONNECT = (ConnectionRefusedError, ConnectionResetError,
+                      ConnectionAbortedError, FileNotFoundError,
+                      socket.timeout)
+
+
+def connect(address: str, timeout: float = 60.0,
+            retry_interval: float = 0.02,
+            abort: Optional[Callable[[], Optional[str]]] = None
+            ) -> "Connection":
+    """Connect to a listening endpoint, retrying with backoff until
+    ``timeout``. A not-yet-listening peer (pod launcher spawned the
+    server a moment ago; its socket isn't bound yet) raises
+    ConnectionRefusedError / FileNotFoundError on each attempt — those
+    retry, and only the deadline turns them into ``TransportError``;
+    permanently-failing errors (unresolvable host, permissions) raise
+    immediately. ``abort`` is polled between retries: returning a
+    message stops the loop at once (e.g. "the spawned server process
+    already exited" — no point waiting out the deadline)."""
+    kind, target = parse_endpoint(address)
+    family = socket.AF_INET if kind == "tcp" else socket.AF_UNIX
+    deadline = time.monotonic() + timeout
+    delay = retry_interval
+    while True:
+        sock = socket.socket(family, socket.SOCK_STREAM)
+        sock.settimeout(max(0.05, deadline - time.monotonic()))
+        try:
+            sock.connect(target)
+            break
+        except _RETRYABLE_CONNECT as e:
+            sock.close()
+            reason = abort() if abort is not None else None
+            if reason:
+                raise TransportError(
+                    f"connect to {address} aborted: {reason}") from e
+            if time.monotonic() + delay >= deadline:
+                raise TransportError(
+                    f"connect to {address} failed within {timeout:.1f}s: "
+                    f"{e}") from e
+            time.sleep(delay)
+            delay = min(delay * 2, 0.5)
+        except OSError as e:
+            sock.close()
+            raise TransportError(
+                f"connect to {address} failed ({e}); not retrying — "
+                "this error does not look transient") from e
+    sock.settimeout(None)
+    if kind == "tcp":
+        _tune_tcp(sock)
+    return Connection(sock)
+
+
 # ------------------------------------------------------------- connections
 class Connection:
-    """One framed, bidirectional message stream over a socket."""
+    """One framed, bidirectional message stream over a socket.
+
+    Receive buffering is in-object (not a ``makefile`` wrapper) so the
+    multiplexed poll can distinguish "kernel has data" (``select`` on
+    ``fileno()``) from "bytes already sit in our buffer"
+    (``has_buffered()`` — possibly a partial frame, whose tail is then
+    read blocking) — buffered bytes never wake ``select``, so the poll
+    must drain them explicitly before sleeping."""
 
     def __init__(self, sock: socket.socket):
         self._sock = sock
-        self._rx = sock.makefile("rb")
+        self._rxbuf = bytearray()
         self.tx_frames = 0
         self.rx_frames = 0
         self.tx_bytes = 0
         self.rx_bytes = 0
+
+    def fileno(self) -> int:
+        return self._sock.fileno()
+
+    def has_buffered(self) -> bool:
+        return bool(self._rxbuf)
 
     def send(self, obj: Any):
         frame = encode(obj)
@@ -161,21 +330,26 @@ class Connection:
         self.tx_frames += 1
         self.tx_bytes += len(frame) + _LEN.size
 
+    def _fill(self, n: int):
+        while len(self._rxbuf) < n:
+            try:
+                chunk = self._sock.recv(_RECV_CHUNK)
+            except (ConnectionResetError, BrokenPipeError, OSError) as e:
+                raise TransportClosed(f"recv on dead connection: {e}") from e
+            if not chunk:
+                raise TransportClosed(
+                    f"peer closed mid-frame (wanted {n} bytes, "
+                    f"got {len(self._rxbuf)})")
+            self._rxbuf += chunk
+
     def _read_exact(self, n: int) -> bytes:
-        buf = self._rx.read(n)
-        if buf is None or len(buf) != n:
-            raise TransportClosed(
-                f"peer closed mid-frame (wanted {n} bytes, "
-                f"got {0 if not buf else len(buf)})")
-        return buf
+        self._fill(n)
+        out = bytes(memoryview(self._rxbuf)[:n])
+        del self._rxbuf[:n]
+        return out
 
     def recv(self) -> Any:
-        try:
-            (length,) = _LEN.unpack(self._read_exact(_LEN.size))
-        except TransportClosed:
-            raise
-        except (OSError, ValueError) as e:
-            raise TransportClosed(f"recv on dead connection: {e}") from e
+        (length,) = _LEN.unpack(self._read_exact(_LEN.size))
         if not 0 < length < MAX_FRAME:
             raise TransportError(f"corrupt frame length {length}")
         frame = self._read_exact(length)
@@ -184,50 +358,16 @@ class Connection:
         return decode(frame)
 
     def close(self):
-        for closer in (self._rx.close, self._sock.close):
-            try:
-                closer()
-            except OSError:
-                pass
+        try:
+            self._sock.close()
+        except OSError:
+            pass
 
 
 def socketpair() -> tuple:
     """In-process connected pair (tests, threads) with the same framing."""
     a, b = socket.socketpair()
     return Connection(a), Connection(b)
-
-
-def listener_address() -> str:
-    """Fresh AF_UNIX rendezvous path for one parent<->child connection."""
-    return os.path.join(tempfile.gettempdir(),
-                        f"repro-engine-{os.getpid()}-{uuid.uuid4().hex}.sock")
-
-
-def listen(address: str) -> socket.socket:
-    srv = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-    srv.bind(address)
-    srv.listen(1)
-    return srv
-
-
-def accept(srv: socket.socket, timeout: Optional[float] = 60.0) -> Connection:
-    srv.settimeout(timeout)
-    try:
-        sock, _ = srv.accept()
-    except socket.timeout as e:
-        raise TransportError("engine server never connected") from e
-    finally:
-        srv.settimeout(None)
-    sock.settimeout(None)
-    return Connection(sock)
-
-
-def connect(address: str, timeout: float = 60.0) -> Connection:
-    sock = socket.socket(socket.AF_UNIX, socket.SOCK_STREAM)
-    sock.settimeout(timeout)
-    sock.connect(address)
-    sock.settimeout(None)
-    return Connection(sock)
 
 
 # -------------------------------------------------------------------- rpc
@@ -238,6 +378,9 @@ class Pending:
     def __init__(self, rpc: "Rpc", call_id: int):
         self._rpc = rpc
         self.call_id = call_id
+
+    def ready(self) -> bool:
+        return self.call_id in self._rpc._replies
 
     def wait(self) -> Any:
         return self._rpc._wait(self.call_id)
@@ -260,18 +403,136 @@ class Rpc:
     def call(self, op: str, *args, **kw) -> Any:
         return self.call_async(op, *args, **kw).wait()
 
-    def _wait(self, call_id: int) -> Any:
-        while call_id not in self._replies:
-            reply = self.conn.recv()
-            self._replies[reply["id"]] = reply
+    def _pump_one(self):
+        """Receive exactly one reply frame into the reply buffer."""
+        reply = self.conn.recv()
+        self._replies[reply["id"]] = reply
+
+    def _take(self, call_id: int) -> Any:
+        """Resolve an already-received reply (raises RemoteError for
+        error replies). The reply MUST be present — ``_wait`` /
+        ``drain_pendings`` guarantee that before calling."""
         reply = self._replies.pop(call_id)
         if not reply.get("ok"):
             raise RemoteError(reply.get("kind", "RuntimeError"),
                               reply.get("error", "remote failure"))
         return reply.get("result")
 
+    def _wait(self, call_id: int) -> Any:
+        while call_id not in self._replies:
+            self._pump_one()
+        return self._take(call_id)
+
     def close(self):
         self.conn.close()
+
+
+def drain_pendings(pendings: List[Any],
+                   timeout: Optional[float] = None) -> List[tuple]:
+    """The batched control-plane poll: resolve MANY pipelined calls —
+    across any number of connections — in one ``selectors`` wait.
+
+    ``pendings`` may mix transport ``Pending``s with any already-
+    resolved stand-in exposing ``wait()`` (a local instance's
+    ``Completed``). Returns a list parallel to the input, each entry one
+    of::
+
+        ("ok",     result)            reply arrived, handler succeeded
+        ("error",  RemoteError)       reply arrived, handler raised
+        ("closed", TransportClosed)   the peer died before replying
+
+    A dead peer resolves ALL of its outstanding entries to ``closed``
+    without disturbing other peers' entries — the caller folds crash
+    detection into the same poll that collects results. Wall time is
+    bounded by the slowest peer (replies are consumed as they land),
+    not the sum of round trips.
+
+    ``timeout`` bounds the wait for NEW data only: once a frame has
+    started arriving, its remaining bytes are read with a blocking
+    recv (peers are trusted engine servers that write whole frames via
+    sendall — a peer that stalls mid-frame is treated as about to die,
+    and its eventual reset surfaces as ``closed``)."""
+    results: List[Optional[tuple]] = [None] * len(pendings)
+    groups: Dict[int, list] = {}    # id(rpc) -> [rpc, [(idx, pending)]]
+    for idx, p in enumerate(pendings):
+        if isinstance(p, Pending):
+            groups.setdefault(id(p._rpc), [p._rpc, []])[1].append((idx, p))
+        else:  # synchronously-completed stand-in: resolve up front
+            try:
+                results[idx] = ("ok", p.wait())
+            except RemoteError as e:
+                results[idx] = ("error", e)
+            except TransportClosed as e:
+                results[idx] = ("closed", e)
+
+    def settle(rpc, items):
+        left = []
+        for idx, p in items:
+            if p.ready():
+                try:
+                    results[idx] = ("ok", rpc._take(p.call_id))
+                except RemoteError as e:
+                    results[idx] = ("error", e)
+            else:
+                left.append((idx, p))
+        return left
+
+    def pump_ready(rpc, items):
+        """Settle cached replies, then keep consuming frames our own
+        buffer already holds (select can't see those)."""
+        items = settle(rpc, items)
+        while items and rpc.conn.has_buffered():
+            try:
+                rpc._pump_one()
+            except TransportClosed as e:
+                for idx, _ in items:
+                    results[idx] = ("closed", e)
+                return []
+            items = settle(rpc, items)
+        return items
+
+    sel = selectors.DefaultSelector()
+    try:
+        for key in list(groups):
+            rpc, items = groups[key]
+            items = pump_ready(rpc, items)
+            if items:
+                groups[key][1] = items
+                sel.register(rpc.conn, selectors.EVENT_READ, groups[key])
+            else:
+                del groups[key]
+
+        deadline = (None if timeout is None
+                    else time.monotonic() + timeout)
+        while groups:
+            budget = (None if deadline is None
+                      else max(0.0, deadline - time.monotonic()))
+            events = sel.select(budget)
+            if not events:
+                if deadline is not None and time.monotonic() >= deadline:
+                    n = sum(len(g[1]) for g in groups.values())
+                    raise TransportError(
+                        f"drain_pendings timed out with {n} replies "
+                        "outstanding")
+                continue
+            for ev_key, _ in events:
+                group = ev_key.data
+                rpc, items = group
+                try:
+                    rpc._pump_one()
+                except TransportClosed as e:
+                    for idx, _ in items:
+                        results[idx] = ("closed", e)
+                    items = []
+                else:
+                    items = pump_ready(rpc, items)
+                group[1] = items
+                if not items:
+                    sel.unregister(rpc.conn)
+                    del groups[id(rpc)]
+    finally:
+        sel.close()
+    return results  # type: ignore[return-value]
 
 
 def serve(conn: Connection, dispatch: Dict[str, Callable],

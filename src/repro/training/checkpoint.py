@@ -7,7 +7,6 @@ drivers; a production deployment would swap in a sharded async writer.
 from __future__ import annotations
 
 import os
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,7 +1,6 @@
 """Loss and train-step construction (with remat and MoE aux loss)."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,80 @@
+"""Bench sanity gate (benchmarks/check_bench.py), tier-1: the nightly
+job's tripwire must itself be trustworthy — it catches unparseable
+reports, missing/false smoke flags, and dropped required keys, and
+passes the reports the harness actually emits."""
+import json
+import os
+import sys
+
+# benchmarks/ is a root-level namespace package, not on src/
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.check_bench import REQUIRED_KEYS, check_report, main  # noqa: E402
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(payload if isinstance(payload, str) else json.dumps(payload))
+    return str(p)
+
+
+def test_clean_report_passes(tmp_path):
+    path = _write(tmp_path, "BENCH_paged_engine.json",
+                  {"smoke": True, "config": {}, "dense": {}, "paged": {},
+                   "paged_over_dense_speedup": 9.7})
+    assert check_report(path, smoke_run=True) == []
+
+
+def test_unparseable_and_wrong_shape_reports(tmp_path):
+    bad = _write(tmp_path, "BENCH_distributed.json", "{truncated")
+    (problem,) = check_report(bad, smoke_run=False)
+    assert "does not parse" in problem
+    arr = _write(tmp_path, "BENCH_module_scaling.json", [1, 2])
+    (problem,) = check_report(arr, smoke_run=False)
+    assert "not an object" in problem
+
+
+def test_smoke_flag_is_enforced_on_smoke_runs(tmp_path):
+    path = _write(tmp_path, "BENCH_prefix_sharing.json",
+                  {"smoke": False, "config": {}, "sharing_on": {},
+                   "sharing_off": {}, "peak_block_ratio": 0.55,
+                   "token_identical": True})
+    assert check_report(path, smoke_run=False) == []
+    problems = check_report(path, smoke_run=True)
+    assert any("smoke=false" in p for p in problems)
+    missing = _write(tmp_path, "BENCH_other.json", {"anything": 1})
+    assert any("'smoke'" in p for p in check_report(missing, False))
+
+
+def test_required_keys_are_checked(tmp_path):
+    path = _write(tmp_path, "BENCH_distributed.json",
+                  {"smoke": True, "config": {}, "migration_stall": {},
+                   "burst": {}, "dropped_requests": 0, "recoveries": 0})
+    problems = check_report(path, smoke_run=True)
+    assert problems == [
+        "BENCH_distributed.json: missing required key 'control_plane'"]
+
+
+def test_main_exit_codes(tmp_path, monkeypatch, capsys):
+    monkeypatch.setenv("REPRO_BENCH_SMOKE", "1")
+    good = _write(tmp_path, "BENCH_paged_engine.json",
+                  {"smoke": True, "config": {}, "dense": {}, "paged": {},
+                   "paged_over_dense_speedup": 1.0})
+    assert main([good]) == 0
+    # distinct filename: the clean report must stay clean alongside the
+    # bad one (a shared name would silently overwrite it)
+    bad = _write(tmp_path, "BENCH_module_scaling.json",
+                 {"smoke": False, "config": {}})
+    assert main([good, bad]) == 1
+    captured = capsys.readouterr()
+    assert "smoke=false" in captured.err
+    assert "missing required key" in captured.err
+    assert "1 clean" in captured.out
+
+
+def test_registry_covers_every_emitting_bench():
+    # every bench module that json.dumps a report should be registered
+    # here — this list is the reminder to extend REQUIRED_KEYS when a
+    # new bench starts emitting
+    assert set(REQUIRED_KEYS) == {
+        "BENCH_distributed.json", "BENCH_module_scaling.json",
+        "BENCH_paged_engine.json", "BENCH_prefix_sharing.json"}

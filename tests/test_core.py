@@ -11,7 +11,7 @@ from repro.core.plan import PlacementPlan
 from repro.core.scale_down import scale_down, sort_evictees
 from repro.core.scale_up import scale_up, sort_candidates_by_continuity
 from repro.core.speedup import (SpeedupModelConfig, gamma_of, speedup,
-                                speedup_homo, t_of, w_of)
+                                speedup_homo, t_of)
 
 
 # --------------------------------------------------------------------- plan

@@ -2,12 +2,19 @@
 processes; run with ``pytest -m slow``).
 
 The ISSUE-4 acceptance scenario: a 2-worker MULTI-PROCESS deployment
-(spawned processes, RPC frames over AF_UNIX sockets, no shared memory)
+(spawned processes, RPC frames over stream sockets, no shared memory)
 completes a burst with live scale-up and an overlapped scale-down
 migration that is zero-drop and token-identical — plus crash recovery:
 a remote instance killed mid-migration has its streams re-queued on a
 surviving instance with zero drops, asserted token-identical via
 counter-based replay.
+
+ISSUE-5 lifts the same suite multi-host: the whole module runs
+unchanged over loopback TCP endpoints under ``REPRO_RPC_TRANSPORT=tcp``
+(the nightly CI job does exactly that), and the TCP-pod test below
+drives a launch/pod.py inventory deployment through the batched
+control-plane poll, killing a worker mid-tick so the death surfaces
+inside the multiplexed drain rather than from a direct call.
 """
 import dataclasses
 
@@ -209,6 +216,101 @@ def test_destination_death_after_pause_replays_at_source(tiny):
         assert local.engine.pstate.blocks_in_use() == 0
     finally:
         orch.close()
+
+
+def test_tcp_pod_kill_mid_tick_replays_through_batched_poll(tiny, tmp_path):
+    """ISSUE-5 acceptance: a TCP pod from a node inventory (spawned
+    listening engine servers, orchestrator dials in with retry) serves
+    through the batched control-plane poll — exactly one multiplexed
+    drain per tick — and a worker killed MID-TICK (its death surfaces
+    as a ``closed`` entry inside the drain, or as a silent death at the
+    next fan-out; both fold into the same path) has every stream
+    replayed token-identically on the survivor, exactly once."""
+    cfg, params = tiny
+    from repro.launch.pod import launch_pod, load_inventory
+    from repro.serving import transport as TR
+
+    ports = sorted(int(TR.free_tcp_endpoint().rsplit(":", 1)[1])
+                   for _ in range(2))
+    inv = tmp_path / "pod.toml"
+    inv.write_text("".join(
+        f'[[node]]\nhost = "127.0.0.1"\nport = {p}\n\n' for p in ports))
+    handles = launch_pod(cfg, params, load_inventory(str(inv)),
+                         max_batch=3, max_len=64, block_size=8,
+                         n_blocks=32)
+    assert [h.endpoint for h in handles] == \
+        [f"tcp://127.0.0.1:{p}" for p in ports]
+
+    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                    max_new_tokens=10, temperature=0.8, top_k=16,
+                    seed=7 + i) for i in range(4)]
+    ref = _reference_outputs(cfg, params, reqs)
+
+    orch = Orchestrator(cfg, params, handles=handles,
+                        telemetry_every=10_000)
+    try:
+        assert not orch.engines         # all-RPC, nothing in-process
+        for r in reqs[:3]:              # load the victim worker
+            orch._home[r.rid] = 0
+            orch.instances[0].submit(_clone(r))
+        orch._home[reqs[3].rid] = 1
+        orch.instances[1].submit(_clone(reqs[3]))
+        for _ in range(3):
+            orch.step()
+        assert orch.instances[0].active_rids()
+
+        # kill worker 0 mid-tick: the crash op makes the server os._exit
+        # while this tick's step request is already on the wire, so the
+        # drain — not a direct call — observes the EOF
+        orch.instances[0].rpc.call_async("crash")
+        orch.step()
+        assert len(orch.recoveries) == 1
+        assert sorted(orch.recoveries[0]["rids"]) == [0, 1, 2]
+        # idempotent: a second observation of the same death is a no-op
+        assert orch.handle_instance_failure(0) == []
+        assert len(orch.recoveries) == 1
+
+        orch.run_until_done()
+        all_done = {r.rid: r.generated for r in orch.finished}
+        assert set(all_done) == {0, 1, 2, 3}
+        for rid, gen in all_done.items():
+            assert gen == ref[rid], f"rid {rid} diverged after replay"
+        assert orch.dropped == 0
+        # the control plane issued ONE multiplexed poll per tick, never
+        # N sequential waits
+        cp = orch.control_plane_stats()
+        assert cp["rpc_polls_per_tick"] == 1.0
+        assert cp["step_rpcs_per_tick"] >= 1.0
+    finally:
+        orch.close()
+
+
+def test_spawn_listen_fails_fast_when_port_is_taken(tiny):
+    """A spawned listening engine server whose bind fails (port already
+    occupied by a bound socket) exits immediately — the proxy's
+    connect-retry must notice the child's death and abort with a clear
+    error instead of retrying out the whole start_timeout."""
+    import socket
+    import time
+
+    cfg, params = tiny
+    from repro.serving import transport as TR
+    from repro.serving.remote_engine import EngineProxy
+
+    squatter = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    try:
+        squatter.bind(("127.0.0.1", 0))     # bound, never listening:
+        port = squatter.getsockname()[1]    # child gets EADDRINUSE,
+        endpoint = f"tcp://127.0.0.1:{port}"  # parent gets refused
+        t0 = time.perf_counter()
+        with pytest.raises(TR.TransportError, match="exited"):
+            EngineProxy(cfg, params, endpoint=endpoint, spawn=True,
+                        start_timeout=60.0, max_batch=2, max_len=64,
+                        block_size=8)
+        assert time.perf_counter() - t0 < 30.0, \
+            "child death was not detected; connect retried to deadline"
+    finally:
+        squatter.close()
 
 
 def test_remote_streams_match_local_streams(tiny):

@@ -1,0 +1,74 @@
+"""Pod inventory launcher (launch/pod.py), tier-1 slice: inventory
+parsing (TOML and JSON), endpoint expansion, schema validation, and the
+``--show`` CLI — everything that needs no engine-server spawn. The
+spawned/attached TCP pod itself is exercised by the tier-2 suite
+(tests/test_distributed_plane.py) and the distributed benchmark."""
+import json
+
+import pytest
+
+from repro.launch.pod import Node, load_inventory, main, parse_inventory
+
+TOML_DOC = """\
+# two-machine pod: this host spawns, the second is attached
+[[node]]
+host = "127.0.0.1"
+port = 7101
+capacity = 2
+
+[[node]]
+host = "10.0.0.7"
+port = 7201
+capacity = 1
+spawn = false
+"""
+
+
+def test_load_toml_inventory(tmp_path):
+    path = tmp_path / "pod.toml"
+    path.write_text(TOML_DOC)
+    nodes = load_inventory(str(path))
+    assert nodes == [Node(host="127.0.0.1", port=7101, capacity=2,
+                          spawn=True),
+                     Node(host="10.0.0.7", port=7201, capacity=1,
+                          spawn=False)]
+    # capacity k -> k consecutive ports on the node
+    assert nodes[0].endpoints() == ["tcp://127.0.0.1:7101",
+                                    "tcp://127.0.0.1:7102"]
+    assert nodes[1].endpoints() == ["tcp://10.0.0.7:7201"]
+
+
+def test_load_json_inventory(tmp_path):
+    path = tmp_path / "pod.json"
+    path.write_text(json.dumps({"node": [
+        {"host": "127.0.0.1", "port": 7301},
+    ]}))
+    (node,) = load_inventory(str(path))
+    assert node == Node(host="127.0.0.1", port=7301, capacity=1,
+                        spawn=True)
+
+
+@pytest.mark.parametrize("doc,msg", [
+    ({}, "non-empty"),
+    ({"node": []}, "non-empty"),
+    ({"node": ["tcp://x:1"]}, "not a table"),
+    ({"node": [{"host": "h"}]}, "port"),
+    ({"node": [{"host": "h", "port": 1, "cap": 2}]}, "unknown keys"),
+    ({"node": [{"host": "h", "port": 1, "capacity": 0}]}, "capacity"),
+    ({"node": [{"host": "h", "port": 99999}]}, "out of range"),
+    ({"node": [{"host": "h", "port": 7101, "capacity": 2},
+               {"host": "h", "port": 7102}]}, "cannot share"),
+])
+def test_inventory_schema_rejections(doc, msg):
+    with pytest.raises(ValueError, match=msg):
+        parse_inventory(doc)
+
+
+def test_show_cli_prints_expanded_endpoints(tmp_path, capsys):
+    path = tmp_path / "pod.toml"
+    path.write_text(TOML_DOC)
+    assert main(["--show", str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "tcp://127.0.0.1:7101  (spawn)" in out
+    assert "tcp://127.0.0.1:7102  (spawn)" in out
+    assert "tcp://10.0.0.7:7201  (attach)" in out

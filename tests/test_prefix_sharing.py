@@ -353,10 +353,8 @@ def test_migration_of_shared_blocks_token_identical(tiny):
     assert orch.engines[0].pstate.shared_blocks_saved() > 0, \
         "scenario exercised no sharing"
     # migrate ONLY rid 0; rid 1 keeps its claim on the shared blocks
-    slot0 = reqs[0].slot
     recs = orch.migrate_requests(0, 1, max_requests=1)
     assert len(recs) == 1 and recs[0].resumed and recs[0].rid == 0
-    del slot0
     done = {r.rid: r.generated for r in orch.run_until_done()}
     assert done == ref
     assert orch.dropped == 0

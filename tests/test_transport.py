@@ -1,8 +1,11 @@
 """RPC wire protocol (serving/transport.py): frame codec roundtrips,
 framed request/reply over a real socketpair, error propagation, hangup
-detection, and pipelining — the tier-1 (no process spawn) coverage of
-the distributed serving plane's transport layer."""
+detection, pipelining, TCP endpoints (framing parity with AF_UNIX,
+connect-retry, disconnect-mid-call), and the batched multiplexed poll —
+the tier-1 (no process spawn) coverage of the distributed serving
+plane's transport layer."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -120,3 +123,217 @@ def test_frame_stats_and_hangup_mid_frame():
     a.close()
     with pytest.raises(TR.TransportClosed):
         b.recv()
+
+
+# ------------------------------------------------------------- tcp layer
+def test_endpoint_parsing():
+    assert TR.parse_endpoint("tcp://127.0.0.1:7101") == \
+        ("tcp", ("127.0.0.1", 7101))
+    assert TR.parse_endpoint("unix:///tmp/x.sock") == ("unix", "/tmp/x.sock")
+    assert TR.parse_endpoint("/tmp/x.sock") == ("unix", "/tmp/x.sock")
+    for bad in ("tcp://nohost", "tcp://:7101", "tcp://h:port"):
+        with pytest.raises(ValueError):
+            TR.parse_endpoint(bad)
+
+
+def _tcp_echo_listener():
+    """Listen on an ephemeral TCP port; a thread serves ONE connection
+    with the same dispatch as the AF_UNIX tests."""
+    srv = TR.listen("tcp://127.0.0.1:0")
+    endpoint = TR.bound_endpoint(srv)
+
+    def run():
+        conn = TR.accept(srv, timeout=10)
+        srv.close()
+        _echo_server(conn)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    return endpoint, t
+
+
+def test_tcp_framing_parity_with_af_unix():
+    """The same frames over a real TCP connection: payload roundtrips
+    byte-identical to the AF_UNIX path, a handler exception crosses as
+    the same typed RemoteError, and the server survives it."""
+    endpoint, t = _tcp_echo_listener()
+    rpc = TR.Rpc(TR.connect(endpoint, timeout=10))
+    payload = {
+        "cols": np.asarray([0, 1, 5], np.int32),
+        "k": np.random.default_rng(0).normal(size=(2, 3, 1, 8, 4))
+        .astype(np.float32),
+        "keys": {0: "ab12"},
+    }
+    out = rpc.call("echo", payload)
+    for key in ("cols", "k"):
+        assert out[key].dtype == payload[key].dtype
+        np.testing.assert_array_equal(out[key], payload[key])
+    assert out["keys"] == {0: "ab12"}
+    with pytest.raises(TR.RemoteError) as ei:
+        rpc.call("boom")
+    assert ei.value.kind == "ValueError"
+    assert rpc.call("add", 2, b=3) == 5
+    rpc.call("shutdown")
+    t.join(timeout=5)
+    with pytest.raises(TR.TransportClosed):
+        rpc.call("echo", 1)
+
+
+def test_tcp_connect_retries_until_listener_appears():
+    """A pod launcher connects to an endpoint whose server is still
+    booting: every refused attempt retries with backoff until the bind
+    lands. Nobody listens at ``endpoint`` for the first ~0.3s."""
+    endpoint = TR.free_tcp_endpoint()
+
+    def late_listener():
+        time.sleep(0.3)
+        srv = TR.listen(endpoint)
+        conn = TR.accept(srv, timeout=10)
+        srv.close()
+        _echo_server(conn)
+
+    t = threading.Thread(target=late_listener, daemon=True)
+    t.start()
+    rpc = TR.Rpc(TR.connect(endpoint, timeout=10))
+    assert rpc.call("add", 20, b=3) == 23
+    rpc.call("shutdown")
+    t.join(timeout=5)
+
+
+def test_tcp_connect_gives_up_at_deadline():
+    endpoint = TR.free_tcp_endpoint()  # nobody will ever listen here
+    t0 = time.perf_counter()
+    with pytest.raises(TR.TransportError):
+        TR.connect(endpoint, timeout=0.4)
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_tcp_connect_fails_fast_on_permanent_errors():
+    """A typo'd hostname (DNS failure) is not transient: no retry loop,
+    the misconfiguration surfaces immediately instead of eating the
+    whole connect deadline."""
+    t0 = time.perf_counter()
+    with pytest.raises(TR.TransportError, match="not retrying"):
+        TR.connect("tcp://no-such-host.invalid:7101", timeout=30.0)
+    assert time.perf_counter() - t0 < 10.0
+
+
+def test_tcp_disconnect_mid_call_surfaces_transport_closed():
+    """The peer accepts the request frame, then dies without replying —
+    the blocked caller must observe TransportClosed (the crash signal),
+    not hang or see a framing error."""
+    srv = TR.listen("tcp://127.0.0.1:0")
+    endpoint = TR.bound_endpoint(srv)
+
+    def one_request_then_die():
+        conn = TR.accept(srv, timeout=10)
+        srv.close()
+        conn.recv()          # swallow the request...
+        conn.close()         # ...and hang up instead of replying
+
+    t = threading.Thread(target=one_request_then_die, daemon=True)
+    t.start()
+    rpc = TR.Rpc(TR.connect(endpoint, timeout=10))
+    with pytest.raises(TR.TransportClosed):
+        rpc.call("echo", {"big": np.zeros(1024, np.float32)})
+    t.join(timeout=5)
+
+
+# --------------------------------------------------------- batched poll
+class _Resolved:
+    """Local stand-in mixing into the poll (instance.Completed shape)."""
+
+    def __init__(self, value):
+        self._value = value
+
+    def wait(self):
+        return self._value
+
+
+def _sleepy_server(conn, delay):
+    TR.serve(conn, {"work": lambda x: (time.sleep(delay), x)[1]})
+    conn.close()
+
+
+def test_drain_pendings_waits_on_the_slowest_not_the_sum():
+    """Fan out to two peers (one TCP, one AF_UNIX — the poll is
+    transport-blind) that each take ~0.3s: one multiplexed drain
+    resolves both in ~max, clearly under the ~sum a sequential wait
+    would pay, and preserves input order."""
+    srv = TR.listen("tcp://127.0.0.1:0")
+    endpoint = TR.bound_endpoint(srv)
+    threads = []
+
+    def tcp_side():
+        conn = TR.accept(srv, timeout=10)
+        srv.close()
+        _sleepy_server(conn, 0.3)
+
+    threads.append(threading.Thread(target=tcp_side, daemon=True))
+    a, b = TR.socketpair()
+    threads.append(threading.Thread(target=_sleepy_server, args=(b, 0.3),
+                                    daemon=True))
+    for t in threads:
+        t.start()
+    rpc_tcp = TR.Rpc(TR.connect(endpoint, timeout=10))
+    rpc_unix = TR.Rpc(a)
+
+    t0 = time.perf_counter()
+    pendings = [rpc_tcp.call_async("work", "tcp"),
+                _Resolved("local"),
+                rpc_unix.call_async("work", "unix")]
+    results = TR.drain_pendings(pendings)
+    wall = time.perf_counter() - t0
+    assert results == [("ok", "tcp"), ("ok", "local"), ("ok", "unix")]
+    assert wall < 0.5, f"poll took {wall:.2f}s: waits look sequential"
+    for rpc in (rpc_tcp, rpc_unix):
+        rpc.call("shutdown")
+    for t in threads:
+        t.join(timeout=5)
+
+
+def test_drain_pendings_folds_peer_death_into_the_poll():
+    """A peer that dies with replies outstanding resolves ITS entries
+    to ("closed", TransportClosed) without disturbing the other peers'
+    results — crash detection rides the same poll as collection."""
+    a, b = TR.socketpair()          # peer that will die
+    c, d = TR.socketpair()          # healthy peer
+
+    def flaky(conn):
+        conn.recv()                 # first request: reply normally
+        conn.send({"id": 1, "ok": True, "result": "one"})
+        conn.recv()                 # second request: die instead
+        conn.close()
+
+    threads = [threading.Thread(target=flaky, args=(b,), daemon=True),
+               threading.Thread(target=_sleepy_server, args=(d, 0.05),
+                                daemon=True)]
+    for t in threads:
+        t.start()
+    flaky_rpc, ok_rpc = TR.Rpc(a), TR.Rpc(c)
+    pendings = [flaky_rpc.call_async("first"),
+                flaky_rpc.call_async("second"),
+                ok_rpc.call_async("work", 42)]
+    results = TR.drain_pendings(pendings)
+    assert results[0] == ("ok", "one")
+    assert results[1][0] == "closed"
+    assert isinstance(results[1][1], TR.TransportClosed)
+    assert results[2] == ("ok", 42)
+    ok_rpc.call("shutdown")
+    for t in threads:
+        t.join(timeout=5)
+
+
+def test_drain_pendings_resolves_error_replies_per_entry():
+    a, b = TR.socketpair()
+    t = threading.Thread(target=_echo_server, args=(b,), daemon=True)
+    t.start()
+    rpc = TR.Rpc(a)
+    results = TR.drain_pendings([rpc.call_async("boom"),
+                                 rpc.call_async("add", 1, b=2)])
+    assert results[0][0] == "error"
+    assert isinstance(results[0][1], TR.RemoteError)
+    assert results[0][1].kind == "ValueError"
+    assert results[1] == ("ok", 3)
+    rpc.call("shutdown")
+    t.join(timeout=5)
