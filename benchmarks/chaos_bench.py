@@ -1,0 +1,336 @@
+"""Chaos soak: the failure-domain acceptance gate (DESIGN.md §9).
+
+A 4-instance TCP pod (launch/pod.py inventory nodes, labels w0..w3)
+serves a paced workload while a SEEDED ``serving/faults.FaultPlan``
+injects the ISSUE-6 chaos mix against w1..w3 (w0 stays clean so the
+plane always has an anchor):
+
+* one ``kill``      — SIGKILL of a spawned node at a scheduled driver
+                      step (real process death, real EOF);
+* one ``half_open`` — a peer whose socket stays open but answers
+                      nothing (deadline + heartbeat-probe territory);
+* one ``partition`` — a transient op-window blackhole;
+* sprinkled ``delay`` events on every faulted peer.
+
+The soak passes only if the plane absorbs all of it:
+
+* **zero dropped streams** — every request finishes exactly once;
+* **token-identical**      — every stream (surviving, replayed, and
+  post-respawn) matches a fault-free single-engine reference;
+* **bounded detection**    — a hung peer is classified within 2x the
+  RPC deadline (drain expiry + heartbeat probe), never a full-tick
+  stall;
+* **supervised respawn**   — the killed node is respawned by the
+  orchestrator's supervisor and RE-ADMITTED: a fresh request pinned to
+  the replacement completes correctly.
+
+Faults ride the real wire (``transport.Connection.send``) and the plan
+is seeded — the same seed faults the same frames, byte for byte.
+
+Emits ``benchmarks/BENCH_chaos.json`` (keys: config / fault_plan /
+events / streams / recovery / acceptance) and contributes rows to
+``benchmarks/run.py``'s summary CSV. ``tests/test_chaos.py`` imports
+``run_soak`` directly at smoke sizes — the tier-2 gate and the nightly
+bench assert the same criteria on the same code path.
+
+    PYTHONPATH=src:. python benchmarks/chaos_bench.py --smoke
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks._smoke import ENV, is_smoke, pick
+
+ARCH = "tinyllama-1.1b"
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_chaos.json")
+
+# rid namespaces, disjoint by construction
+RID_WARMUP = 9000
+RID_POST = 5000
+
+
+def _requests(cfg, n, rid0=0, seed=0, prompt_len=24, max_new=10):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    return [Request(rid=rid0 + i,
+                    prompt=rng.integers(2, cfg.vocab_size, size=prompt_len)
+                    .astype(np.int32),
+                    max_new_tokens=max_new, temperature=0.7, top_k=8,
+                    seed=131 + rid0 + i)
+            for i in range(n)]
+
+
+def _reference(cfg, params, reqs, *, max_len, block_size):
+    """Fault-free oracle: each request decoded alone on a pristine
+    single engine — counter-based sampling keys make this the exact
+    token sequence every chaos-side replay must reproduce."""
+    import dataclasses
+    from repro.serving.engine import Engine
+    out = {}
+    for r in reqs:
+        e = Engine(cfg, params, max_batch=1, max_len=max_len,
+                   cache_kind="paged", block_size=block_size)
+        e.submit(dataclasses.replace(r, generated=[], slot=None,
+                                     submit_time=0.0, first_token_time=None,
+                                     finish_time=None, preemptions=0))
+        out[r.rid] = e.run_until_done()[0].generated
+    return out
+
+
+def _label_index(orch, peer):
+    """Instance index currently carrying EXACTLY ``peer`` as its label
+    (a respawned replacement is suffixed ``~rN`` and never matches —
+    static plans must not re-target it)."""
+    for i, h in enumerate(orch.instances):
+        if getattr(h, "peer_label", None) == peer:
+            return i
+    return None
+
+
+def run_soak(cfg, params, *, n_workers=4, seed=7, n_requests=8,
+             prompt_len=24, max_new=10, max_len=256, max_batch=2,
+             block_size=16, n_blocks=32, min_deadline=1.0,
+             kill_window=(2, 6), hang_window=(8, 16),
+             partition_window=(8, 16), partition_span=64,
+             respawn_wait_s=180.0, max_steps=3000) -> dict:
+    """One full chaos soak; returns the BENCH_chaos report dict.
+
+    Fully parameterized so tests/test_chaos.py drives it at smoke sizes
+    — the tier-2 gate and the nightly bench share this exact path."""
+    from repro.launch.pod import Node, launch_pod
+    from repro.serving import faults as FLT
+    from repro.serving import transport as TR
+    from repro.serving.orchestrator import Orchestrator, RespawnPolicy
+
+    nodes = [Node(host="127.0.0.1",
+                  port=int(TR.free_tcp_endpoint().rsplit(":", 1)[1]))
+             for _ in range(n_workers)]
+    t0 = time.perf_counter()
+    handles = launch_pod(cfg, params, nodes, max_batch=max_batch,
+                         max_len=max_len, block_size=block_size,
+                         n_blocks=n_blocks)
+    bringup_s = time.perf_counter() - t0
+    policy = RespawnPolicy(backoff_base=0.25, backoff_cap=2.0,
+                           max_failures=5, window_s=120.0,
+                           start_timeout=120.0)
+    orch = Orchestrator(cfg, params, handles=handles,
+                        telemetry_every=10_000, respawn_policy=policy)
+    labels = [h.peer_label for h in orch.instances]
+    events = []
+    inj = None
+    try:
+        # -------------------------------------------------- warm-up
+        # compile every shape the soak will touch (prefill bucket,
+        # decode widths) on EVERY worker BEFORE faults and deadlines
+        # exist — an XLA compile inside a deadline window would read as
+        # a hang. Also calibrates the deadline off real warm step time.
+        warm = _requests(cfg, n_workers, rid0=RID_WARMUP, seed=99,
+                         prompt_len=prompt_len, max_new=4)
+        for i, r in enumerate(warm):
+            orch._home[r.rid] = i
+            orch.instances[i].submit(r)
+        orch.run_until_done()
+        warm_steps = [s for h in orch.instances
+                      for s in h.telemetry.step_seconds]
+        warm_p95 = float(np.quantile(np.asarray(warm_steps), 0.95))
+        rpc_deadline = max(min_deadline, 8.0 * warm_p95)
+
+        # ------------------------------------- arm faults + deadline
+        plan = FLT.FaultPlan.seeded(
+            seed, labels[1:],           # w0 stays clean: the anchor
+            kill_window=kill_window, hang_window=hang_window,
+            partition_window=partition_window,
+            partition_span=partition_span)
+        killed_peer = next(e.peer for e in plan.events if e.kind == "kill")
+        inj = FLT.install(plan)
+        orch.set_rpc_deadline(rpc_deadline)
+
+        # --------------------------------------------- the soak loop
+        reqs = _requests(cfg, n_requests, rid0=0, seed=seed,
+                         prompt_len=prompt_len, max_new=max_new)
+        ref = _reference(cfg, params, reqs, max_len=max_len,
+                         block_size=block_size)
+        workload_rids = set(ref)
+        done_rids = set()
+        submitted = 0
+        s = 0
+        while len(done_rids) < n_requests and s < max_steps:
+            while submitted < n_requests and submitted <= s:
+                orch.submit(reqs[submitted])    # survives faulty peers
+                submitted += 1
+            for peer in inj.kills_due(s):
+                idx = _label_index(orch, peer)
+                if idx is not None:
+                    events.append({"step": s, "event": "kill",
+                                   "peer": peer})
+                    orch.instances[idx].kill()
+            done_rids.update(r.rid for r in orch.step()
+                             if r.rid in workload_rids)
+            s += 1
+        soak_steps = s
+
+        # ------------------------- wait out the supervisor's backoff
+        # the killed node's replacement must come up and re-admit
+        def respawned_base_labels():
+            return {e["label"].split("~", 1)[0]
+                    for e in orch.respawn_log
+                    if e["event"] == "respawned" and e.get("label")}
+
+        t_end = time.monotonic() + respawn_wait_s
+        while (killed_peer not in respawned_base_labels()
+               and time.monotonic() < t_end):
+            orch.step()
+            time.sleep(0.05)
+        killed_respawned = killed_peer in respawned_base_labels()
+
+        # ---------------------------- post-respawn re-admission proof
+        post = _requests(cfg, 2, rid0=RID_POST, seed=seed + 1,
+                         prompt_len=prompt_len, max_new=max_new)
+        ref.update(_reference(cfg, params, post, max_len=max_len,
+                              block_size=block_size))
+        readmit_idx = None
+        if killed_respawned:
+            for e in orch.respawn_log:
+                if (e["event"] == "respawned" and e.get("label")
+                        and e["label"].split("~", 1)[0] == killed_peer):
+                    readmit_idx = e["instance"]
+        for k, r in enumerate(post):
+            if k == 0 and readmit_idx is not None:
+                # pin the first one to the replacement: finishing it
+                # token-identically IS the re-admission evidence
+                orch._home[r.rid] = readmit_idx
+                orch.instances[readmit_idx].submit(r)
+            else:
+                orch.submit(r)
+        orch.run_until_done()
+
+        # ------------------------------------------------- verdicts
+        scored = workload_rids | {r.rid for r in post}
+        seen = {}
+        for r in orch.finished:
+            if r.rid in scored:
+                seen.setdefault(r.rid, []).append(r.generated)
+        duplicates = sorted(rid for rid, g in seen.items() if len(g) > 1)
+        missing = sorted(scored - set(seen))
+        mismatched = sorted(rid for rid, g in seen.items()
+                            if g != [ref[rid]])
+        hung_detects = [r["detect_s"] for r in orch.recoveries
+                        if r["reason"] == "hung"]
+        # drain expiry (<= 1x) + heartbeat probe (<= 1x) + a small
+        # classification/replay slop that is wall work, not waiting
+        detect_bound = 2.0 * rpc_deadline + 0.5
+        stats = orch.stats()
+        fault_stats = stats["faults"]
+        acceptance = {
+            "zero_dropped_streams": (not missing and not duplicates
+                                     and orch.dropped == 0),
+            "token_identical": not mismatched and not missing,
+            "hung_detected_within_2x_deadline": (
+                bool(hung_detects)
+                and max(hung_detects) <= detect_bound),
+            "killed_worker_respawned_and_readmitted": (
+                killed_respawned and readmit_idx is not None
+                and seen.get(post[0].rid) == [ref[post[0].rid]]),
+        }
+        report = {
+            "smoke": is_smoke(),
+            "config": {
+                "arch": f"{ARCH} (reduced)", "workers": n_workers,
+                "transport": "loopback TCP pod (spawned listening "
+                             "servers)",
+                "seed": seed, "n_requests": n_requests,
+                "prompt_len": prompt_len, "max_new": max_new,
+                "max_len": max_len, "block_size": block_size,
+                "n_blocks": n_blocks, "rpc_deadline_s": rpc_deadline,
+                "pod_bringup_s": bringup_s, "soak_steps": soak_steps},
+            "fault_plan": plan.to_json(),
+            "events": {
+                "kills_executed": events,
+                "injected": dict(inj.injected),
+                "recoveries": list(orch.recoveries),
+                "respawn_log": list(orch.respawn_log)},
+            "streams": {
+                "total": len(scored),
+                "finished_once": len(seen) - len(duplicates),
+                "missing_rids": missing,
+                "duplicate_rids": duplicates,
+                "mismatched_rids": mismatched,
+                "dropped": orch.dropped,
+                "token_identical": not mismatched and not missing},
+            "recovery": {
+                "rpc_deadline_s": rpc_deadline,
+                "detect_bound_s": detect_bound,
+                "hung_detect_s": hung_detects,
+                "detect_p50_s": fault_stats["detect_p50_s"],
+                "detect_p95_s": fault_stats["detect_p95_s"],
+                "rpc_timeouts": fault_stats["rpc_timeouts"],
+                "quarantines": fault_stats["quarantines"],
+                "respawns": fault_stats["respawns"],
+                "evictions": fault_stats["evictions"],
+                "respawn_downtime_s": [
+                    e["downtime_s"] for e in orch.respawn_log
+                    if e["event"] == "respawned"]},
+            "acceptance": acceptance,
+        }
+    finally:
+        if inj is not None:
+            FLT.uninstall()
+        orch.close()
+    return report
+
+
+def run():
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config(ARCH).reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
+    report = run_soak(
+        cfg, params,
+        n_workers=4,
+        seed=int(os.environ.get("REPRO_CHAOS_SEED", "7")),
+        n_requests=pick(16, 8),
+        prompt_len=pick(48, 24),
+        max_new=pick(24, 10),
+        max_len=256, max_batch=2, block_size=16, n_blocks=32)
+
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+    acc = report["acceptance"]
+    for crit, ok in acc.items():
+        assert ok, (f"chaos acceptance failed: {crit} "
+                    f"(streams={report['streams']}, "
+                    f"recovery={report['recovery']})")
+    rec = report["recovery"]
+    rows = [
+        ("chaos_soak", rec["detect_p95_s"] * 1e6,
+         f"seed={report['config']['seed']} "
+         f"injected={sum(report['events']['injected'].values())} "
+         f"quarantines={rec['quarantines']} respawns={rec['respawns']} "
+         f"identical={report['streams']['token_identical']} "
+         f"dropped={report['streams']['dropped']}"),
+        ("chaos_respawn",
+         (np.mean(rec["respawn_downtime_s"]) * 1e6
+          if rec["respawn_downtime_s"] else 0.0),
+         f"downtime_s={[round(d, 2) for d in rec['respawn_downtime_s']]} "
+         f"readmitted={acc['killed_worker_respawned_and_readmitted']}"),
+    ]
+    return rows
+
+
+def main(argv=None):
+    import sys
+    argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        os.environ[ENV] = "1"
+        print("# smoke mode: toy sizes, numbers not comparable")
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,14 @@ import sys
 # required top-level keys per report — update when a bench's schema
 # grows a section the acceptance criteria depend on
 REQUIRED_KEYS = {
+    "BENCH_chaos.json": [
+        "config",
+        "fault_plan",
+        "events",
+        "streams",
+        "recovery",
+        "acceptance",
+    ],
     "BENCH_distributed.json": [
         "config",
         "migration_stall",

@@ -17,9 +17,9 @@ def main(argv=None) -> None:
         from benchmarks._smoke import ENV
         os.environ[ENV] = "1"
         print("# smoke mode: toy sizes, numbers not comparable")
-    from benchmarks import (ablations, distributed_bench, fig6_replication,
-                            fig8_single, fig9_memory, fig10_multi,
-                            fig11_robustness, kernels_bench,
+    from benchmarks import (ablations, chaos_bench, distributed_bench,
+                            fig6_replication, fig8_single, fig9_memory,
+                            fig10_multi, fig11_robustness, kernels_bench,
                             module_scaling_bench, paged_engine_bench,
                             prefix_sharing_bench, roofline, speedup_model,
                             table1_modules, table2_scaling_cost)
@@ -31,6 +31,9 @@ def main(argv=None) -> None:
         ("fig8", fig8_single),
         ("fig9", fig9_memory),
         ("fig10", fig10_multi),
+        # chaos runs BEFORE fig11 so fig11's recovery section can
+        # consume the BENCH_chaos.json this same run just emitted
+        ("chaos", chaos_bench),
         ("fig11", fig11_robustness),
         ("ablations", ablations),
         ("kernels", kernels_bench),

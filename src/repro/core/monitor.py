@@ -32,6 +32,12 @@ class MetricsSnapshot:
     # of that vacancy copy-on-write sharing is buying) ---
     prefix_hit_rate: float = 0.0    # hit fraction of prompt-block lookups
     blocks_saved: int = 0           # physical blocks saved NOW by sharing
+    # --- failure domain (DESIGN.md §9): cumulative plane-wide counters,
+    # all 0 outside chaos runs / real incidents ---
+    faults_injected: int = 0        # transport faults the harness injected
+    rpc_timeouts: int = 0           # calls that missed their deadline
+    quarantines: int = 0            # hung peers severed + killed
+    respawns: int = 0               # supervised restarts re-admitted
 
 
 class Monitor:

@@ -121,7 +121,9 @@ def load_inventory(path: str) -> List[Node]:
 
 
 def launch_pod(cfg, params, nodes: List[Node], *,
-               start_timeout: float = 120.0, **engine_kw) -> list:
+               start_timeout: float = 120.0,
+               pod_timeout: Optional[float] = None,
+               **engine_kw) -> list:
     """Bring up one ``EngineProxy`` per inventory endpoint and return
     the handle list for ``Orchestrator(handles=...)``.
 
@@ -132,11 +134,26 @@ def launch_pod(cfg, params, nodes: List[Node], *,
     pre-spawned child so liveness/kill still see it). On any failure,
     handles brought up so far are closed and spawned-but-unadopted
     servers are reaped before the error propagates (no orphan
-    processes)."""
+    processes).
+
+    ``start_timeout`` bounds each node's OWN bring-up (dial + init
+    handshake); ``pod_timeout`` is the TOTAL wall deadline for the
+    whole launch — with it, one never-booting node fails the pod fast
+    (per-endpoint budget = whatever remains of the pod deadline)
+    instead of serially eating a full ``start_timeout`` per endpoint.
+
+    Proxies are labeled ``w0..wN-1`` in inventory order — the stable
+    per-peer identity the fault-injection plans of
+    ``serving/faults.py`` target (free-port inventories keep the same
+    labels run to run, so a seeded chaos plan stays reproducible)."""
     import multiprocessing as mp
+    import time
 
     from repro.serving.remote_engine import EngineProxy, engine_server_listen
+    from repro.serving.transport import TransportError
 
+    deadline = (None if pod_timeout is None
+                else time.monotonic() + pod_timeout)
     ctx = mp.get_context("spawn")
     plan = []                       # (endpoint, spawned process | None)
     handles = []
@@ -149,10 +166,19 @@ def launch_pod(cfg, params, nodes: List[Node], *,
                                        args=(ep,), daemon=True)
                     proc.start()
                 plan.append((ep, proc))
-        for ep, proc in plan:
+        for k, (ep, proc) in enumerate(plan):
+            budget = start_timeout
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TransportError(
+                        f"pod bring-up deadline ({pod_timeout:.1f}s) "
+                        f"exceeded with {len(handles)}/{len(plan)} "
+                        f"instances up (next: {ep})")
+                budget = min(budget, remaining)
             handles.append(EngineProxy(
                 cfg, params, endpoint=ep, spawn=False, adopt_process=proc,
-                start_timeout=start_timeout, **engine_kw))
+                start_timeout=budget, peer_label=f"w{k}", **engine_kw))
     except Exception:
         for h in handles:
             try:

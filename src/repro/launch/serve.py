@@ -63,6 +63,15 @@ def main(argv=None):
                          "plane; overrides --workers/--instances")
     ap.add_argument("--slo", type=float, default=40.0,
                     help="engine-clock latency SLO (steps)")
+    ap.add_argument("--rpc-deadline", type=float, default=None,
+                    help="per-call RPC deadline in seconds: a hung "
+                         "worker (socket open, no reply) is detected "
+                         "within 2x this and quarantined instead of "
+                         "stalling the control tick (default: off)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="respawn dead/quarantined spawned workers with "
+                         "capped exponential backoff (flap detector "
+                         "evicts a worker that keeps dying)")
     ap.add_argument("--drain", action="store_true",
                     help="after the workload, drain instance N-1 "
                          "(scale-down consolidation demo)")
@@ -102,7 +111,8 @@ def main(argv=None):
         _report(finished, time.time() - t_start)
         return len(finished)
 
-    from repro.serving.orchestrator import Orchestrator
+    from repro.serving.orchestrator import Orchestrator, RespawnPolicy
+    policy = RespawnPolicy() if args.supervise else None
     if args.inventory:
         from repro.launch.pod import launch_pod, load_inventory
         nodes = load_inventory(args.inventory)
@@ -110,7 +120,9 @@ def main(argv=None):
                              max_batch=args.max_batch, max_len=128)
         n_instances = len(handles)
         orch = Orchestrator(cfg, params, handles=handles,
-                            slo_latency=args.slo, telemetry_every=4)
+                            slo_latency=args.slo, telemetry_every=4,
+                            rpc_deadline=args.rpc_deadline,
+                            respawn_policy=policy)
         print(f"[serve] pod: {n_instances} engine servers over TCP "
               f"({sum(n.spawn for n in nodes)} node(s) spawned, "
               f"{sum(not n.spawn for n in nodes)} attached)")
@@ -119,7 +131,9 @@ def main(argv=None):
         orch = Orchestrator(cfg, params, n_instances=n_instances,
                             max_batch=args.max_batch, max_len=128,
                             slo_latency=args.slo, telemetry_every=4,
-                            remote=bool(args.workers))
+                            remote=bool(args.workers),
+                            rpc_deadline=args.rpc_deadline,
+                            respawn_policy=policy)
         if args.workers:
             print(f"[serve] distributed plane: {args.workers} "
                   f"engine-server processes over RPC")
@@ -161,6 +175,11 @@ def main(argv=None):
     print(f"[serve] control plane: {cp['rpc_polls_per_tick']:.2f} "
           f"multiplexed polls/tick over "
           f"{cp['step_rpcs_per_tick']:.1f} step RPCs/tick")
+    ft = s["faults"]
+    print(f"[serve] failure domain: injected={ft['injected']} "
+          f"rpc_timeouts={ft['rpc_timeouts']} "
+          f"quarantines={ft['quarantines']} respawns={ft['respawns']} "
+          f"evictions={ft['evictions']}")
     print(f"[serve] final plan P (first 8): {orch.plan.p[:8]}, "
           f"continuity breaks: {orch.plan.continuity_breaks()}")
     orch.close()

@@ -172,8 +172,28 @@ class InstanceHandle:
         raise NotImplementedError
 
     # --------------------------------------------------------- liveness
+    #: can the orchestrator's supervisor restart this instance after it
+    #: dies? True only for remote handles whose server process we own
+    #: (EngineProxy overrides with a property).
+    respawnable: bool = False
+
     def alive(self) -> bool:
         return True
+
+    def set_rpc_deadline(self, seconds: Optional[float]):
+        """Per-call deadline for remote handles; a local call cannot
+        hang independently of the orchestrator — no-op."""
+
+    def probe(self, timeout: float = 1.0) -> str:
+        """Hung-vs-dead classification after a missed deadline
+        (``"alive"`` / ``"hung"`` / ``"dead"``). A local instance is
+        exactly as alive as its ``alive()``."""
+        return "alive" if self.alive() else "dead"
+
+    def quarantine(self):
+        """Permanently remove a hung peer from the plane (close
+        transport, kill an owned process). Local instances share our
+        process: nothing to sever."""
 
     def inflight_requests(self) -> List[Request]:
         """Replayable clones of every request this instance currently

@@ -30,6 +30,35 @@ class SyncCounter:
     n: int = 0
 
 
+@dataclasses.dataclass
+class FaultCounters:
+    """Plane-wide failure-domain counters, owned by the orchestrator
+    (one per plane, not per engine — a quarantine is a fleet event).
+    Feeds the ``rpc_timeouts`` / ``quarantines`` / ``respawns`` gauges
+    of ``core.monitor.MetricsSnapshot`` and the recovery-latency
+    percentiles of benchmarks/chaos_bench.py."""
+    rpc_timeouts: int = 0     # step/control calls that missed a deadline
+    quarantines: int = 0      # hung peers severed (socket open, no reply)
+    respawns: int = 0         # supervised restarts that re-admitted
+    evictions: int = 0        # flap-detector permanent removals
+    # wall seconds from control fan-out to failure classification, one
+    # entry per recovery — the "detected within 2x deadline" evidence
+    detect_latencies: list = dataclasses.field(default_factory=list)
+
+    def detect_quantile(self, q: float) -> float:
+        if not self.detect_latencies:
+            return 0.0
+        return float(np.quantile(np.asarray(self.detect_latencies), q))
+
+    def as_dict(self) -> dict:
+        return {"rpc_timeouts": self.rpc_timeouts,
+                "quarantines": self.quarantines,
+                "respawns": self.respawns,
+                "evictions": self.evictions,
+                "detect_p50_s": self.detect_quantile(0.50),
+                "detect_p95_s": self.detect_quantile(0.95)}
+
+
 class EngineTelemetry:
     """Rolling-window per-engine counters feeding core/monitor."""
 

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
@@ -66,9 +67,11 @@ from repro.core.cluster import Cluster, Device, layer_weight_bytes
 from repro.core.controller import Controller, ControllerConfig
 from repro.core.monitor import MetricsSnapshot, Monitor
 from repro.core.plan import PlacementPlan
+from repro.serving import faults as FLT
 from repro.serving import transport as TR
 from repro.serving.engine import Engine, Request
 from repro.serving.instance import InstanceHandle, LocalInstance
+from repro.serving.instrument import FaultCounters
 
 
 @dataclasses.dataclass
@@ -88,6 +91,23 @@ class MigrationRecord:
     delta_bytes: int = 0
 
 
+@dataclasses.dataclass
+class RespawnPolicy:
+    """Supervised-respawn knobs (DESIGN.md §9). A dead/quarantined
+    respawnable worker is restarted after a capped exponential backoff
+    (``backoff_base * 2^attempt``, at most ``backoff_cap`` seconds) and
+    re-admitted through the normal two-phase bring-up handshake. The
+    flap detector is a circuit breaker: ``max_failures`` failures of
+    the same instance inside ``window_s`` evict it permanently —
+    a crash-looping worker must not soak the fleet in bring-up cost
+    forever."""
+    backoff_base: float = 0.25
+    backoff_cap: float = 5.0
+    max_failures: int = 3
+    window_s: float = 60.0
+    start_timeout: float = 120.0
+
+
 class Orchestrator:
     def __init__(self, cfg: ModelConfig, params, *, n_instances: int = 2,
                  max_batch: int = 4, max_len: int = 128,
@@ -97,7 +117,10 @@ class Orchestrator:
                  controller_cfg: Optional[ControllerConfig] = None,
                  link_bandwidth: float = 50e9, remote: bool = False,
                  handles: Optional[List[InstanceHandle]] = None,
-                 max_phases: int = 3, **engine_kw):
+                 max_phases: int = 3,
+                 rpc_deadline: Optional[float] = None,
+                 respawn_policy: Optional[RespawnPolicy] = None,
+                 **engine_kw):
         self.cfg = cfg
         self.slo_latency = slo_latency
         self.telemetry_every = telemetry_every
@@ -172,6 +195,32 @@ class Orchestrator:
         #           remote instance — the "one poll per tick" invariant),
         # step_rpcs = step RPCs fanned out across those polls
         self.rpc_stats = {"ticks": 0, "polls": 0, "step_rpcs": 0}
+        # --- failure domain (DESIGN.md §9) ---
+        self.faults = FaultCounters()
+        self.respawn_policy = respawn_policy
+        self._respawn: Dict[int, dict] = {}   # idx -> supervisor state
+        self._evicted: set = set()            # flap-detector removals
+        self.respawn_log: List[dict] = []     # audit trail (bench/tests)
+        # cold-start grace: a respawned replica's first ACTIVE step may
+        # include XLA compiles that dwarf any sane RPC deadline — its
+        # deadline stays disarmed until that step completes, so a fresh
+        # worker is never misclassified as hung while it warms up
+        self._grace: set = set()
+        self._fanout_t = 0.0                  # last control fan-out start
+        self.rpc_deadline: Optional[float] = None
+        self.set_rpc_deadline(rpc_deadline)
+
+    def set_rpc_deadline(self, seconds: Optional[float]):
+        """Arm (or disarm, with None — the default: zero behavior
+        change) the per-call deadline on every instance handle. With a
+        deadline set, a hung peer resolves to a ``hung`` poll entry in
+        at most ``seconds`` and is then classified by a heartbeat probe
+        bounded by the same budget — detection wall ≤ 2x the deadline,
+        never an unbounded control-tick stall."""
+        self.rpc_deadline = seconds
+        for i, h in enumerate(self.instances):
+            if i not in self._grace:    # warming replicas arm later
+                h.set_rpc_deadline(seconds)
 
     # ------------------------------------------------------------ topology
     @property
@@ -201,10 +250,20 @@ class Orchestrator:
         (ties: shortest queue, lowest id) — block vacancy is the live
         resource the paper's admission reasons about. The count includes
         cached-free blocks (refcount-0 prefix-cache residents): they are
-        evictable on demand, so they ARE vacancy."""
+        evictable on demand, so they ARE vacancy.
+
+        A routed peer that fails DURING the submit (died, or hung past
+        its deadline) does not lose the request: the handle mirrors the
+        pristine clone before sending, so failing the peer replays the
+        clone — with everything else it held — onto a survivor."""
         i = self._route()
         self._home[req.rid] = i
-        self.instances[i].submit(req)
+        t_obs = time.monotonic()
+        try:
+            self.instances[i].submit(req)
+        except (TR.TransportClosed, TR.RpcTimeout) as e:
+            self._fail_instance(i, hung=isinstance(e, TR.RpcTimeout),
+                                t_obs=t_obs)
 
     def _route(self, among: Optional[List[int]] = None) -> int:
         cands = among if among is not None else self._alive()
@@ -230,6 +289,7 @@ class Orchestrator:
         fin: List[Request] = []
         idxs: List[int] = []
         pendings: List = []
+        self._fanout_t = time.monotonic()
         for i, h in enumerate(self.instances):
             if not h.alive():
                 if i not in self._recovered:
@@ -253,11 +313,17 @@ class Orchestrator:
         if n_remote:
             self.rpc_stats["polls"] += 1
         errors = []
-        for i, (status, val) in zip(idxs, TR.drain_pendings(pendings)):
+        for (i, p), (status, val) in zip(zip(idxs, pendings),
+                                         TR.drain_pendings(pendings)):
             h = self.instances[i]
             if status == "closed":
                 h.mark_dead()
                 self.handle_instance_failure(i)
+            elif status == "hung":
+                try:
+                    fin.extend(self._on_hung_step(i, p))
+                except TR.RemoteError as e:
+                    errors.append(e)   # salvaged reply was an error reply
             elif status == "error":
                 # don't raise yet: later entries hold other instances'
                 # ALREADY-RECEIVED step replies — skipping finish_step
@@ -266,6 +332,11 @@ class Orchestrator:
                 errors.append(val)
             else:
                 fin.extend(h.finish_step(val))
+                if i in self._grace and h.active_count():
+                    # first step with real work done: compiles are paid,
+                    # the replica now answers on normal latency — arm it
+                    h.set_rpc_deadline(self.rpc_deadline)
+                    self._grace.discard(i)
         if errors:
             # this tick's finishes must survive the raise too — the
             # callers' extend never runs, so route them through the
@@ -275,12 +346,60 @@ class Orchestrator:
             raise errors[0]
         return fin
 
+    def _on_hung_step(self, idx: int, pending) -> List[Request]:
+        """A step RPC missed its deadline with the socket still open.
+        Classify with the heartbeat probe (bounded by the same deadline
+        budget, so total detection wall stays ≤ 2x the deadline):
+
+        * ``alive``  — the peer answers. In-order serving then proves
+          one of two things: the step reply already arrived while we
+          probed (merely-slow peer — salvage it, nothing was lost), or
+          the step REQUEST frame itself was lost (injected drop /
+          healed partition) and the step never executed — skipping this
+          tick is safe, the peer stays admitted;
+        * ``hung``   — heartbeat unanswered too: blackholed/half-open.
+          Quarantine (sever + kill) and replay its inflight mirror;
+        * ``dead``   — it died while we looked: normal crash path."""
+        self.faults.rpc_timeouts += 1
+        h = self.instances[idx]
+        verdict = h.probe(self.rpc_deadline or 1.0)
+        if verdict == "alive":
+            if pending.ready():
+                return h.finish_step(pending.wait())
+            return []
+        self._fail_instance(idx, hung=(verdict == "hung"))
+        return []
+
+    def _fail_instance(self, idx: int, *, hung: bool,
+                       t_obs: Optional[float] = None):
+        """Fold one observed peer failure into quarantine + replay. A
+        HUNG peer is quarantined first (socket severed, owned process
+        killed) so the idempotent replay can never race a zombie's late
+        effects; a dead one just gets marked. ``t_obs`` is when the
+        failing call was issued — the start of the observation window
+        for the detection-latency gauge; callers classifying outside
+        the step fan-out (submit, migration RPCs, recovery replay) must
+        pass it, else the gauge would charge this peer with wall time
+        from before it was even observable as faulty."""
+        h = self.instances[idx]
+        if hung and idx not in self._recovered:
+            self.faults.quarantines += 1
+            try:
+                h.quarantine()
+            except TR.TransportError:
+                pass
+        else:
+            h.mark_dead()
+        self.handle_instance_failure(idx, reason="hung" if hung
+                                     else "dead", t_obs=t_obs)
+
     def step(self) -> List[Request]:
         """One orchestrator iteration: step every alive instance through
         the batched poll (each records real wall latency into its
         telemetry), collect finishes, recover any instance whose
         transport died, and on telemetry ticks run the monitor ->
         controller -> execute pipeline."""
+        self._tick_respawns()
         fin = self._step_all()
         self.finished.extend(fin)
         self._tick += 1
@@ -358,7 +477,11 @@ class Orchestrator:
             step_seconds=max((t.mean_step_s() for t in tel), default=0.0),
             preemptions=new_preempts,
             prefix_hit_rate=ph / pq if pq else 0.0,
-            blocks_saved=saved)
+            blocks_saved=saved,
+            faults_injected=FLT.injected_total(),
+            rpc_timeouts=self.faults.rpc_timeouts,
+            quarantines=self.faults.quarantines,
+            respawns=self.faults.respawns)
 
     def _sync_cluster(self, snap: MetricsSnapshot):
         for d, u, m in zip(self.cluster.devices, snap.device_util,
@@ -452,25 +575,34 @@ class Orchestrator:
         out: List[MigrationRecord] = []
         for slot in slots:
             t0 = time.perf_counter()
+            t_obs = time.monotonic()
             try:
                 payload = hsrc.pause_request(slot)
-            except TR.TransportClosed:
-                # source died: its inflight mirror (which still holds
-                # this stream) replays on survivors
-                self.handle_instance_failure(src)
+            except (TR.TransportClosed, TR.RpcTimeout) as e:
+                # source died or hung mid-pause: either way its inflight
+                # mirror (which still holds this stream — pause never
+                # returned) replays on survivors
+                self._fail_instance(src, hung=isinstance(e, TR.RpcTimeout),
+                                    t_obs=t_obs)
                 break
             req = payload["request"]
+            t_obs = time.monotonic()
             try:
                 ok = hdst.resume_request(payload)
                 if not ok:
                     hdst.requeue_front(req)  # zero-drop fallback: replay
-            except TR.TransportClosed:
-                # destination died AFTER the source detached the stream:
-                # the payload in hand is the only copy — hand it back to
-                # the (alive) source for deterministic replay, then
-                # recover whatever else the destination held
-                hsrc.requeue_front(req)
-                self.handle_instance_failure(dst)
+            except (TR.TransportClosed, TR.RpcTimeout) as e:
+                # destination died/hung AFTER the source detached the
+                # stream: the payload in hand is the only copy — hand it
+                # back to the (alive) source for deterministic replay,
+                # then recover whatever else the destination held. A
+                # HUNG destination is quarantined (killed) before the
+                # replay, so even if it did import the payload it can
+                # never decode it — no duplicated stream.
+                if hsrc.alive():
+                    hsrc.requeue_front(req)
+                self._fail_instance(dst, hung=isinstance(e, TR.RpcTimeout),
+                                    t_obs=t_obs)
                 break
             dt = time.perf_counter() - t0
             nbytes = payload["kv"]["nbytes"]
@@ -513,46 +645,77 @@ class Orchestrator:
         left to move."""
         src, dst, slot = ticket["src"], ticket["dst"], ticket["slot"]
         hsrc, hdst = self.instances[src], self.instances[dst]
+        t_obs = time.monotonic()
         try:
             staged = ticket["pending"].wait()
-        except TR.TransportClosed:
-            self.handle_instance_failure(dst)
+        except (TR.TransportClosed, TR.RpcTimeout) as e:
+            self._fail_instance(dst, hung=isinstance(e, TR.RpcTimeout),
+                                t_obs=t_obs)
             return None
-        payload = None
-        try:
-            still = hsrc.active_rids().get(slot) == ticket["rid"]
-            if not still:
-                # finished or preempted at the source in the meantime:
-                # its tokens/queue entry live there — nothing to move
-                if staged is not None:
+        if hsrc.active_rids().get(slot) != ticket["rid"]:
+            # finished or preempted at the source in the meantime: its
+            # tokens/queue entry live there — nothing to move, but the
+            # staged slots at the destination must be reclaimed
+            if staged is not None:
+                t_obs = time.monotonic()
+                try:
                     hdst.abort_resume(staged)
-                return None
-            t_pause = time.perf_counter()
+                except (TR.TransportClosed, TR.RpcTimeout) as e:
+                    self._fail_instance(
+                        dst, hung=isinstance(e, TR.RpcTimeout),
+                        t_obs=t_obs)
+            return None
+        # Each failure window below is handled per-peer so a fault
+        # injected ANYWHERE between pause_request and commit_resume
+        # leaves the source authoritative and the staged destination
+        # slots reclaimed (by abort, or with the quarantined process).
+        payload = None
+        t_pause = time.perf_counter()
+        t_obs = time.monotonic()
+        try:
             if staged is None:
                 # destination couldn't stage the bulk: classic path
                 payload = hsrc.pause_request(slot)
-                ok = hdst.resume_request(payload)
             else:
                 payload = hsrc.pause_request(slot,
                                              since_epoch=ticket["epoch"])
+        except (TR.TransportClosed, TR.RpcTimeout) as e:
+            # the SOURCE failed mid-pause: pause never returned, so its
+            # inflight mirror still holds the stream — replay covers
+            # it. Reclaim the staged slots at the (alive) destination.
+            if staged is not None and hdst.alive():
+                t_abort = time.monotonic()
+                try:
+                    hdst.abort_resume(staged)
+                except (TR.TransportClosed, TR.RpcTimeout) as e2:
+                    self._fail_instance(
+                        dst, hung=isinstance(e2, TR.RpcTimeout),
+                        t_obs=t_abort)
+            self._fail_instance(src, hung=isinstance(e, TR.RpcTimeout),
+                                t_obs=t_obs)
+            return None
+        t_obs = time.monotonic()
+        try:
+            if staged is None:
+                ok = hdst.resume_request(payload)
+            else:
                 ok = hdst.commit_resume(staged, payload)
             req = payload["request"]
             if not ok:
                 hdst.requeue_front(req)  # zero-drop fallback: replay
             stall = time.perf_counter() - t_pause
-        except TR.TransportClosed:
-            dead = src if not hsrc.alive() else dst
-            if payload is not None and dead == dst and hsrc.alive():
-                # the destination died AFTER the source detached the
-                # stream: the payload in hand is the only copy — hand it
-                # back to the source for deterministic replay
+        except (TR.TransportClosed, TR.RpcTimeout) as e:
+            # the DESTINATION failed between pause and commit — the
+            # rollback-hardening window. The payload in hand is the
+            # only copy: the source stays authoritative (requeue +
+            # deterministic replay). The staged slots die with the
+            # dead/quarantined destination process; a HUNG destination
+            # is killed by the quarantine before replay, so a commit
+            # that half-landed can never decode — no duplication.
+            if hsrc.alive():
                 hsrc.requeue_front(payload["request"])
-            if staged is not None and hdst.alive():
-                try:
-                    hdst.abort_resume(staged)
-                except TR.TransportClosed:
-                    pass
-            self.handle_instance_failure(dead)
+            self._fail_instance(dst, hung=isinstance(e, TR.RpcTimeout),
+                                t_obs=t_obs)
             return None
         shipped = payload["kv"]["nbytes"]   # delta, or the full re-ship
         delta_bytes = shipped if staged is not None else 0
@@ -617,35 +780,149 @@ class Orchestrator:
         return self.migrate_requests_overlapped(idx, dst)
 
     # ------------------------------------------------------ crash recovery
-    def handle_instance_failure(self, idx: int) -> List[Request]:
-        """A remote instance died (transport EOF): re-queue replayable
-        clones of every stream it held — queued AND mid-decode — on the
-        surviving instances. Counter-based sampling keys make the
-        replays token-identical to the lost continuations, so the
-        failure costs recompute, never output: the zero-drop invariant
-        survives worker loss. Idempotent: one death can surface from
-        several in-flight operations (a step, several migration
-        tickets); only the FIRST observation replays — a duplicate
-        replay would decode the same streams twice. Returns the
-        replayed requests."""
+    def handle_instance_failure(self, idx: int, reason: str = "dead",
+                                t_obs: Optional[float] = None,
+                                ) -> List[Request]:
+        """A remote instance failed (transport EOF, or quarantined
+        hung): re-queue replayable clones of every stream it held —
+        queued AND mid-decode — on the surviving instances.
+        Counter-based sampling keys make the replays token-identical to
+        the lost continuations, so the failure costs recompute, never
+        output: the zero-drop invariant survives worker loss.
+        Idempotent: one death can surface from several in-flight
+        operations (a step, several migration tickets); only the FIRST
+        observation replays — a duplicate replay would decode the same
+        streams twice. Schedules a supervised respawn when a policy is
+        armed and the instance is respawnable. Returns the replayed
+        requests."""
         if idx in self._recovered:
             return []
         self._recovered.add(idx)
+        self._grace.discard(idx)
+        now = time.monotonic()
+        # wall from when this peer's failure became OBSERVABLE (the
+        # failing call's issue time, or the control fan-out for a step
+        # classification) — the "hung peer detected within 2x deadline"
+        # evidence
+        ref = t_obs if t_obs is not None else self._fanout_t
+        detect = max(0.0, now - ref) if ref else 0.0
+        self.faults.detect_latencies.append(detect)
         h = self.instances[idx]
         replay = h.inflight_requests()
         try:
             h.close()
         except TR.TransportError:
             pass
-        survivors = self._alive()
-        assert survivors, "every instance died: nothing to recover onto"
         for req in replay:
-            j = self._route(survivors)
-            self._home[req.rid] = j
-            self.instances[j].submit(req)
-        self.recoveries.append({"instance": idx,
+            placed = False
+            while not placed:
+                survivors = self._alive()
+                assert survivors, \
+                    "every instance died: nothing to recover onto"
+                j = self._route(survivors)
+                t_sub = time.monotonic()
+                try:
+                    self.instances[j].submit(req)
+                except (TR.TransportClosed, TR.RpcTimeout) as e:
+                    # the chosen survivor failed DURING recovery. Its
+                    # mirror already holds the clone (mirror-first
+                    # submit), so failing it replays this stream — and
+                    # everything else it held — onto the next survivor.
+                    self._fail_instance(
+                        j, hung=isinstance(e, TR.RpcTimeout),
+                        t_obs=t_sub)
+                    placed = True
+                    continue
+                self._home[req.rid] = j
+                placed = True
+        self.recoveries.append({"instance": idx, "reason": reason,
+                                "detect_s": detect,
                                 "rids": sorted(r.rid for r in replay)})
+        self._schedule_respawn(idx, now)
         return replay
+
+    # -------------------------------------------------- supervised respawn
+    def _schedule_respawn(self, idx: int, now: float):
+        """Arm the supervisor for a failed instance: record the flap,
+        then set the next bring-up attempt at a capped exponential
+        backoff. No-op without a policy, for non-respawnable handles
+        (attached servers belong to another host), and for evicted
+        instances."""
+        pol = self.respawn_policy
+        h = self.instances[idx]
+        if (pol is None or not getattr(h, "respawnable", False)
+                or idx in self._evicted):
+            return
+        st = self._respawn.setdefault(
+            idx, {"failures": deque(), "attempts": 0, "due": None,
+                  "t_fail": now})
+        st["t_fail"] = now
+        self._record_flap(idx, st, now)
+        if idx in self._evicted:
+            return
+        delay = min(pol.backoff_base * (2 ** st["attempts"]),
+                    pol.backoff_cap)
+        st["due"] = now + delay
+
+    def _record_flap(self, idx: int, st: dict, now: float):
+        """Flap-detector circuit breaker: ``max_failures`` failures of
+        the same instance inside ``window_s`` evict it permanently."""
+        pol = self.respawn_policy
+        fails = st["failures"]
+        fails.append(now)
+        while fails and now - fails[0] > pol.window_s:
+            fails.popleft()
+        if len(fails) >= pol.max_failures:
+            self._evicted.add(idx)
+            self.faults.evictions += 1
+            st["due"] = None
+            self.respawn_log.append({
+                "instance": idx, "event": "evicted",
+                "failures_in_window": len(fails)})
+
+    def _tick_respawns(self):
+        """Run due respawns (called at the top of every ``step()`` —
+        the supervisor never blocks the serving loop waiting out a
+        backoff). A successful bring-up swaps the fresh handle in
+        place: same index, same Device in the controller's cluster
+        view, empty pool/queue — the controller re-admits it the same
+        way it admits any vacant instance. A failed bring-up counts as
+        another flap and re-arms with doubled backoff."""
+        if not self._respawn:
+            return
+        pol = self.respawn_policy
+        for idx, st in self._respawn.items():
+            if (st["due"] is None or idx in self._evicted
+                    or time.monotonic() < st["due"]):
+                continue
+            st["due"] = None
+            st["attempts"] += 1
+            old = self.instances[idx]
+            try:
+                fresh = old.respawn(start_timeout=pol.start_timeout)
+            except Exception:  # noqa: BLE001 — ANY bring-up failure flaps
+                now = time.monotonic()
+                self._record_flap(idx, st, now)
+                if idx not in self._evicted:
+                    st["due"] = now + min(
+                        pol.backoff_base * (2 ** st["attempts"]),
+                        pol.backoff_cap)
+                continue
+            if self.rpc_deadline is not None:
+                # cold-start grace (see __init__): arm the deadline only
+                # after the replica's first completed ACTIVE step
+                fresh.set_rpc_deadline(None)
+                self._grace.add(idx)
+            self.instances[idx] = fresh
+            self.telemetry[idx] = fresh.telemetry
+            self._preempt_seen[idx] = 0
+            self._recovered.discard(idx)   # re-admitted: may fail anew
+            self.faults.respawns += 1
+            st["attempts"] = 0
+            self.respawn_log.append({
+                "instance": idx, "event": "respawned",
+                "label": getattr(fresh, "peer_label", None),
+                "downtime_s": time.monotonic() - st["t_fail"]})
 
     # -------------------------------------------------------------- summary
     def stats(self) -> Dict:
@@ -669,6 +946,9 @@ class Orchestrator:
             "controller_log": list(self.controller.log),
             "plan_p": list(self.plan.p),
             "control_plane": self.control_plane_stats(),
+            "faults": dict(self.faults.as_dict(),
+                           injected=FLT.injected_total()),
+            "respawn_log": list(self.respawn_log),
         }
 
     def control_plane_stats(self) -> Dict:

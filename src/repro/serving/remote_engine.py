@@ -146,6 +146,15 @@ class EngineServer:
     def ping(self):
         return "pong"
 
+    def heartbeat(self):
+        """The hung-vs-dead probe payload: cheap, never touches the
+        device — a worker stalled in a long device op still answers
+        once the in-order queue reaches it, a blackholed one never
+        does. Returns enough identity for the orchestrator to log."""
+        return {"clock": self.engine.clock,
+                "queue_len": len(self.engine.queue),
+                "pid": os.getpid()}
+
     def crash(self):
         """Test-only fault injection: die without a word — the parent's
         next recv sees EOF, exactly like a kill -9 / OOM kill."""
@@ -156,7 +165,7 @@ class EngineServer:
             "submit", "step", "apply_plan", "requeue_front", "push_queue",
             "drain_queue", "info", "pause_request", "resume_request",
             "snapshot_request", "prepare_resume", "commit_resume",
-            "abort_resume", "ping", "crash")}
+            "abort_resume", "ping", "heartbeat", "crash")}
 
 
 def _serve_connection(conn: "TR.Connection"):
@@ -227,12 +236,25 @@ class EngineProxy(InstanceHandle):
 
     def __init__(self, cfg, params, *, start_timeout: float = 120.0,
                  endpoint: Optional[str] = None, spawn: bool = True,
-                 adopt_process=None, **engine_kw):
+                 adopt_process=None, peer_label: Optional[str] = None,
+                 **engine_kw):
         self.telemetry = EngineTelemetry()
         self._inflight: Dict[int, Request] = {}   # rid -> pristine clone
         self._dead = False
         self.process = None
         self.endpoint = endpoint
+        self.peer_label = peer_label
+        # everything respawn() needs to bring up a fresh replacement
+        self._spec = {"cfg": cfg, "params": params,
+                      "start_timeout": start_timeout,
+                      "engine_kw": dict(engine_kw)}
+        self._listen_mode = endpoint is not None
+        # supervised respawn can recreate any server WE own a process
+        # for (spawned either way, or adopted from the pod launcher);
+        # an attached server on another host is that host's to restart
+        self._respawnable = (endpoint is None or spawn
+                             or adopt_process is not None)
+        self._generation = 0
         try:
             self._start(cfg, params, start_timeout, endpoint, spawn,
                         adopt_process, engine_kw)
@@ -297,6 +319,7 @@ class EngineProxy(InstanceHandle):
 
             self.conn = TR.connect(endpoint, timeout=start_timeout,
                                    abort=child_died)
+        self.conn.peer_label = self.peer_label
         self.rpc = TR.Rpc(self.conn)
         host_params = jax.tree_util.tree_map(np.asarray, params)
         self.conn.send({"cfg": cfg, "params": host_params,
@@ -446,6 +469,83 @@ class EngineProxy(InstanceHandle):
         self._unwrap(self._call("abort_resume", slot))
 
     # --------------------------------------------------------- liveness
+    def set_rpc_deadline(self, seconds: Optional[float]):
+        """Stamp a per-call deadline on every future RPC (None
+        disables). A missed deadline raises ``RpcTimeout`` / resolves
+        to a ``hung`` poll entry instead of stalling the caller."""
+        self.rpc.call_timeout = seconds
+
+    def probe(self, timeout: float = 1.0) -> str:
+        """Classify this peer after a missed deadline:
+
+        * ``"dead"``  — process exited or transport closed;
+        * ``"alive"`` — heartbeat answered within ``timeout``: the peer
+          is merely slow, or the lost call's request frame was dropped
+          (in-order serving means a heartbeat answered after a call was
+          sent proves that call either already replied or never
+          arrived);
+        * ``"hung"``  — socket open, heartbeat unanswered: blackholed /
+          half-open / livelocked — quarantine territory.
+        """
+        if self._dead:
+            return "dead"
+        if self.process is not None and not self.process.is_alive():
+            self._dead = True
+            return "dead"
+        try:
+            self.rpc.call_timed("heartbeat", timeout)
+            return "alive"
+        except TR.RpcTimeout:
+            return "hung"
+        except TR.TransportClosed:
+            self._dead = True
+            return "dead"
+
+    def quarantine(self):
+        """Take a hung peer out of the plane for good: close the
+        transport (a merely-slow server's dispatch loop exits on the
+        EOF) and hard-kill an owned process — a quarantined worker must
+        never act again, so the idempotent replay of its inflight
+        mirror cannot race a zombie's late writes. Safe on an
+        already-dead peer (idempotent)."""
+        self._dead = True
+        self.conn.close()
+        if self.process is not None and self.process.is_alive():
+            self.process.kill()
+            self.process.join(timeout=10)
+
+    @property
+    def respawnable(self) -> bool:
+        return self._respawnable
+
+    def respawn(self, start_timeout: Optional[float] = None
+                ) -> "EngineProxy":
+        """Bring up a FRESH engine server from this proxy's init spec —
+        the supervised-restart half of the failure domain. Listening
+        servers respawn at the same endpoint; dial-back children get a
+        new rendezvous. The replacement starts empty (queue and KV are
+        gone with the process — the orchestrator already replayed the
+        inflight mirror elsewhere) and carries an incarnation-suffixed
+        peer label (``w1`` -> ``w1~r1``) so a static FaultPlan never
+        re-targets the replacement of a peer it already faulted."""
+        if not self._respawnable:
+            raise RuntimeError(
+                f"instance at {self.endpoint!r} is attach-only: its "
+                "server is not ours to restart")
+        spec = self._spec
+        base = (self.peer_label.split("~", 1)[0]
+                if self.peer_label else None)
+        label = f"{base}~r{self._generation + 1}" if base else None
+        fresh = EngineProxy(
+            spec["cfg"], spec["params"],
+            start_timeout=(spec["start_timeout"] if start_timeout is None
+                           else start_timeout),
+            endpoint=self.endpoint if self._listen_mode else None,
+            spawn=True, peer_label=label, **spec["engine_kw"])
+        fresh._generation = self._generation + 1
+        fresh.set_rpc_deadline(self.rpc.call_timeout)
+        return fresh
+
     def alive(self) -> bool:
         if self._dead:
             return False

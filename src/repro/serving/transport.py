@@ -60,6 +60,7 @@ from __future__ import annotations
 import io
 import os
 import pickle
+import select
 import selectors
 import socket
 import struct
@@ -81,6 +82,14 @@ TAG_PICKLE = b"P"
 MAX_FRAME = 1 << 31  # sanity bound: a corrupt length prefix fails loudly
 _RECV_CHUNK = 1 << 16
 
+# receive-side allocation bound (satellite: a corrupt/hostile length
+# prefix must fail the connection, not attempt a multi-GB bytearray).
+# Block-migration payloads on real configs run to tens of MB; 256 MB
+# leaves an order of magnitude of headroom while still refusing the
+# 2^31-ish garbage a misframed stream produces.
+DEFAULT_MAX_RECV_FRAME = int(os.environ.get("REPRO_MAX_FRAME_BYTES",
+                                            str(1 << 28)))
+
 
 class TransportError(RuntimeError):
     """Framing/codec violation on a live connection."""
@@ -90,6 +99,40 @@ class TransportClosed(TransportError):
     """Peer hung up (EOF mid-frame, reset, or closed socket) — the
     signal the orchestrator's crash recovery (re-queue + replay) keys
     on, identical for AF_UNIX children and TCP peers on other hosts."""
+
+
+class RpcTimeout(TransportError):
+    """A reply missed its per-call deadline with the socket still OPEN —
+    the *hung* signal (GC pause, network blackhole, livelocked worker),
+    deliberately distinct from ``TransportClosed`` (*dead*): a hung peer
+    may still hold authoritative request state, so the orchestrator
+    probes (heartbeat) and quarantines before replaying, instead of
+    assuming the process is gone."""
+
+
+class FrameTooLarge(TransportError):
+    """Incoming length prefix exceeds the receive bound. The stream is
+    unsynchronized at this point (the oversized frame was never read),
+    so the connection is failed — callers must not retry on it."""
+
+
+# Fault-injection seam (serving/faults.py): when installed, the hook is
+# consulted on every labeled ``Connection.send`` and may delay the frame
+# or swallow it entirely (drop / partition / half-open). ``None`` —
+# the default — costs one attribute check per send. Connections without
+# a ``peer_label`` (servers' child-side sockets, unlabeled tests) are
+# never faulted, so a REPRO_FAULTS plan inherited through the
+# environment by worker processes is inert there.
+_FAULT_HOOK: Optional[Callable[["Connection"], bool]] = None
+
+
+def set_fault_hook(hook: Optional[Callable[["Connection"], bool]]):
+    """Install (or clear, with ``None``) the send-side fault hook. The
+    hook receives the ``Connection`` and returns False to swallow the
+    frame. Installed by ``repro.serving.faults`` — not called directly
+    by user code."""
+    global _FAULT_HOOK
+    _FAULT_HOOK = hook
 
 
 class RemoteError(RuntimeError):
@@ -247,6 +290,18 @@ _RETRYABLE_CONNECT = (ConnectionRefusedError, ConnectionResetError,
                       ConnectionAbortedError, FileNotFoundError,
                       socket.timeout)
 
+BACKOFF_CAP = 0.5  # connect-retry ceiling: a booting server binds fast
+
+
+def backoff_delays(initial: float = 0.02, cap: float = BACKOFF_CAP):
+    """The connect-retry schedule: monotone doubling from ``initial``,
+    capped at ``cap``. Extracted so tests can assert the schedule
+    itself (capped, monotone) independently of wall time."""
+    delay = initial
+    while True:
+        yield delay
+        delay = min(delay * 2, cap)
+
 
 def connect(address: str, timeout: float = 60.0,
             retry_interval: float = 0.02,
@@ -264,7 +319,7 @@ def connect(address: str, timeout: float = 60.0,
     kind, target = parse_endpoint(address)
     family = socket.AF_INET if kind == "tcp" else socket.AF_UNIX
     deadline = time.monotonic() + timeout
-    delay = retry_interval
+    delays = backoff_delays(retry_interval)
     while True:
         sock = socket.socket(family, socket.SOCK_STREAM)
         sock.settimeout(max(0.05, deadline - time.monotonic()))
@@ -277,12 +332,12 @@ def connect(address: str, timeout: float = 60.0,
             if reason:
                 raise TransportError(
                     f"connect to {address} aborted: {reason}") from e
+            delay = next(delays)
             if time.monotonic() + delay >= deadline:
                 raise TransportError(
                     f"connect to {address} failed within {timeout:.1f}s: "
                     f"{e}") from e
             time.sleep(delay)
-            delay = min(delay * 2, 0.5)
         except OSError as e:
             sock.close()
             raise TransportError(
@@ -305,13 +360,20 @@ class Connection:
     read blocking) — buffered bytes never wake ``select``, so the poll
     must drain them explicitly before sleeping."""
 
-    def __init__(self, sock: socket.socket):
+    def __init__(self, sock: socket.socket,
+                 max_frame: Optional[int] = None):
         self._sock = sock
         self._rxbuf = bytearray()
         self.tx_frames = 0
         self.rx_frames = 0
         self.tx_bytes = 0
         self.rx_bytes = 0
+        # identity for the fault-injection seam: None (the default)
+        # means "never fault this connection"
+        self.peer_label: Optional[str] = None
+        self.max_frame = (DEFAULT_MAX_RECV_FRAME if max_frame is None
+                          else max_frame)
+        self.last_rx = time.monotonic()
 
     def fileno(self) -> int:
         return self._sock.fileno()
@@ -319,10 +381,22 @@ class Connection:
     def has_buffered(self) -> bool:
         return bool(self._rxbuf)
 
+    def wait_readable(self, timeout: float) -> bool:
+        """True once bytes are available (buffered or kernel-side),
+        False if ``timeout`` elapses first. The deadline clock of
+        ``Rpc._wait`` sleeps here instead of in a blocking recv."""
+        if self._rxbuf:
+            return True
+        readable, _, _ = select.select([self._sock], [], [],
+                                       max(0.0, timeout))
+        return bool(readable)
+
     def send(self, obj: Any):
         frame = encode(obj)
         if len(frame) >= MAX_FRAME:
             raise TransportError(f"frame too large: {len(frame)} bytes")
+        if _FAULT_HOOK is not None and not _FAULT_HOOK(self):
+            return  # injected loss: the frame never reaches the wire
         try:
             self._sock.sendall(_LEN.pack(len(frame)) + frame)
         except (BrokenPipeError, ConnectionResetError, OSError) as e:
@@ -341,6 +415,7 @@ class Connection:
                     f"peer closed mid-frame (wanted {n} bytes, "
                     f"got {len(self._rxbuf)})")
             self._rxbuf += chunk
+            self.last_rx = time.monotonic()
 
     def _read_exact(self, n: int) -> bytes:
         self._fill(n)
@@ -352,6 +427,15 @@ class Connection:
         (length,) = _LEN.unpack(self._read_exact(_LEN.size))
         if not 0 < length < MAX_FRAME:
             raise TransportError(f"corrupt frame length {length}")
+        if length > self.max_frame:
+            # checked BEFORE any allocation; the stream is now
+            # unsynchronized (we never consumed the frame), so fail the
+            # connection rather than let a retry read garbage
+            self.close()
+            raise FrameTooLarge(
+                f"incoming frame of {length} bytes exceeds the "
+                f"{self.max_frame}-byte receive bound (corrupt length "
+                "prefix or hostile peer); connection failed")
         frame = self._read_exact(length)
         self.rx_frames += 1
         self.rx_bytes += length + _LEN.size
@@ -373,24 +457,35 @@ def socketpair() -> tuple:
 # -------------------------------------------------------------------- rpc
 class Pending:
     """Handle for a pipelined ``call_async``; ``wait()`` blocks until the
-    matching reply arrives (draining any earlier pipelined replies)."""
+    matching reply arrives (draining any earlier pipelined replies).
+    ``deadline`` (a ``time.monotonic`` instant, or None) bounds the wait:
+    past it, ``wait()`` raises ``RpcTimeout`` and ``drain_pendings``
+    resolves the entry to ``("hung", ...)``."""
 
-    def __init__(self, rpc: "Rpc", call_id: int):
+    def __init__(self, rpc: "Rpc", call_id: int,
+                 deadline: Optional[float] = None):
         self._rpc = rpc
         self.call_id = call_id
+        self.deadline = deadline
 
     def ready(self) -> bool:
         return self.call_id in self._rpc._replies
 
     def wait(self) -> Any:
-        return self._rpc._wait(self.call_id)
+        return self._rpc._wait(self.call_id, deadline=self.deadline)
 
 
 class Rpc:
-    """Client side: request/reply (+ pipelining) over a Connection."""
+    """Client side: request/reply (+ pipelining) over a Connection.
 
-    def __init__(self, conn: Connection):
+    ``call_timeout`` (seconds, None = unbounded) stamps a monotonic
+    deadline onto every ``Pending`` this client issues — the per-call
+    deadline clock the orchestrator's hung-peer detection keys on."""
+
+    def __init__(self, conn: Connection,
+                 call_timeout: Optional[float] = None):
         self.conn = conn
+        self.call_timeout = call_timeout
         self._next_id = 0
         self._replies: Dict[int, Any] = {}
 
@@ -398,10 +493,19 @@ class Rpc:
         self._next_id += 1
         cid = self._next_id
         self.conn.send({"id": cid, "op": op, "args": list(args), "kw": kw})
-        return Pending(self, cid)
+        deadline = (None if self.call_timeout is None
+                    else time.monotonic() + self.call_timeout)
+        return Pending(self, cid, deadline=deadline)
 
     def call(self, op: str, *args, **kw) -> Any:
         return self.call_async(op, *args, **kw).wait()
+
+    def call_timed(self, op: str, timeout: float, *args, **kw) -> Any:
+        """One call with an explicit deadline, regardless of
+        ``call_timeout`` — the heartbeat probe's entry point."""
+        pending = self.call_async(op, *args, **kw)
+        pending.deadline = time.monotonic() + timeout
+        return pending.wait()
 
     def _pump_one(self):
         """Receive exactly one reply frame into the reply buffer."""
@@ -418,8 +522,17 @@ class Rpc:
                               reply.get("error", "remote failure"))
         return reply.get("result")
 
-    def _wait(self, call_id: int) -> Any:
+    def _wait(self, call_id: int,
+              deadline: Optional[float] = None) -> Any:
         while call_id not in self._replies:
+            if deadline is not None:
+                budget = deadline - time.monotonic()
+                if budget <= 0:
+                    raise RpcTimeout(
+                        f"call {call_id} ({self.conn.peer_label or 'peer'})"
+                        " missed its deadline with the socket still open")
+                if not self.conn.wait_readable(budget):
+                    continue  # re-check the clock, then raise
             self._pump_one()
         return self._take(call_id)
 
@@ -440,12 +553,22 @@ def drain_pendings(pendings: List[Any],
         ("ok",     result)            reply arrived, handler succeeded
         ("error",  RemoteError)       reply arrived, handler raised
         ("closed", TransportClosed)   the peer died before replying
+        ("hung",   RpcTimeout)        per-call deadline passed, socket
+                                      still open — the peer may be
+                                      stalled, partitioned, or half-open
 
     A dead peer resolves ALL of its outstanding entries to ``closed``
     without disturbing other peers' entries — the caller folds crash
     detection into the same poll that collects results. Wall time is
     bounded by the slowest peer (replies are consumed as they land),
     not the sum of round trips.
+
+    A ``Pending`` carrying a deadline (``Rpc.call_timeout``) that
+    expires mid-drain resolves to ``("hung", RpcTimeout)`` — only that
+    entry: the connection stays registered for its other pendings, and
+    healthy peers are untouched. This is what keeps ONE blackholed
+    worker from stalling the whole control tick: the poll's sleep is
+    clipped to the earliest outstanding deadline.
 
     ``timeout`` bounds the wait for NEW data only: once a frame has
     started arriving, its remaining bytes are read with a blocking
@@ -491,6 +614,34 @@ def drain_pendings(pendings: List[Any],
             items = settle(rpc, items)
         return items
 
+    def expire(now):
+        """Resolve pendings whose per-call deadline has passed to
+        ``hung`` — without disturbing the rest of their group."""
+        for key in list(groups):
+            rpc, items = groups[key]
+            still = []
+            for idx, p in items:
+                if p.deadline is not None and now >= p.deadline:
+                    results[idx] = ("hung", RpcTimeout(
+                        f"call {p.call_id} "
+                        f"({rpc.conn.peer_label or 'peer'}) missed its "
+                        "deadline with the socket still open"))
+                else:
+                    still.append((idx, p))
+            if len(still) != len(items):
+                groups[key][1] = still
+                if not still:
+                    sel.unregister(rpc.conn)
+                    del groups[key]
+
+    def earliest_deadline():
+        out = None
+        for _, items in groups.values():
+            for _, p in items:
+                if p.deadline is not None:
+                    out = p.deadline if out is None else min(out, p.deadline)
+        return out
+
     sel = selectors.DefaultSelector()
     try:
         for key in list(groups):
@@ -505,8 +656,16 @@ def drain_pendings(pendings: List[Any],
         deadline = (None if timeout is None
                     else time.monotonic() + timeout)
         while groups:
-            budget = (None if deadline is None
-                      else max(0.0, deadline - time.monotonic()))
+            now = time.monotonic()
+            expire(now)
+            if not groups:
+                break
+            wake = deadline
+            call_dl = earliest_deadline()
+            if call_dl is not None:
+                wake = call_dl if wake is None else min(wake, call_dl)
+            budget = (None if wake is None
+                      else max(0.0, wake - now))
             events = sel.select(budget)
             if not events:
                 if deadline is not None and time.monotonic() >= deadline:
@@ -564,6 +723,21 @@ def serve(conn: Connection, dispatch: Dict[str, Callable],
             conn.send(reply)
         except TransportClosed:
             return
+
+
+def _install_env_faults():
+    """``REPRO_FAULTS=<plan.json>``: auto-install a serialized FaultPlan
+    so chaos runs are reproducible from the environment alone (the CLI,
+    the benchmarks, and CI all pick it up without code changes). Worker
+    processes inherit the variable but hold only unlabeled connections,
+    so the plan is inert in them."""
+    path = os.environ.get("REPRO_FAULTS")
+    if path:
+        from repro.serving import faults
+        faults.install_from_file(path)
+
+
+_install_env_faults()
 
 
 def _np_roundtrip_selftest():  # pragma: no cover - debugging aid

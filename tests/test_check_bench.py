@@ -76,5 +76,6 @@ def test_registry_covers_every_emitting_bench():
     # here — this list is the reminder to extend REQUIRED_KEYS when a
     # new bench starts emitting
     assert set(REQUIRED_KEYS) == {
-        "BENCH_distributed.json", "BENCH_module_scaling.json",
-        "BENCH_paged_engine.json", "BENCH_prefix_sharing.json"}
+        "BENCH_chaos.json", "BENCH_distributed.json",
+        "BENCH_module_scaling.json", "BENCH_paged_engine.json",
+        "BENCH_prefix_sharing.json"}

@@ -1,0 +1,159 @@
+"""Deterministic fault injection (serving/faults.py), tier-1: seeded
+plan determinism, JSON round-trips, the ``REPRO_FAULTS`` environment
+hook, and injector semantics against REAL framed connections — drops,
+windows and half-opens are frames that never reach the wire, asserted
+by reading the wire. Unlabeled connections (what worker child processes
+hold) must never be faulted, and uninstall must restore a clean
+transport."""
+import threading
+import time
+
+import pytest
+
+from repro.serving import faults as FLT
+from repro.serving import transport as TR
+
+
+@pytest.fixture(autouse=True)
+def _clean_hook():
+    """No test may leak an installed injector into the rest of the
+    suite (the hook is process-global)."""
+    yield
+    FLT.uninstall()
+
+
+# ---------------------------------------------------------------- plans
+def test_seeded_plan_is_deterministic_and_has_the_chaos_mix():
+    peers = ["w1", "w2", "w3"]
+    p1 = FLT.FaultPlan.seeded(7, peers)
+    p2 = FLT.FaultPlan.seeded(7, peers)
+    assert p1.to_json() == p2.to_json()
+    assert FLT.FaultPlan.seeded(8, peers).to_json() != p1.to_json()
+    kinds = [e.kind for e in p1.events]
+    assert kinds.count("kill") == 1
+    assert kinds.count("half_open") == 1
+    assert kinds.count("partition") == 1
+    assert kinds.count("delay") == 4 * len(peers)
+    # roles are distinct peers when there are >= 3
+    roles = {e.peer for e in p1.events if e.kind != "delay"}
+    assert len(roles) == 3
+
+
+def test_plan_json_roundtrip_via_file(tmp_path):
+    plan = FLT.FaultPlan.seeded(3, ["w1", "w2"])
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    back = FLT.FaultPlan.load(path)
+    assert back.seed == 3
+    assert back.to_json() == plan.to_json()
+
+
+def test_unknown_fault_kind_rejected():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FLT.FaultEvent(peer="w1", kind="explode")
+
+
+def test_env_hook_installs_a_serialized_plan(tmp_path, monkeypatch):
+    plan = FLT.FaultPlan.seeded(1, ["w1"])
+    path = str(tmp_path / "plan.json")
+    plan.save(path)
+    monkeypatch.setenv("REPRO_FAULTS", path)
+    TR._install_env_faults()     # what transport import runs
+    inj = FLT.active()
+    assert inj is not None
+    assert inj.plan.to_json() == plan.to_json()
+
+
+# ------------------------------------------------------------- injector
+def test_drop_and_partition_swallow_exactly_the_scheduled_frames():
+    a, b = TR.socketpair()
+    a.peer_label = "w1"
+    inj = FLT.FaultInjector()
+    inj.arm("w1", "drop", at_op=1)
+    inj.arm("w1", "partition", at_op=3, span=2)
+    FLT.install(inj)
+    for i in range(6):
+        a.send({"op": i})
+    # op 1 dropped, ops 3-4 partitioned: only 0, 2, 5 reach the wire
+    assert [b.recv()["op"] for _ in range(3)] == [0, 2, 5]
+    assert inj.injected["drop"] == 1
+    assert inj.injected["partition"] == 2
+    assert inj.ops_sent("w1") == 6
+    assert FLT.injected_total() == 3
+
+
+def test_half_open_blackholes_everything_from_at_op():
+    a, b = TR.socketpair()
+    a.peer_label = "w2"
+    inj = FLT.install(FLT.FaultPlan(events=[
+        FLT.FaultEvent(peer="w2", kind="half_open", at_op=2)]))
+    for i in range(5):
+        a.send({"op": i})
+    assert [b.recv()["op"] for _ in range(2)] == [0, 1]
+    assert inj.injected["half_open"] == 3
+    # the socket is OPEN the whole time: this is deadline territory,
+    # never TransportClosed
+    assert a.tx_frames == 2
+
+
+def test_delay_holds_the_frame_but_delivers_it():
+    a, b = TR.socketpair()
+    a.peer_label = "w1"
+    inj = FLT.install(FLT.FaultPlan(events=[
+        FLT.FaultEvent(peer="w1", kind="delay", at_op=0, delay_s=0.05)]))
+    got = {}
+
+    def reader():
+        got["msg"] = b.recv()
+
+    t = threading.Thread(target=reader, daemon=True)
+    t.start()
+    t0 = time.perf_counter()
+    a.send({"x": 1})
+    assert time.perf_counter() - t0 >= 0.04
+    t.join(timeout=5)
+    assert got["msg"] == {"x": 1}
+    assert inj.injected["delay"] == 1
+
+
+def test_unlabeled_connections_are_never_faulted():
+    a, b = TR.socketpair()          # peer_label stays None
+    inj = FLT.install(FLT.FaultPlan(events=[
+        FLT.FaultEvent(peer="w1", kind="half_open", at_op=0)]))
+    a.send({"x": 1})
+    assert b.recv() == {"x": 1}
+    assert inj.total_injected() == 0
+
+
+def test_uninstall_restores_a_clean_transport():
+    a, b = TR.socketpair()
+    a.peer_label = "w1"
+    FLT.install(FLT.FaultPlan(events=[
+        FLT.FaultEvent(peer="w1", kind="half_open", at_op=0)]))
+    a.send({"x": 1})                # swallowed
+    FLT.uninstall()
+    a.send({"x": 2})                # delivered: hook is gone
+    assert b.recv() == {"x": 2}
+    assert FLT.active() is None
+    assert FLT.injected_total() == 0
+
+
+def test_kills_are_step_keyed_and_consumed_once():
+    inj = FLT.FaultInjector(FLT.FaultPlan(events=[
+        FLT.FaultEvent(peer="w1", kind="kill", at_step=3),
+        FLT.FaultEvent(peer="w2", kind="kill", at_step=3)]))
+    assert inj.kills_due(2) == []
+    assert sorted(inj.kills_due(3)) == ["w1", "w2"]
+    assert inj.kills_due(3) == []   # consumed
+    assert inj.injected["kill"] == 2
+
+
+def test_arm_without_at_op_targets_the_very_next_send():
+    a, b = TR.socketpair()
+    a.peer_label = "w1"
+    inj = FLT.install(FLT.FaultPlan())
+    a.send({"op": 0})
+    inj.arm("w1", "drop")           # next send (op 1) is the target
+    a.send({"op": 1})
+    a.send({"op": 2})
+    assert [b.recv()["op"] for _ in range(2)] == [0, 2]

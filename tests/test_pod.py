@@ -72,3 +72,118 @@ def test_show_cli_prints_expanded_endpoints(tmp_path, capsys):
     assert "tcp://127.0.0.1:7101  (spawn)" in out
     assert "tcp://127.0.0.1:7102  (spawn)" in out
     assert "tcp://10.0.0.7:7201  (attach)" in out
+
+
+# ---------------------------------------------------- bring-up deadline
+class _SlowProxy:
+    """EngineProxy stand-in whose bring-up costs 0.15s of wall time —
+    enough to walk a pod deadline past its budget without any real
+    engine server."""
+    instances = []
+
+    def __init__(self, cfg, params, *, endpoint, spawn, adopt_process,
+                 start_timeout, peer_label, **kw):
+        import time
+        time.sleep(0.15)
+        self.endpoint = endpoint
+        self.peer_label = peer_label
+        self.process = adopt_process
+        self.start_timeout = start_timeout
+        self.closed = False
+        _SlowProxy.instances.append(self)
+
+    def close(self):
+        self.closed = True
+
+
+class _FakeProc:
+    """Records the lifecycle the reaper must drive (every instance ever
+    constructed lands in ``_all`` so the reap test can find unadopted
+    children)."""
+    _all = []
+
+    def __init__(self, target=None, args=(), daemon=True):
+        self.started = self.killed = self.joined = False
+        _FakeProc._all.append(self)
+
+    def start(self):
+        self.started = True
+
+    def is_alive(self):
+        return self.started and not self.killed
+
+    def kill(self):
+        self.killed = True
+
+    def join(self, timeout=None):
+        self.joined = True
+
+
+class _FakeCtx:
+    Process = _FakeProc
+
+
+@pytest.fixture(autouse=True)
+def _reset_fakes():
+    _SlowProxy.instances = []
+    _FakeProc._all = []
+    yield
+    _SlowProxy.instances = []
+    _FakeProc._all = []
+
+
+def test_pod_timeout_bounds_total_bring_up(monkeypatch):
+    """Satellite: ``pod_timeout`` is a TOTAL wall deadline — one slow
+    endpoint after another must fail the pod once the budget is gone,
+    and every handle brought up before the failure is closed."""
+    from repro.launch.pod import launch_pod
+    from repro.serving import transport as TR
+    monkeypatch.setattr("repro.serving.remote_engine.EngineProxy",
+                        _SlowProxy)
+    nodes = [Node(host="127.0.0.1", port=7101, capacity=4, spawn=False)]
+    with pytest.raises(TR.TransportError, match="deadline"):
+        launch_pod(None, None, nodes, pod_timeout=0.25)
+    assert 0 < len(_SlowProxy.instances) < 4
+    assert all(h.closed for h in _SlowProxy.instances)
+
+
+def test_pod_timeout_budget_shrinks_but_generous_deadline_succeeds(
+        monkeypatch):
+    from repro.launch.pod import launch_pod
+    monkeypatch.setattr("repro.serving.remote_engine.EngineProxy",
+                        _SlowProxy)
+    nodes = [Node(host="127.0.0.1", port=7101, capacity=4, spawn=False)]
+    handles = launch_pod(None, None, nodes, pod_timeout=30.0)
+    assert [h.peer_label for h in handles] == ["w0", "w1", "w2", "w3"]
+    # each endpoint's budget is what REMAINS of the pod deadline, so it
+    # strictly shrinks along the bring-up order
+    budgets = [h.start_timeout for h in handles]
+    assert all(b > a for a, b in zip(budgets[1:], budgets))
+    assert not any(h.closed for h in handles)
+
+
+def test_pod_deadline_reaps_spawned_but_unadopted_children(monkeypatch):
+    """Satellite: when the pod deadline fires mid-launch, server
+    processes that were spawned in phase one but never adopted by a
+    proxy must be killed and joined — no orphans."""
+    monkeypatch.setattr("repro.serving.remote_engine.EngineProxy",
+                        _SlowProxy)
+    monkeypatch.setattr("multiprocessing.get_context",
+                        lambda method: _FakeCtx)
+    from repro.launch.pod import launch_pod
+    from repro.serving import transport as TR
+    nodes = [Node(host="127.0.0.1", port=7101, capacity=4, spawn=True)]
+    with pytest.raises(TR.TransportError, match="deadline"):
+        launch_pod(None, None, nodes, pod_timeout=0.25)
+    # phase one spawned one child per endpoint before any dialing
+    assert len(_FakeProc._all) == 4
+    assert all(p.started for p in _FakeProc._all)
+    # adopted children belong to their (now-closed) handles and are
+    # left alone; the unadopted rest must be killed AND joined
+    adopted = {id(h.process) for h in _SlowProxy.instances}
+    assert adopted and len(adopted) < 4
+    reaped = [p for p in _FakeProc._all if id(p) not in adopted]
+    assert reaped, "expected at least one unadopted child"
+    assert all(p.killed and p.joined for p in reaped)
+    assert not any(p.killed for p in _FakeProc._all
+                   if id(p) in adopted)

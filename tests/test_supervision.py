@@ -1,0 +1,328 @@
+"""Failure-domain supervision (orchestrator + DESIGN.md §9), tier-1:
+supervised respawn of a killed worker with capped backoff and
+re-admission, the flap-detector circuit breaker, and hung-peer
+classification — a half-open peer (real framed transport, a server
+that reads and never replies) must be detected within ~2x the RPC
+deadline, quarantined, and have its streams replayed token-identically
+on a survivor. Uses in-process stand-ins so everything runs at tier-1
+speed; the real multi-process plane is soaked by tests/test_chaos.py
+and benchmarks/chaos_bench.py."""
+import dataclasses
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import transport as TR
+from repro.serving.engine import Engine, Request
+from repro.serving.instance import InstanceHandle, LocalInstance, pristine
+from repro.serving.instrument import EngineTelemetry
+from repro.serving.orchestrator import Orchestrator, RespawnPolicy
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    return cfg, params
+
+
+def _mk_engine(cfg, params):
+    return Engine(cfg, params, max_batch=2, max_len=64,
+                  cache_kind="paged", block_size=8, n_blocks=32)
+
+
+def _reference(cfg, params, requests):
+    """Failure-free oracle: each request solo on a fresh paged engine."""
+    out = {}
+    for r in requests:
+        e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+        e.submit(pristine(r))
+        out[r.rid] = e.run_until_done()[0].generated
+    return out
+
+
+def _reqs(n, max_new=8):
+    return [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                    max_new_tokens=max_new, temperature=0.7, top_k=8,
+                    seed=7 + i) for i in range(n)]
+
+
+def _pump(orch, until, deadline_s=10.0):
+    """Step the orchestrator until ``until()`` or the wall deadline —
+    the supervisor only acts at step() boundaries, never in between."""
+    t0 = time.monotonic()
+    while not until() and time.monotonic() - t0 < deadline_s:
+        time.sleep(0.02)
+        orch.step()
+    assert until(), "condition not reached within the pump deadline"
+
+
+class RespawnableLocal(LocalInstance):
+    """A LocalInstance that behaves like a worker process the
+    orchestrator owns: it can die (``kill``), mirrors its inflight work
+    for replay, and a factory stands in for the two-phase bring-up."""
+    respawnable = True
+
+    def __init__(self, engine, label, factory):
+        super().__init__(engine)
+        self.peer_label = label
+        self._factory = factory
+        self._dead = False
+
+    def alive(self):
+        return not self._dead
+
+    def kill(self):
+        self._dead = True
+
+    def mark_dead(self):
+        self._dead = True
+
+    def inflight_requests(self):
+        return ([pristine(r) for r in self.engine.queue]
+                + [pristine(r) for r in self.engine.active.values()])
+
+    def respawn(self, start_timeout=None):
+        base, _, gen = self.peer_label.partition("~r")
+        return self._factory(f"{base}~r{int(gen or 0) + 1}")
+
+
+def _respawnable(cfg, params, label="w1"):
+    def factory(new_label):
+        return RespawnableLocal(_mk_engine(cfg, params), new_label,
+                                factory)
+    return RespawnableLocal(_mk_engine(cfg, params), label, factory)
+
+
+# ------------------------------------------------------------- respawn
+def test_killed_worker_is_replayed_respawned_and_readmitted(tiny):
+    cfg, params = tiny
+    local = LocalInstance(_mk_engine(cfg, params))
+    worker = _respawnable(cfg, params)
+    policy = RespawnPolicy(backoff_base=0.05, backoff_cap=0.1,
+                           max_failures=3, window_s=10.0,
+                           start_timeout=5.0)
+    orch = Orchestrator(cfg, params, handles=[local, worker],
+                        telemetry_every=10_000, respawn_policy=policy)
+    reqs = _reqs(2)
+    ref = _reference(cfg, params, reqs)
+    # pin one stream on each instance, then kill the worker mid-flight
+    for i, r in enumerate(reqs):
+        orch.instances[i].submit(r)
+        orch._home[r.rid] = i
+    worker.kill()
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    # zero drop, token-identical: the kill cost recompute, never output
+    assert sorted(done) == [0, 1]
+    assert done == ref
+    assert orch.recoveries[0]["reason"] == "dead"
+    assert orch.recoveries[0]["rids"] == [1]
+    # the supervisor swapped in a fresh incarnation under the same index
+    _pump(orch, lambda: orch.faults.respawns == 1)
+    fresh = orch.instances[1]
+    assert fresh is not worker
+    assert fresh.peer_label == "w1~r1"
+    spawned = [e for e in orch.respawn_log if e["event"] == "respawned"]
+    assert [e["label"] for e in spawned] == ["w1~r1"]
+    assert spawned[0]["downtime_s"] >= policy.backoff_base
+    # re-admission is real: the replacement serves a pinned stream
+    post = Request(rid=10, prompt=np.arange(2, 12, dtype=np.int32),
+                   max_new_tokens=6, temperature=0.7, top_k=8, seed=17)
+    post_ref = _reference(cfg, params, [post])
+    orch.instances[1].submit(post)
+    orch._home[10] = 1
+    out = {r.rid: r.generated for r in orch.run_until_done()}
+    assert out[10] == post_ref[10]
+    assert orch.dropped == 0
+
+
+def test_flap_detector_evicts_a_crash_looping_worker(tiny):
+    cfg, params = tiny
+    local = LocalInstance(_mk_engine(cfg, params))
+    worker = _respawnable(cfg, params)
+    policy = RespawnPolicy(backoff_base=0.05, backoff_cap=0.1,
+                           max_failures=2, window_s=10.0,
+                           start_timeout=5.0)
+    orch = Orchestrator(cfg, params, handles=[local, worker],
+                        telemetry_every=10_000, respawn_policy=policy)
+    worker.kill()
+    _pump(orch, lambda: orch.faults.respawns == 1)
+    # the replacement crashes too: second failure inside the window
+    orch.instances[1].kill()
+    _pump(orch, lambda: orch.faults.evictions == 1)
+    assert 1 in orch._evicted
+    assert [e["event"] for e in orch.respawn_log] == ["respawned",
+                                                      "evicted"]
+    # the breaker is permanent: no third bring-up, ever
+    for _ in range(5):
+        time.sleep(0.03)
+        orch.step()
+    assert orch.faults.respawns == 1
+    assert orch.snapshot() is not None   # plane still reports
+
+
+# ------------------------------------------------- hung-peer detection
+class SilentRemote(InstanceHandle):
+    """A half-open peer over REAL framed transport: the server thread
+    reads every request and never replies, so the socket stays open and
+    the only detection signal is the per-call deadline."""
+    respawnable = False
+
+    def __init__(self):
+        self.telemetry = EngineTelemetry()
+        self._conn, server_side = TR.socketpair()
+        self._rpc = TR.Rpc(self._conn)
+        self._mirror = []
+        self._dead = False
+        self.quarantined = False
+        self._thread = threading.Thread(target=self._blackhole,
+                                        args=(server_side,), daemon=True)
+        self._thread.start()
+
+    @staticmethod
+    def _blackhole(conn):
+        try:
+            while True:
+                conn.recv()
+        except TR.TransportClosed:
+            pass
+
+    # ------------------------------------------------------- liveness
+    def alive(self):
+        return not self._dead
+
+    def mark_dead(self):
+        self._dead = True
+
+    def set_rpc_deadline(self, seconds):
+        self._rpc.call_timeout = seconds
+
+    def probe(self, timeout=1.0):
+        try:
+            self._rpc.call_timed("heartbeat", timeout)
+            return "alive"
+        except TR.RpcTimeout:
+            return "hung"
+        except TR.TransportClosed:
+            return "dead"
+
+    def quarantine(self):
+        self.quarantined = True
+        self._dead = True
+        self._conn.close()
+
+    def close(self):
+        self._dead = True
+        self._conn.close()
+
+    # ---------------------------------------------------- serving ops
+    def submit(self, req):
+        self._mirror.append(pristine(req))   # mirror-first, then wire
+        self._rpc.call_async("submit")       # vanishes into the hole
+
+    def step_async(self):
+        return self._rpc.call_async("step")
+
+    def inflight_requests(self):
+        return [pristine(r) for r in self._mirror]
+
+    # --------------------------------------- gauges the router reads
+    def queue_len(self):
+        return len(self._mirror)
+
+    def active_rids(self):
+        return {}
+
+    def free_blocks(self):
+        return 1 << 30   # most vacant: the router MUST pick this peer
+
+    def blocks_in_use(self):
+        return 0
+
+    def clock(self):
+        return 0.0
+
+    def preempt_count(self):
+        return 0
+
+    def prefix_stats(self):
+        return {"queries": 0, "hits": 0, "blocks_saved_now": 0}
+
+
+def test_hung_peer_is_classified_quarantined_and_replayed(tiny):
+    """The tentpole's detection bound: a blackholed peer resolves to a
+    ``hung`` poll entry within one deadline, the heartbeat probe spends
+    at most one more confirming, and the stream it held finishes
+    token-identically on the survivor."""
+    cfg, params = tiny
+    deadline = 0.25
+    local = LocalInstance(_mk_engine(cfg, params))
+    silent = SilentRemote()
+    orch = Orchestrator(cfg, params, handles=[local, silent],
+                        telemetry_every=10_000, rpc_deadline=deadline)
+    req = Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                  max_new_tokens=6, temperature=0.7, top_k=8, seed=9)
+    ref = _reference(cfg, params, [req])
+    orch.submit(req)
+    assert orch._home[0] == 1          # vacancy routing chose the peer
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref                 # replayed, token-identical
+    assert silent.quarantined
+    assert orch.faults.rpc_timeouts == 1
+    assert orch.faults.quarantines == 1
+    (rec,) = orch.recoveries
+    assert rec["reason"] == "hung"
+    assert rec["rids"] == [0]
+    # drain expiry <= 1x deadline, probe <= 1x, plus scheduling slack
+    assert rec["detect_s"] <= 2 * deadline + 0.3
+    snap = orch.snapshot()
+    assert snap.rpc_timeouts == 1 and snap.quarantines == 1
+
+
+def test_probe_salvages_a_merely_slow_peer(tiny):
+    """An ``alive`` probe verdict after a missed step deadline must NOT
+    quarantine: in-order serving means the stale step reply (arrived
+    while probing) is salvaged, or the step request frame was lost and
+    skipping the tick is safe. Here the reply lands late."""
+    cfg, params = tiny
+
+    class SlowRemote(SilentRemote):
+        @staticmethod
+        def _blackhole(conn):
+            # a real server, just slower than the deadline ONCE
+            first = True
+            try:
+                while True:
+                    msg = conn.recv()
+                    if first:
+                        time.sleep(0.35)
+                        first = False
+                    conn.send({"id": msg["id"], "ok": True,
+                               "result": []})
+            except TR.TransportClosed:
+                pass
+
+        def finish_step(self, reply):
+            return reply
+
+    local = LocalInstance(_mk_engine(cfg, params))
+    slow = SlowRemote()
+    orch = Orchestrator(cfg, params, handles=[local, slow],
+                        telemetry_every=10_000, rpc_deadline=0.2)
+    # nothing queued on the slow peer: one idle tick trips the deadline
+    req = dataclasses.replace(_reqs(1)[0], rid=3)
+    orch.instances[0].submit(req)
+    orch._home[3] = 0
+    orch.step()
+    assert orch.faults.rpc_timeouts == 1
+    assert orch.faults.quarantines == 0    # alive verdict: no sever
+    assert slow.alive() and not slow.quarantined
+    assert orch.recoveries == []

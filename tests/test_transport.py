@@ -337,3 +337,105 @@ def test_drain_pendings_resolves_error_replies_per_entry():
     assert results[1] == ("ok", 3)
     rpc.call("shutdown")
     t.join(timeout=5)
+
+
+# ------------------------------------------- deadlines & receive bounds
+def _silent_server(conn):
+    """Accepts requests forever, never replies — a half-open peer: the
+    socket stays open, so the only detection signal is the deadline."""
+    try:
+        while True:
+            conn.recv()
+    except TR.TransportClosed:
+        pass
+
+
+def test_rpc_timeout_is_hung_not_dead_and_connection_survives():
+    """A missed deadline raises RpcTimeout (socket still OPEN) — and
+    because the server processes in order, the connection is still
+    usable afterwards: the late reply lands in the stale-reply stash
+    and the next call matches its own id."""
+    a, b = TR.socketpair()
+    t = threading.Thread(target=_sleepy_server, args=(b, 0.5), daemon=True)
+    t.start()
+    rpc = TR.Rpc(a)
+    t0 = time.perf_counter()
+    with pytest.raises(TR.RpcTimeout, match="socket still open"):
+        rpc.call_timed("work", 0.15, "late")
+    assert time.perf_counter() - t0 < 0.4
+    # the peer was merely slow, not dead: the SAME connection completes
+    # the next call (pumping the stale reply for call 1 on the way)
+    assert rpc.call("work", "next") == "next"
+    rpc.call("shutdown")
+    t.join(timeout=5)
+
+
+def test_drain_pendings_hung_entry_does_not_stall_healthy_peers():
+    """One blackholed worker must cost its own deadline, not the tick:
+    the poll clips its sleep to the earliest outstanding deadline and
+    resolves that entry to ("hung", RpcTimeout) while the healthy
+    peer's reply still lands as ("ok", ...)."""
+    a, b = TR.socketpair()
+    c, d = TR.socketpair()
+    threads = [threading.Thread(target=_silent_server, args=(b,),
+                                daemon=True),
+               threading.Thread(target=_sleepy_server, args=(d, 0.05),
+                                daemon=True)]
+    for t in threads:
+        t.start()
+    hung_rpc = TR.Rpc(a, call_timeout=0.3)
+    ok_rpc = TR.Rpc(c)
+    t0 = time.perf_counter()
+    results = TR.drain_pendings([hung_rpc.call_async("work", "void"),
+                                 ok_rpc.call_async("work", 7)])
+    wall = time.perf_counter() - t0
+    assert results[0][0] == "hung"
+    assert isinstance(results[0][1], TR.RpcTimeout)
+    assert results[1] == ("ok", 7)
+    # bounded by the deadline, not by any longer poll default
+    assert 0.25 <= wall < 1.0
+    a.close()                      # unblocks the silent server's recv
+    ok_rpc.call("shutdown")
+    for t in threads:
+        t.join(timeout=5)
+
+
+def test_frame_too_large_is_typed_and_fails_the_connection():
+    """Satellite: the receive path bounds frame size BEFORE allocating.
+    An oversized length prefix surfaces as FrameTooLarge (a typed
+    TransportError) and the connection is failed — the stream is
+    unsynchronized, so further reads must not see garbage."""
+    a, b = TR.socketpair()
+    b.max_frame = 4096
+    a.send({"small": 1})
+    assert b.recv() == {"small": 1}          # under the bound: fine
+    # big enough to break the 4 KiB bound, small enough to fit the
+    # kernel socket buffer (this thread is both sender and receiver)
+    a.send({"big": np.zeros(2048, np.float32)})
+    with pytest.raises(TR.FrameTooLarge, match="receive bound"):
+        b.recv()
+    assert issubclass(TR.FrameTooLarge, TR.TransportError)
+    with pytest.raises(TR.TransportError):   # connection is dead now
+        b.recv()
+    a.close()
+
+
+def test_backoff_delays_monotone_and_capped():
+    gen = TR.backoff_delays(0.02, cap=0.5)
+    seq = [next(gen) for _ in range(10)]
+    assert seq[0] == 0.02
+    assert all(b >= a for a, b in zip(seq, seq[1:]))
+    assert max(seq) == 0.5
+    assert seq[-1] == 0.5          # stays pinned at the cap
+
+
+def test_connect_backoff_schedule_gives_up(monkeypatch):
+    """Satellite: the retry schedule itself — doubling from 20ms, and
+    giving up once the NEXT delay would overshoot the deadline. Sleeps
+    are recorded instead of slept, so the asserted schedule is exact."""
+    slept = []
+    monkeypatch.setattr(TR.time, "sleep", slept.append)
+    endpoint = TR.free_tcp_endpoint()  # nobody will ever listen here
+    with pytest.raises(TR.TransportError, match="failed within"):
+        TR.connect(endpoint, timeout=0.4)
+    assert slept == [0.02, 0.04, 0.08, 0.16, 0.32]
