@@ -53,6 +53,7 @@ REQUIRED_KEYS = {
         "dense",
         "paged",
         "paged_over_dense_speedup",
+        "mixed_trace",
     ],
     "BENCH_prefix_sharing.json": [
         "config",

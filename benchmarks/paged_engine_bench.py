@@ -36,11 +36,20 @@ OUT_PATH = os.path.join(os.path.dirname(__file__),
                         "BENCH_paged_engine.json")
 
 
-def _make_engine(cfg, params, kind):
+MIXED_LONG_PROMPT = pick(256, 96)   # the prompt that stalls phase decodes
+MIXED_SHORT_NEW = pick(48, 16)      # short streams measured for ITL
+MIXED_N_LONG = pick(3, 1)
+# 80 leaves a pow2-exact 64-token chunk after charging the 3 decode
+# slots — the chunk bucket pads nothing, so chunked compute ~= monolithic
+TOKEN_BUDGET = pick(80, 48)
+
+
+def _make_engine(cfg, params, kind, **extra):
     from repro.serving.engine import Engine
     kw = {"cache_kind": kind}
     if kind == "paged":
         kw.update(block_size=BLOCK_SIZE, n_blocks=POOL_BLOCKS)
+    kw.update(extra)
     return Engine(cfg, params, max_batch=MAX_BATCH, max_len=MAX_LEN,
                   dtype="float32", **kw)
 
@@ -55,15 +64,15 @@ def _workload(cfg, n, seed=0):
             for i in range(n)]
 
 
-def _bench_kind(cfg, params, kind):
+def _bench_kind(cfg, params, kind, **engine_kw):
     from repro.serving.instrument import count_host_syncs
     # warm: compile prefill + decode step shapes on a throwaway engine
-    warm = _make_engine(cfg, params, kind)
+    warm = _make_engine(cfg, params, kind, **engine_kw)
     for r in _workload(cfg, MAX_BATCH, seed=1):
         warm.submit(r)
     warm.run_until_done()
 
-    eng = _make_engine(cfg, params, kind)
+    eng = _make_engine(cfg, params, kind, **engine_kw)
     for r in _workload(cfg, N_REQUESTS):
         eng.submit(r)
     t0 = time.perf_counter()
@@ -72,7 +81,7 @@ def _bench_kind(cfg, params, kind):
     toks = sum(len(r.generated) for r in done)
 
     # steady-state sync census on a fresh, fully-occupied engine
-    eng2 = _make_engine(cfg, params, kind)
+    eng2 = _make_engine(cfg, params, kind, **engine_kw)
     for r in _workload(cfg, MAX_BATCH, seed=2):
         eng2.submit(r)
     eng2.step()  # admission
@@ -93,15 +102,114 @@ def _bench_kind(cfg, params, kind):
             "kv_cache_bytes": int(kv_bytes)}
 
 
+# ------------------------------------------------- mixed-trace experiment
+# The workload continuous batching is judged on (ISSUE 7 acceptance):
+# short decode streams in flight while long prompts arrive. The phase
+# scheduler prefills a long prompt monolithically — every decode stream
+# stalls for the whole prefill, spiking inter-token latency; the
+# token-budget scheduler slices it into chunks that ride along with the
+# decodes, bounding the spike to one chunk's step time.
+
+
+def _mixed_requests(cfg, seed=0):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    shorts = [Request(rid=i,
+                      prompt=rng.integers(2, cfg.vocab_size,
+                                          size=PROMPT_LEN)
+                      .astype(np.int32),
+                      max_new_tokens=MIXED_SHORT_NEW)
+              for i in range(MAX_BATCH - 1)]
+    longs = [Request(rid=100 + i,
+                     prompt=rng.integers(2, cfg.vocab_size,
+                                         size=MIXED_LONG_PROMPT)
+                     .astype(np.int32),
+                     max_new_tokens=8)
+             for i in range(MIXED_N_LONG)]
+    return shorts, longs
+
+
+def _run_mixed(cfg, params, scheduler, seed=0):
+    """Drive the mixed trace under one scheduler; ITL samples are the
+    wall gaps between consecutive tokens of the SHORT streams (the
+    in-flight decodes a long prefill can stall)."""
+    eng = _make_engine(cfg, params, "paged", scheduler=scheduler,
+                       token_budget=TOKEN_BUDGET)
+    shorts, longs = _mixed_requests(cfg, seed=seed)
+    for r in shorts:
+        eng.submit(r)
+    eng.step()                       # shorts prefill + start decoding
+    for r in longs:                  # long prompts land mid-stream
+        eng.submit(r)
+    itl, last_emit, last_len = [], {}, {r.rid: len(r.generated)
+                                        for r in shorts}
+    t0 = time.perf_counter()
+    steps = 0
+    while (eng.queue or eng.active or eng.prefilling) and steps < 10_000:
+        eng.step()
+        steps += 1
+        now = time.perf_counter()
+        for r in shorts:
+            if len(r.generated) > last_len[r.rid]:
+                if r.rid in last_emit:
+                    itl.append(now - last_emit[r.rid])
+                last_emit[r.rid] = now
+                last_len[r.rid] = len(r.generated)
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in shorts + longs)
+    out = {r.rid: list(r.generated) for r in shorts + longs}
+    itl = np.asarray(itl)
+    return {"tokens": toks, "wall_s": wall, "steps": steps,
+            "tokens_per_s": toks / wall,
+            "itl_p50_s": float(np.quantile(itl, 0.50)),
+            "itl_p99_s": float(np.quantile(itl, 0.99))}, out
+
+
+def _bench_mixed(cfg, params):
+    reps = pick(3, 1)   # median over reps: wall-time noise ~10% per run
+    res, outs = {}, {}
+    for sched in ("phase", "token_budget"):
+        _run_mixed(cfg, params, sched, seed=7)   # warm: compile shapes
+        runs = []
+        for _ in range(reps):
+            r, outs[sched] = _run_mixed(cfg, params, sched, seed=7)
+            runs.append(r)
+        res[sched] = {k: (float(np.median([r[k] for r in runs]))
+                          if isinstance(runs[0][k], float) else runs[0][k])
+                      for k in runs[0]}
+    cb, ph = res["token_budget"], res["phase"]
+    return {
+        "config": {"long_prompt": MIXED_LONG_PROMPT,
+                   "n_long": MIXED_N_LONG,
+                   "short_prompt": PROMPT_LEN,
+                   "short_new_tokens": MIXED_SHORT_NEW,
+                   "n_short": MAX_BATCH - 1,
+                   "token_budget": TOKEN_BUDGET},
+        "phase": ph, "token_budget": cb,
+        # acceptance ratios: ITL <= 0.5x, tok/s >= 1.0x, identical tokens
+        "itl_p99_ratio": cb["itl_p99_s"] / ph["itl_p99_s"],
+        "tokens_per_s_ratio": cb["tokens_per_s"] / ph["tokens_per_s"],
+        "token_identical": outs["token_budget"] == outs["phase"],
+    }
+
+
 def run():
     from repro.configs import get_config
     from repro.models import transformer as T
     cfg = get_config("tinyllama-1.1b").reduced()
     params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
 
+    # "paged" runs the default scheduler (token_budget); "paged_phase"
+    # pins the old wave/step alternation — the uniform-workload ratio of
+    # the two is the <= 5% regression criterion on the easy trace
     res = {kind: _bench_kind(cfg, params, kind)
            for kind in ("dense", "paged")}
+    res["paged_phase"] = _bench_kind(cfg, params, "paged",
+                                     scheduler="phase")
     speedup = res["paged"]["tokens_per_s"] / res["dense"]["tokens_per_s"]
+    uniform_ratio = (res["paged"]["tokens_per_s"]
+                     / res["paged_phase"]["tokens_per_s"])
+    mixed = _bench_mixed(cfg, params)
     report = {
         "smoke": is_smoke(),
         "config": {"arch": "tinyllama-1.1b (reduced)", "max_len": MAX_LEN,
@@ -110,7 +218,10 @@ def run():
                    "block_size": BLOCK_SIZE, "pool_blocks": POOL_BLOCKS,
                    "mean_context": PROMPT_LEN + MAX_NEW // 2},
         "dense": res["dense"], "paged": res["paged"],
+        "paged_phase": res["paged_phase"],
         "paged_over_dense_speedup": speedup,
+        "uniform_tokens_per_s_ratio": uniform_ratio,
+        "mixed_trace": mixed,
     }
     with open(OUT_PATH, "w") as f:
         json.dump(report, f, indent=2)
@@ -124,6 +235,12 @@ def run():
                      f"tok/s={r['tokens_per_s']:.1f} "
                      f"syncs/step={r['syncs_per_step']:.1f}"))
     rows.append(("paged_vs_dense", 0.0, f"speedup={speedup:.2f}x"))
+    rows.append(("mixed_trace_cb_vs_phase",
+                 mixed["token_budget"]["itl_p99_s"] * 1e6,
+                 f"itl_p99_ratio={mixed['itl_p99_ratio']:.2f}x "
+                 f"tok/s_ratio={mixed['tokens_per_s_ratio']:.2f}x "
+                 f"identical={mixed['token_identical']} "
+                 f"uniform_ratio={uniform_ratio:.2f}x"))
     return rows
 
 

@@ -32,6 +32,14 @@ class MetricsSnapshot:
     # of that vacancy copy-on-write sharing is buying) ---
     prefix_hit_rate: float = 0.0    # hit fraction of prompt-block lookups
     blocks_saved: int = 0           # physical blocks saved NOW by sharing
+    # --- continuous batching (token-budget scheduler, DESIGN.md §10):
+    # how full the per-step token budget packs, and how long requests
+    # wait for their first token — the signals SLO-aware admission and
+    # the controller's scale decisions act on ---
+    budget_utilization: float = 0.0  # mean packed/budget over the window
+    ttft_p50: float = 0.0            # engine-clock time-to-first-token
+    ttft_p95: float = 0.0
+    queue_delay_p95: float = 0.0     # submit -> first prefill chunk
     # --- failure domain (DESIGN.md §9): cumulative plane-wide counters,
     # all 0 outside chaos runs / real incidents ---
     faults_injected: int = 0        # transport faults the harness injected

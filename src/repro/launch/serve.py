@@ -77,6 +77,15 @@ def main(argv=None):
                          "(scale-down consolidation demo)")
     ap.add_argument("--cache", choices=["auto", "dense", "paged"],
                     default="auto")
+    ap.add_argument("--token-budget", type=int, default=128,
+                    help="per-step token budget for the continuous-"
+                         "batching scheduler (DESIGN.md §10): decode "
+                         "slots are charged first, the remainder admits "
+                         "prefill chunks; paged engines only")
+    ap.add_argument("--scheduler", choices=["token_budget", "phase"],
+                    default="token_budget",
+                    help="'phase' pins the legacy prefill-wave/decode-"
+                         "step alternation (paged engines only)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -113,11 +122,14 @@ def main(argv=None):
 
     from repro.serving.orchestrator import Orchestrator, RespawnPolicy
     policy = RespawnPolicy() if args.supervise else None
+    sched_kw = dict(scheduler=args.scheduler,
+                    token_budget=args.token_budget)
     if args.inventory:
         from repro.launch.pod import launch_pod, load_inventory
         nodes = load_inventory(args.inventory)
         handles = launch_pod(cfg, params, nodes,
-                             max_batch=args.max_batch, max_len=128)
+                             max_batch=args.max_batch, max_len=128,
+                             **sched_kw)
         n_instances = len(handles)
         orch = Orchestrator(cfg, params, handles=handles,
                             slo_latency=args.slo, telemetry_every=4,
@@ -133,7 +145,7 @@ def main(argv=None):
                             slo_latency=args.slo, telemetry_every=4,
                             remote=bool(args.workers),
                             rpc_deadline=args.rpc_deadline,
-                            respawn_policy=policy)
+                            respawn_policy=policy, **sched_kw)
         if args.workers:
             print(f"[serve] distributed plane: {args.workers} "
                   f"engine-server processes over RPC")
@@ -168,6 +180,9 @@ def main(argv=None):
           f"migrations={s['migrations']} "
           f"(overlapped={s['overlapped_migrations']}) "
           f"preemptions={s['preemptions']} recoveries={s['recoveries']}")
+    print(f"[serve] budget: utilization={s['budget_utilization']:.2f} "
+          f"ttft_p50={s['ttft_p50']:.1f} ttft_p95={s['ttft_p95']:.1f} "
+          f"queue_delay_p95={s['queue_delay_p95']:.1f}")
     print(f"[serve] prefix sharing: hit_rate={s['prefix_hit_rate']:.2f} "
           f"blocks_saved_now={s['blocks_saved_now']} "
           f"dedup_imports={s['dedup_imports']}")

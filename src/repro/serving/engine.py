@@ -1,12 +1,25 @@
 """Continuous-batching inference engine (real JAX execution).
 
 Iteration-level scheduling in the Orca/vLLM style, with PAGED KV as the
-primary decode path (``cache_kind="paged"``):
+primary decode path (``cache_kind="paged"``) and TOKEN-BUDGET continuous
+batching as the default step loop (DESIGN.md §10):
 
+* **Scheduling** is one budget-packed loop, not phases: every step,
+  ``serving.scheduler.TokenBudgetScheduler`` charges each active decode
+  slot one token, continues in-flight prefills oldest-first, and admits
+  fresh prompts with whatever budget is left — at most one partial,
+  block-aligned chunk per step. ``Request.prefill_pos`` is a first-class
+  cursor (always equal to ``pstate.lengths[slot]`` mid-prefill), so
+  preemption, migration and sliding-window reclamation compose with
+  chunking. ``scheduler="phase"`` pins the legacy prefill-wave/decode-
+  step alternation (identity baseline; forced for dense caches).
 * **Prefill** runs over a throwaway dense cache sized to the prompt's
-  POWER-OF-TWO length bucket, batching the whole bucket from the queue
-  into one forward call (per-row last-token gather picks each prompt's
-  real logits), then scatters each request's true-length K/V into the
+  POWER-OF-TWO length bucket — a whole prompt under the phase scheduler,
+  a budget-sliced chunk under the default one (a chunk continuation IS a
+  suffix prefill against the written span; both run the fused
+  ``_chunk_prefill_fn``: pool gather → splice → decode-mode extend →
+  suffix scatter, with per-row last-token gather picking each prompt's
+  real logits) — then scatters each request's true-length K/V into the
   shared block pool via ``paged_kv.write_tokens_batch``. PREFIX SHARING
   (on by default, ``prefix_sharing=``): an admission whose prompt opens
   with an already-cached full-block prefix ALIASES those blocks
@@ -68,6 +81,7 @@ from repro.models import transformer as T
 from repro.serving import kvcache as KV
 from repro.serving import paged_kv as PK
 from repro.serving import sampling as SMP
+from repro.serving import scheduler as SCH
 
 
 @dataclasses.dataclass
@@ -86,6 +100,13 @@ class Request:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     preemptions: int = 0
+    # chunked-prefill cursor: how many prefill tokens are already written
+    # into this request's KV (continuous batching slices long prompts
+    # across steps; the cursor is FIRST-CLASS state so a mid-prefill
+    # request can be preempted or even MIGRATED without replaying the
+    # chunks that already landed — it travels the wire with the Request)
+    prefill_pos: int = 0
+    prefill_start_time: Optional[float] = None   # first chunk admitted
 
     @property
     def done(self) -> bool:
@@ -97,6 +118,18 @@ def _pow2_at_least(n: int) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: Request holds arrays
+class _ChunkSpec:
+    """One prefill chunk ready for execution: ``n`` tokens starting at
+    ``req.prefill_pos`` in ``slot``. ``fresh`` marks a first chunk whose
+    admission must be rolled back (slot freed, request requeued) if the
+    chunk's block allocation fails — a continuation just retries."""
+    req: "Request"
+    slot: int
+    n: int
+    fresh: bool = False
 
 
 # --------------------------------------------------------------- jitted steps
@@ -128,6 +161,49 @@ def _extend_last_fn(params, tokens, positions, cache, last_idx, *, cfg,
     return T.forward(params, cfg, tokens, positions=positions,
                      mode="decode", cache=cache, window=window,
                      last_idx=last_idx)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "window", "cache_len", "dtype"),
+                   donate_argnums=(1, 2))
+def _chunk_prefill_fn(params, pool_k, pool_v, tbl, suffix, spos, pos,
+                      last_idx, bidx, oidx, *, cfg, window, cache_len,
+                      dtype):
+    """FUSED chunk/suffix prefill: pool context gather -> throwaway dense
+    cache splice -> decode-mode extension over the suffix bucket ->
+    suffix K/V scatter back into the (donated) pool — one executable per
+    power-of-two (group, context, suffix) bucket instead of ~15 eager
+    dispatches and four whole-buffer copies. This is what makes a chunk
+    step cost like a decode step on the host side, which is the whole
+    point of slicing prefills under the token budget (DESIGN.md §10)."""
+    L, _, KV, bs, hd = pool_k.shape
+    G, n_blk = tbl.shape
+    cb = n_blk * bs
+    ctx_k = pool_k[:, tbl].transpose(0, 1, 2, 4, 3, 5).reshape(
+        L, G, cb, KV, hd)
+    ctx_v = pool_v[:, tbl].transpose(0, 1, 2, 4, 3, 5).reshape(
+        L, G, cb, KV, hd)
+    cache = T.init_cache(cfg, G, cache_len, dtype)
+    kd = cache["layers"]["k"].dtype
+    cache["layers"]["k"] = cache["layers"]["k"].at[:, :, :cb].set(
+        ctx_k.astype(kd))
+    cache["layers"]["v"] = cache["layers"]["v"].at[:, :, :cb].set(
+        ctx_v.astype(kd))
+    cache["positions"] = pos
+    logits, cache, _ = T.forward(params, cfg, suffix, positions=spos,
+                                 mode="decode", cache=cache, window=window,
+                                 last_idx=last_idx)
+    idx = spos[None, :, :, None, None]
+    k_sfx = jnp.take_along_axis(cache["layers"]["k"], idx, axis=2)
+    v_sfx = jnp.take_along_axis(cache["layers"]["v"], idx, axis=2)
+    Sb = suffix.shape[1]
+    kf = k_sfx.reshape(L, G * Sb, KV, hd).transpose(1, 0, 2, 3)
+    vf = v_sfx.reshape(L, G * Sb, KV, hd).transpose(1, 0, 2, 3)
+    pool_k = pool_k.at[:, bidx, :, oidx].set(kf.astype(pool_k.dtype),
+                                             mode="drop")
+    pool_v = pool_v.at[:, bidx, :, oidx].set(vf.astype(pool_v.dtype),
+                                             mode="drop")
+    return logits, pool_k, pool_v
 
 
 def _dense_step_impl(params, cache, tokens, positions, temps, topks, seeds,
@@ -197,7 +273,8 @@ class Engine:
                  cache_kind: str = "dense", block_size: int = 16,
                  n_blocks: Optional[int] = None,
                  paged_attn_impl: str = "gather", interpret: bool = False,
-                 prefix_sharing: Optional[bool] = None):
+                 prefix_sharing: Optional[bool] = None,
+                 scheduler: Optional[str] = None, token_budget: int = 128):
         assert cache_kind in ("dense", "paged"), cache_kind
         self.cfg = cfg
         self.params = params
@@ -214,6 +291,11 @@ class Engine:
         self.prefill_chunk = prefill_chunk  # 0 = one-shot prefill
         self.cache_kind = cache_kind
         self.active: Dict[int, Request] = {}   # slot -> request
+        # slots whose prompt is only PARTIALLY written (chunked prefill
+        # under the token-budget scheduler): they hold blocks and an
+        # admission-order position but do not decode yet
+        self.prefilling: Dict[int, Request] = {}
+        self._prefill_matched: Dict[int, list] = {}  # slot -> prefix hit
         # slots holding a phase-1 migration import awaiting its delta
         # (commit_resume / abort_resume); excluded from admission
         self._staged: Dict[int, int] = {}      # slot -> rid
@@ -257,6 +339,24 @@ class Engine:
             self.cache = T.init_cache(cfg, max_batch, self.max_len, dtype)
             self.pstate = None
 
+        # scheduler: TOKEN-BUDGET continuous batching is the default
+        # paged path (one step loop packs decode tokens + bounded prefill
+        # chunks — long prompts never stall decodes); "phase" keeps the
+        # original prefill-wave/decode-step alternation as the parity
+        # oracle and the bench baseline. Dense engines are always phase
+        # (chunking targets the block pool's progressive allocation).
+        if scheduler is None:
+            scheduler = "token_budget" if cache_kind == "paged" else "phase"
+        assert scheduler in ("token_budget", "phase"), scheduler
+        if cache_kind != "paged":
+            scheduler = "phase"
+        self.scheduler_kind = scheduler
+        self.sched = (SCH.TokenBudgetScheduler(token_budget,
+                                               chunk_align=block_size)
+                      if scheduler == "token_budget" else None)
+        self.token_budget = token_budget if self.sched else 0
+        self.last_step_packed: Optional[int] = None  # telemetry, per step
+
         self._paged_impl = paged_attn_impl
         self._interpret = interpret
         # live module-scaling state (Engine.apply_plan)
@@ -298,7 +398,24 @@ class Engine:
 
     def _free_slots(self):
         return [s for s in range(self.max_batch)
-                if s not in self.active and s not in self._staged]
+                if s not in self.active and s not in self.prefilling
+                and s not in self._staged]
+
+    def slot_rids(self) -> Dict[int, int]:
+        """slot -> rid of every request holding a slot — decoding OR
+        mid-prefill. This is the enumeration migration and drain
+        operate on (a mid-prefill request is pausable/migratable)."""
+        out = {s: r.rid for s, r in self.active.items()}
+        out.update({s: r.rid for s, r in self.prefilling.items()})
+        return out
+
+    def prefill_total(self, req: Request) -> int:
+        """Tokens the cache must hold before the request can decode —
+        the scheduler's unit of prefill work (see _prefill_tokens)."""
+        n = len(req.prompt)
+        if req.generated:
+            n += len(req.generated) - 1
+        return n
 
     @staticmethod
     def _prefill_tokens(req: Request) -> np.ndarray:
@@ -346,6 +463,9 @@ class Engine:
 
     def _activate(self, req: Request, slot: int, length: int,
                   first_tok: Optional[int]):
+        req.prefill_pos = length
+        if req.prefill_start_time is None:
+            req.prefill_start_time = self.clock
         if first_tok is not None:
             req.generated.append(int(first_tok))
         if req.first_token_time is None:
@@ -357,13 +477,17 @@ class Engine:
                    and req.generated[-1] == req.eos_id)
         if hit_eos or len(req.generated) >= req.max_new_tokens:
             req.finish_time = self.clock
+            req.slot = None
             if self.cache_kind == "paged":
                 PK.free_slot(self.pstate, slot)
+            if slot in self._admit_order:   # was mid-prefill (chunked)
+                self._admit_order.remove(slot)
             self._admit_finished.append(req)
             return
         req.slot = slot
         self.active[slot] = req
-        self._admit_order.append(slot)
+        if slot not in self._admit_order:   # chunked slots already queued
+            self._admit_order.append(slot)
         if self.cache_kind == "dense":
             self._host_lengths[slot] = length
 
@@ -388,13 +512,35 @@ class Engine:
             self._activate(req, slot, len(toks), first)
 
     # ---------------------------------------------------------- paged admit
-    def _admit_paged(self):
+    def _admit_paged(self, wave: Optional[List[Request]] = None):
+        """Admit a prefill WAVE: whole prompts, one bucketed forward per
+        pow2 length group (misses) / (ctx, suffix) group (prefix hits).
+        Phase scheduling pops its own wave from the queue; the
+        token-budget scheduler passes the full grants it popped as
+        ``wave``. Returns the requests actually admitted (callers detect
+        backpressure requeues by comparing against the wave)."""
+        if wave is None:
+            # phase mode still drains mid-prefill slots first (a
+            # migrated-in chunked request must finish somewhere): grant
+            # each its full remainder
+            if self.prefilling:
+                self._run_chunks([
+                    _ChunkSpec(req, slot,
+                               self.prefill_total(req) - req.prefill_pos,
+                               fresh=False)
+                    for slot, req in sorted(self.prefilling.items())])
         free = self._free_slots()
-        if not free or not self.queue:
-            return
-        taken: List[Request] = []
-        while self.queue and len(taken) < len(free):
-            taken.append(self.queue.popleft())
+        if wave is None:
+            if not free or not self.queue:
+                return []
+            taken: List[Request] = []
+            while self.queue and len(taken) < len(free):
+                taken.append(self.queue.popleft())
+        else:
+            taken = list(wave)
+            if not taken:
+                return []
+            assert len(taken) <= len(free), (len(taken), len(free))
         bs = self.pstate.block_size
         ptoks = {id(r): self._prefill_tokens(r) for r in taken}
 
@@ -587,6 +733,7 @@ class Engine:
             for req in admitted:
                 if req.slot is not None:  # may have retired at admission
                     PK.free_out_of_window(self.pstate, req.slot, self.window)
+        return admitted
 
     def _prefill_shared_batch(self, slots: List[int], toks_list,
                               ctxs: List[int], cb: int, Sb: int,
@@ -607,18 +754,20 @@ class Engine:
         G = len(slots)
         n_real = G if n_real is None else n_real
         # dummy pad rows (duplicated slots past n_real) scatter nothing:
-        # their new-token count is forced to 0 below, which the batched
-        # pool write drops row-wise
+        # their new-token count is forced to 0 below, which the scatter
+        # plan drops row-wise
         n_news = [(len(t) - c) if i < n_real else 0
                   for i, (t, c) in enumerate(zip(toks_list, ctxs))]
-        cache_len = _pow2_at_least(cb + Sb)
+        # cb and Sb are already pow2-bucketed, so cb+Sb takes O(log^2)
+        # values — no need to round the throwaway cache up again (a late
+        # 256-ctx/64-chunk call attends over 320 keys, not 512)
+        cache_len = cb + Sb
         self._prefill_shapes.add((G, Sb))
-        rcache = T.init_cache(self.cfg, G, cache_len, self.dtype)
-        pk, pv = PK.gather_requests(self.pstate, slots, cb)
-        rcache["layers"]["k"] = rcache["layers"]["k"].at[:, :, :cb].set(
-            pk.astype(rcache["layers"]["k"].dtype))
-        rcache["layers"]["v"] = rcache["layers"]["v"].at[:, :, :cb].set(
-            pv.astype(rcache["layers"]["v"].dtype))
+        st = self.pstate
+        bs = st.block_size
+        n_blk = -(-cb // bs)
+        tbl = st.block_tables[np.asarray(slots, np.int64), :n_blk]
+        tbl = np.where(tbl >= 0, tbl, 0)   # holes gather garbage; masked
         pos = np.full((G, cache_len), int(T.BIG_POS), np.int32)
         suffix = np.zeros((G, Sb), np.int32)
         spos = np.zeros((G, Sb), np.int32)
@@ -627,36 +776,227 @@ class Engine:
             pos[i, :ctx] = np.arange(ctx)
             suffix[i, :n_new] = toks[ctx:ctx + n_new]
             spos[i] = np.arange(ctx, ctx + Sb)
-        rcache["positions"] = jnp.asarray(pos)
-        logits, rcache, _ = _extend_last_fn(
-            self.params, jnp.asarray(suffix), jnp.asarray(spos), rcache,
+        # host half of the pool append (advances lengths, stamps epoch);
+        # the device half rides inside the fused executable
+        bidx, oidx = PK.scatter_plan(st, slots, Sb, lengths=n_news)
+        logits, st.k, st.v = _chunk_prefill_fn(
+            self.params, st.k, st.v, jnp.asarray(tbl, jnp.int32),
+            jnp.asarray(suffix), jnp.asarray(spos), jnp.asarray(pos),
             jnp.asarray(np.asarray(n_news, np.int32) - 1),
-            cfg=self.cfg, window=self.window)
-        # each row's suffix K/V landed at cache slots [ctx_i, ctx_i+Sb):
-        # a per-row gather pulls them out for the batched pool scatter
-        # (write_tokens_batch drops the pad rows past each true n_new)
-        idx = jnp.asarray(spos)[None, :, :, None, None]
-        k_sfx = jnp.take_along_axis(rcache["layers"]["k"], idx, axis=2)
-        v_sfx = jnp.take_along_axis(rcache["layers"]["v"], idx, axis=2)
-        self.pstate = PK.write_tokens_batch(self.pstate, slots,
-                                            k_sfx, v_sfx, lengths=n_news)
+            jnp.asarray(bidx, jnp.int32), jnp.asarray(oidx, jnp.int32),
+            cfg=self.cfg, window=self.window, cache_len=cache_len,
+            dtype=self.dtype)
         return logits
 
     def _admit(self):
         if self.cache_kind == "paged":
-            self._admit_paged()
+            if self.sched is not None:
+                self._admit_budget()
+            else:
+                self._admit_paged()
         else:
             self._admit_dense()
+
+    # ------------------------------------- token-budget admission (CB)
+    def _admit_budget(self):
+        """One continuous-batching admission pass: ask the scheduler how
+        this step's token budget packs, then execute the grants — whole
+        prompts ride the existing bucketed wave machinery (prefix
+        matching, pow2 groups, backpressure requeue all intact), chunk
+        grants run through ``_run_chunks``. Decode tokens were charged
+        first inside ``plan``, so admission work is bounded and a long
+        prompt is sliced across steps instead of stalling the batch."""
+        plan = self.sched.plan(self)
+        self.last_step_packed = plan.packed
+        cont = [g for g in plan.grants if g.slot is not None]
+        chunks = [_ChunkSpec(g.req, g.slot, g.n_tokens) for g in cont]
+        wave: List[Request] = []
+        partial = None
+        for g in plan.grants:
+            if g.slot is not None:
+                continue
+            if g.final:
+                assert self.queue and self.queue[0] is g.req
+                wave.append(self.queue.popleft())
+            else:
+                partial = g         # stays at the queue head for now
+        requeued = False
+        if wave:
+            admitted = self._admit_paged(wave)
+            requeued = len(admitted) < len(wave)
+        if partial is not None and not requeued:
+            # pool pressure on the wave means the partial (younger) grant
+            # would only add pressure — leave it queued, FIFO intact
+            spec = self._begin_chunked(partial.req, partial.n_tokens)
+            if spec is not None:
+                chunks.append(spec)
+        ran = self._run_chunks(chunks) if chunks else 0
+        # forward-progress guard: nothing decoding, nothing admitted,
+        # every chunk blocked on the pool -> the prefilling slots are
+        # starving each other; preempt the youngest so the oldest can
+        # finish (never-fits rejection guarantees a lone prefill fits)
+        if (not self.active and not ran and not wave
+                and len(self.prefilling) > 1):
+            victims = [s for s in self._admit_order
+                       if s in self.prefilling]
+            if len(victims) > 1:
+                self._preempt(victims[-1])
+
+    def _begin_chunked(self, req: Request, n: int) -> Optional[_ChunkSpec]:
+        """Admit the QUEUE HEAD with a partial grant: claim a slot, run
+        the same never-fits rejection and prefix-cache lookup as the
+        wave path, and hand back the first chunk for execution. Prefix
+        hits advance the cursor for free (aliased context costs no
+        compute); allocation failures leave the request at the queue
+        head (backpressure). Returns None when nothing was admitted."""
+        assert self.queue and self.queue[0] is req
+        toks = self._prefill_tokens(req)
+        S = len(toks)
+        bs = self.pstate.block_size
+        width = self.pstate.block_tables.shape[1]
+        need = S // bs + 1
+        if self.window:
+            need -= min(max((S - self.window + 1) // bs, 0), need - 1)
+        if need > self.pstate.n_blocks or S // bs >= width:
+            self.queue.popleft()
+            req.finish_time = self.clock  # rejected: no output
+            raise PK.OutOfBlocks(
+                f"request rid={req.rid} needs {need} live blocks up to "
+                f"column {S // bs}; pool has {self.pstate.n_blocks}, "
+                f"table rows hold {width}")
+        free = self._free_slots()
+        if not free:
+            return None
+        slot = free[0]
+        matched = (PK.match_prefix(self.pstate, toks, record=False)
+                   if self.prefix_sharing and not self.window else [])
+        ctx = min(len(matched) * bs, S - 1)
+        if not (matched and ctx >= 1):
+            matched, ctx = [], 0
+        if matched:
+            PK.adopt_prefix(self.pstate, slot, matched, ctx)
+        self.queue.popleft()
+        req.slot = slot
+        req.prefill_pos = ctx
+        if req.prefill_start_time is None:
+            req.prefill_start_time = self.clock
+        self.prefilling[slot] = req
+        self._admit_order.append(slot)
+        self._prefill_matched[slot] = matched
+        return _ChunkSpec(req, slot, min(n, S - ctx), fresh=True)
+
+    def _run_chunks(self, specs: List[_ChunkSpec]) -> int:
+        """Execute prefill chunks: allocate each chunk's block columns
+        (progressive — only the columns these tokens land in), then run
+        the chunks BUCKETED exactly like the prefix-hit suffix path: a
+        chunk continuation over [cursor, cursor+n) IS a suffix prefill
+        against the already-written span, so both share
+        ``_prefill_shared_batch`` (context splice + decode-mode extend +
+        suffix scatter), grouped by (pow2 context, pow2 chunk) with the
+        group dim padded to pow2 — executable count stays
+        O(log max_len)^2, independent of chunk count. Final chunks
+        sample the first token and move the request into decode
+        rotation. Returns the number of chunks that actually ran."""
+        st = self.pstate
+        bs = st.block_size
+        ready: List[_ChunkSpec] = []
+        for sp in specs:
+            if self.prefilling.get(sp.slot) is not sp.req:
+                continue   # preempted by the decode-room pass: replays
+            start = sp.req.prefill_pos
+            assert int(st.lengths[sp.slot]) == start, \
+                (sp.slot, int(st.lengths[sp.slot]), start)
+            try:
+                PK.allocate(st, sp.slot, sp.n, window=self.window)
+                if self.prefix_sharing:
+                    # the chunk may write into an adopted (shared) tail
+                    # block: fork it first, copy-on-write
+                    PK.ensure_writable(st, sp.slot, start, sp.n)
+            except PK.OutOfBlocks:
+                if sp.fresh:
+                    # first chunk found no blocks: undo the admission so
+                    # the request waits in the QUEUE, not in a slot
+                    del self.prefilling[sp.slot]
+                    self._admit_order.remove(sp.slot)
+                    self._prefill_matched.pop(sp.slot, None)
+                    PK.free_slot(st, sp.slot)
+                    sp.req.slot = None
+                    sp.req.prefill_pos = 0
+                    self.queue.appendleft(sp.req)
+                continue                    # continuation retries next step
+            ready.append(sp)
+        if not ready:
+            return 0
+        # ONE group per step: every chunk shares a single (pow2 context,
+        # pow2 suffix) bucket — per-row true starts ride in the positions
+        # array, so mixing context lengths costs padded gather width, not
+        # extra executables or extra forwards
+        width_tokens = st.block_tables.shape[1] * bs
+        starts = [int(st.lengths[sp.slot]) for sp in ready]
+        cb = min(_pow2_at_least(max(max(starts), 1)), width_tokens)
+        Sb = _pow2_at_least(max(sp.n for sp in ready))
+        gsp = ready
+        Gb = _pow2_at_least(len(gsp))
+        padded = gsp + [gsp[-1]] * (Gb - len(gsp))
+        toks_list = [self._prefill_tokens(sp.req)[:sp.req.prefill_pos
+                                                  + sp.n]
+                     for sp in padded]
+        ctxs = [sp.req.prefill_pos for sp in padded]
+        logits = self._prefill_shared_batch(
+            [sp.slot for sp in padded], toks_list, ctxs, cb, Sb,
+            n_real=len(gsp))
+        finals = [sp for sp in gsp
+                  if sp.req.prefill_pos + sp.n
+                  >= self.prefill_total(sp.req)]
+        toks = None
+        if any(not sp.req.generated for sp in finals):
+            # one sampling sync per step, and ONLY when some member
+            # finished its prompt — intermediate chunks discard their
+            # logits without touching the host
+            toks = self._sample_batch(
+                logits, [sp.req for sp in padded])[:len(gsp)]
+        for i, sp in enumerate(gsp):
+            sp.req.prefill_pos += sp.n   # mirrors pstate.lengths
+            if sp in finals:
+                first = (None if sp.req.generated else int(toks[i]))
+                self._finish_prefill(sp.req, sp.slot, first)
+        if self.window:
+            for sp in gsp:
+                if sp.slot in self.prefilling \
+                        or sp.slot in self.active:
+                    PK.free_out_of_window(st, sp.slot, self.window)
+        return len(ready)
+
+    def _finish_prefill(self, req: Request, slot: int,
+                        first: Optional[int]):
+        """Last chunk landed: publish the finished prompt to the prefix
+        cache (never earlier — keys must not describe unwritten blocks),
+        count the lookup once per successful admission, and move the
+        request into decode rotation."""
+        del self.prefilling[slot]
+        matched = self._prefill_matched.pop(slot, [])
+        if self.prefix_sharing and not self.window:
+            toks = self._prefill_tokens(req)
+            PK.register_prefix(self.pstate, slot, toks)
+            PK.record_lookup(self.pstate, toks, matched)
+        self._activate(req, slot, req.prefill_pos, first)
 
     # ------------------------------------------------------------ preemption
     def _preempt(self, slot: int):
         """Return the request in ``slot`` to the queue head and free its
         blocks. Counter-based sampling keys make the resumed continuation
-        identical to the uninterrupted one."""
-        req = self.active.pop(slot)
+        identical to the uninterrupted one. A MID-PREFILL slot is an
+        ordinary victim: its cursor resets and the chunks replay — the
+        written span lived only in the freed blocks."""
+        if slot in self.active:
+            req = self.active.pop(slot)
+        else:
+            req = self.prefilling.pop(slot)
+            self._prefill_matched.pop(slot, None)
         self._admit_order.remove(slot)
         PK.free_slot(self.pstate, slot)
         req.slot = None
+        req.prefill_pos = 0
         req.preemptions += 1
         self.preempt_count += 1
         self.queue.appendleft(req)
@@ -680,8 +1020,10 @@ class Engine:
                                            int(self.pstate.lengths[slot]), 1)
                     break
                 except PK.OutOfBlocks:
-                    victims = [s for s in self._admit_order
-                               if s in self.active]
+                    victims = (self.sched.victims(self) if self.sched
+                               else [s for s in self._admit_order
+                                     if s in self.active
+                                     or s in self.prefilling])
                     if len(victims) <= 1:
                         req = self.active[slot]
                         req.finish_time = self.clock  # truncated output
@@ -698,6 +1040,7 @@ class Engine:
         call for all active slots, retire finished requests. Exactly one
         device→host sync (the sampled-token fetch) in steady state."""
         self.clock += dt
+        self.last_step_packed = None   # set by the token-budget planner
         self._admit()
         finished = self._admit_finished
         self._admit_finished = []
@@ -796,7 +1139,8 @@ class Engine:
     def run_until_done(self, max_steps: int = 10_000):
         out = []
         steps = 0
-        while (self.queue or self.active) and steps < max_steps:
+        while (self.queue or self.active or self.prefilling) \
+                and steps < max_steps:
             fin = self.step() or []
             out.extend(fin)
             steps += 1
@@ -848,7 +1192,17 @@ class Engine:
         if self.cache_kind != "paged":
             raise ValueError("pause/resume migrates paged KV blocks; "
                              "dense slabs go through core.migration")
-        req = self.active.pop(slot)
+        if slot in self.active:
+            req = self.active.pop(slot)
+            phase = "decode"
+        else:
+            # a MID-PREFILL request pauses too: the cursor (lengths ==
+            # prefill_pos) and the chunk-written blocks travel in the
+            # payload, so the destination resumes WITHOUT replaying the
+            # prefill work that already landed
+            req = self.prefilling.pop(slot)
+            self._prefill_matched.pop(slot, None)
+            phase = "prefill"
         self._admit_order.remove(slot)
         payload = PK.export_blocks(self.pstate, slot,
                                    since_epoch=since_epoch)
@@ -861,7 +1215,8 @@ class Engine:
         # len(request.generated)
         return {"request": req, "kv": payload,
                 "position": payload["length"],
-                "counter": len(req.generated)}
+                "counter": len(req.generated),
+                "phase": phase}
 
     def resume_request(self, payload: dict) -> bool:
         """Rebind a paused request's blocks into this engine's pool and
@@ -883,10 +1238,22 @@ class Engine:
             PK.import_blocks(self.pstate, slot, payload["kv"])
         except PK.OutOfBlocks:
             return False
-        req.slot = slot
-        self.active[slot] = req
-        self._admit_order.append(slot)  # migrated-in = youngest
+        self._bind_resumed(req, slot, payload)
         return True
+
+    def _bind_resumed(self, req: Request, slot: int, payload: dict):
+        """Place a migrated-in request: decode rotation normally, or —
+        when it was paused MID-PREFILL — the prefilling set, cursor
+        restored from the imported length, where the scheduler's next
+        plan grants its remaining chunks (the phase scheduler drains it
+        with one full-remainder chunk)."""
+        req.slot = slot
+        if payload.get("phase", "decode") == "prefill":
+            req.prefill_pos = int(payload["kv"]["length"])
+            self.prefilling[slot] = req
+        else:
+            self.active[slot] = req
+        self._admit_order.append(slot)  # migrated-in = youngest
 
     # ------------------------------- overlapped (two-phase) migration
     def snapshot_request(self, slot: int) -> dict:
@@ -898,7 +1265,7 @@ class Engine:
         for the phase-2 delta (blocks written since this snapshot)."""
         if self.cache_kind != "paged":
             raise ValueError("snapshot_request needs a paged engine")
-        req = self.active[slot]
+        req = (self.active.get(slot) or self.prefilling[slot])
         payload = PK.export_blocks(self.pstate, slot)
         return {"rid": req.rid, "kv": payload, "epoch": payload["epoch"],
                 "position": payload["length"]}
@@ -937,9 +1304,10 @@ class Engine:
             self.abort_resume(slot)
             return False
         del self._staged[slot]
-        req.slot = slot
-        self.active[slot] = req
-        self._admit_order.append(slot)  # migrated-in = youngest
+        # the phase is decided at PAUSE time: a request snapshotted
+        # mid-prefill may have finished its prompt during the overlap
+        # steps — the delta carries the later writes either way
+        self._bind_resumed(req, slot, payload)
         return True
 
     def abort_resume(self, slot: int):

@@ -52,7 +52,8 @@ def pristine(req: Request) -> Request:
     recovery primitive."""
     return dataclasses.replace(
         req, generated=[], slot=None, submit_time=0.0,
-        first_token_time=None, finish_time=None, preemptions=0)
+        first_token_time=None, finish_time=None, preemptions=0,
+        prefill_pos=0, prefill_start_time=None)
 
 
 class Completed:
@@ -116,7 +117,9 @@ class InstanceHandle:
         raise NotImplementedError
 
     def active_rids(self) -> Dict[int, int]:
-        """slot -> rid of every ACTIVE request."""
+        """slot -> rid of every request HOLDING a slot — decoding or
+        mid-prefill (chunked prefill makes partially-prefilled state
+        first-class: such slots hold blocks and are migratable)."""
         raise NotImplementedError
 
     def active_count(self) -> int:
@@ -242,7 +245,7 @@ class LocalInstance(InstanceHandle):
         return len(self.engine.queue)
 
     def active_rids(self) -> Dict[int, int]:
-        return {slot: r.rid for slot, r in self.engine.active.items()}
+        return self.engine.slot_rids()
 
     def free_blocks(self) -> int:
         return self.engine.pstate.free_block_count()

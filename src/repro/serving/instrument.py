@@ -19,7 +19,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 from collections import deque
-from typing import Deque, Iterable
+from typing import Deque, Iterable, Optional
 
 import jax
 import numpy as np
@@ -66,6 +66,14 @@ class EngineTelemetry:
         self.step_seconds: Deque[float] = deque(maxlen=window)
         self.step_tokens: Deque[int] = deque(maxlen=window)
         self.finished_latencies: Deque[float] = deque(maxlen=window)
+        # continuous-batching signals (token-budget scheduler): tokens
+        # PACKED per step (decode + granted prefill chunk tokens) against
+        # the engine's fixed budget, time-to-first-token and queue delay
+        # per finished request — all on the ENGINE clock, like latencies
+        self.packed_tokens: Deque[int] = deque(maxlen=window)
+        self.budget = 0
+        self.ttfts: Deque[float] = deque(maxlen=window)
+        self.queue_delays: Deque[float] = deque(maxlen=window)
         self.total_tokens = 0
         self.total_finished = 0
         self.preemptions_seen = 0
@@ -77,15 +85,26 @@ class EngineTelemetry:
         self.prefix_hits = 0
         self.blocks_saved = 0
 
-    def record_step(self, wall_s: float, n_tokens: int):
+    def record_step(self, wall_s: float, n_tokens: int,
+                    packed: Optional[int] = None,
+                    budget: Optional[int] = None):
         self.step_seconds.append(wall_s)
         self.step_tokens.append(n_tokens)
         self.total_tokens += n_tokens
+        if packed is not None:
+            self.packed_tokens.append(packed)
+        if budget:
+            self.budget = budget
 
     def record_finished(self, requests: Iterable):
         for r in requests:
             self.finished_latencies.append(r.finish_time - r.submit_time)
             self.total_finished += 1
+            if r.first_token_time is not None:
+                self.ttfts.append(r.first_token_time - r.submit_time)
+            start = getattr(r, "prefill_start_time", None)
+            if start is not None:
+                self.queue_delays.append(start - r.submit_time)
 
     def record_preemptions(self, n: int):
         self.preemptions_seen += n
@@ -103,6 +122,32 @@ class EngineTelemetry:
         already-resident block instead of re-prefilling it."""
         return (self.prefix_hits / self.prefix_queries
                 if self.prefix_queries else 0.0)
+
+    def budget_utilization(self) -> float:
+        """Mean fraction of the per-step token budget actually packed
+        (decode tokens + granted prefill chunks) over the window — the
+        continuous-batching load gauge: ~1.0 means the step loop is
+        saturated, low values mean the budget could shrink (latency) or
+        traffic is light. 0.0 when the engine runs the phase scheduler
+        (no budget to pack)."""
+        if not self.budget or not self.packed_tokens:
+            return 0.0
+        return (sum(self.packed_tokens)
+                / (len(self.packed_tokens) * self.budget))
+
+    def ttft_quantile(self, q: float) -> float:
+        """Engine-clock time-to-first-token quantile over the window —
+        the signal chunked prefill exists to bound: admission no longer
+        waits for a whole free slot + full-prompt prefill."""
+        if not self.ttfts:
+            return 0.0
+        return float(np.quantile(np.asarray(self.ttfts), q))
+
+    def queue_delay_quantile(self, q: float) -> float:
+        """Engine-clock submit -> first-chunk-admitted delay quantile."""
+        if not self.queue_delays:
+            return 0.0
+        return float(np.quantile(np.asarray(self.queue_delays), q))
 
     def tokens_per_s(self) -> float:
         wall = sum(self.step_seconds)
@@ -143,7 +188,11 @@ class EngineTelemetry:
                 "preemptions_seen": self.preemptions_seen,
                 "prefix_queries": self.prefix_queries,
                 "prefix_hits": self.prefix_hits,
-                "blocks_saved": self.blocks_saved}
+                "blocks_saved": self.blocks_saved,
+                "packed_tokens": list(self.packed_tokens),
+                "budget": self.budget,
+                "ttfts": list(self.ttfts),
+                "queue_delays": list(self.queue_delays)}
 
     def load_state(self, state: dict):
         """Overwrite this telemetry with a serialized snapshot (in place:
@@ -159,6 +208,14 @@ class EngineTelemetry:
         self.prefix_queries = state["prefix_queries"]
         self.prefix_hits = state["prefix_hits"]
         self.blocks_saved = state["blocks_saved"]
+        # .get defaults: replies from an engine server predating the
+        # continuous-batching gauges still load
+        self.packed_tokens = deque(state.get("packed_tokens", []),
+                                   maxlen=w)
+        self.budget = state.get("budget", 0)
+        self.ttfts = deque(state.get("ttfts", []), maxlen=w)
+        self.queue_delays = deque(state.get("queue_delays", []),
+                                  maxlen=w)
 
 
 def timed_step(engine, telemetry: EngineTelemetry):
@@ -171,7 +228,9 @@ def timed_step(engine, telemetry: EngineTelemetry):
     t0 = time.perf_counter()
     done = engine.step() or []
     telemetry.record_step(time.perf_counter() - t0,
-                          len(engine.active) + len(done))
+                          len(engine.active) + len(done),
+                          packed=getattr(engine, "last_step_packed", None),
+                          budget=getattr(engine, "token_budget", 0))
     telemetry.record_finished(done)
     return done
 

@@ -464,6 +464,10 @@ class Orchestrator:
         lats = [t.latency_quantile(0.5) for t in tel]
         tps = sum(t.tokens_per_s() for t in tel)
         viol = [t.slo_violation_rate(self.slo_latency) for t in tel]
+        # budget utilization averages over BUDGETED engines only — a
+        # phase-scheduled instance has no budget to pack and would drag
+        # the fleet gauge toward zero
+        buds = [t.budget_utilization() for t in tel if t.budget]
         return MetricsSnapshot(
             t=self.clock(),
             tokens_per_s=tps,
@@ -478,6 +482,13 @@ class Orchestrator:
             preemptions=new_preempts,
             prefix_hit_rate=ph / pq if pq else 0.0,
             blocks_saved=saved,
+            budget_utilization=(sum(buds) / len(buds) if buds else 0.0),
+            ttft_p50=max((t.ttft_quantile(0.5) for t in tel),
+                         default=0.0),
+            ttft_p95=max((t.ttft_quantile(0.95) for t in tel),
+                         default=0.0),
+            queue_delay_p95=max((t.queue_delay_quantile(0.95)
+                                 for t in tel), default=0.0),
             faults_injected=FLT.injected_total(),
             rpc_timeouts=self.faults.rpc_timeouts,
             quarantines=self.faults.quarantines,
@@ -930,7 +941,17 @@ class Orchestrator:
         pq = sum(p["queries"] for p in ps)
         ph = sum(p["hits"] for p in ps)
         ov = [m for m in self.migrations if m.mode == "overlapped"]
+        tel = [self.telemetry[i] for i in self._alive()]
+        buds = [t.budget_utilization() for t in tel if t.budget]
         return {
+            "budget_utilization": (sum(buds) / len(buds)
+                                   if buds else 0.0),
+            "ttft_p50": max((t.ttft_quantile(0.5) for t in tel),
+                            default=0.0),
+            "ttft_p95": max((t.ttft_quantile(0.95) for t in tel),
+                            default=0.0),
+            "queue_delay_p95": max((t.queue_delay_quantile(0.95)
+                                    for t in tel), default=0.0),
             "finished": len(self.finished),
             "dropped": self.dropped,
             "migrations": len(self.migrations),

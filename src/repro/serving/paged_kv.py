@@ -487,6 +487,36 @@ def write_tokens(state: PagedState, slot: int, k_new, v_new):
     return write_tokens_batch(state, [slot], k_new[:, None], v_new[:, None])
 
 
+def scatter_plan(state: PagedState, slots, S: int,
+                 lengths: Optional[Sequence[int]] = None):
+    """Host half of a batched S-token append for G slots: per-token
+    (block, offset) scatter indices, flattened [G*S]. Pad positions
+    (``>= lengths[i]``) and unallocated columns (window-skipped prefill
+    prefixes; -1 would WRAP, not drop) point at the out-of-range block
+    ``n_blocks`` so a ``mode="drop"`` scatter discards them. ADVANCES
+    ``state.lengths`` and stamps the write epoch — callers must execute
+    the device scatter they planned (``write_tokens_batch``, or the
+    engine's fused chunk-prefill executable)."""
+    bs = state.block_size
+    if lengths is None:
+        lengths = [S] * len(slots)
+    n_pool = state.n_blocks
+    max_col = state.block_tables.shape[1] - 1
+    blocks, offs = [], []
+    for slot, n in zip(slots, lengths):
+        start = int(state.lengths[slot])
+        pos = np.arange(start, start + S)
+        cols = np.minimum(pos // bs, max_col)
+        blk = state.block_tables[slot, cols]
+        blk = np.where((np.arange(S) < n) & (blk >= 0), blk, n_pool)
+        blocks.append(blk)
+        offs.append(pos % bs)
+        state.lengths[slot] = start + n
+    bidx = np.concatenate(blocks)
+    mark_written(state, np.unique(bidx))
+    return bidx, np.concatenate(offs)
+
+
 def write_tokens_batch(state: PagedState, slots, k_new, v_new,
                        lengths: Optional[Sequence[int]] = None):
     """Append k/v for up to S new tokens of G requests in ONE pool scatter.
@@ -506,26 +536,9 @@ def write_tokens_batch(state: PagedState, slots, k_new, v_new,
     stored back into ``state``.
     """
     L, G, S = k_new.shape[:3]
-    bs = state.block_size
-    if lengths is None:
-        lengths = [S] * G
-    n_pool = state.n_blocks
-    max_col = state.block_tables.shape[1] - 1
-    blocks, offs = [], []
-    for slot, n in zip(slots, lengths):
-        start = int(state.lengths[slot])
-        pos = np.arange(start, start + S)
-        cols = np.minimum(pos // bs, max_col)
-        blk = state.block_tables[slot, cols]
-        # dropped: pad positions (>= n) AND unallocated columns (window-
-        # skipped prefill prefixes; -1 would WRAP, not drop)
-        blk = np.where((np.arange(S) < n) & (blk >= 0), blk, n_pool)
-        blocks.append(blk)
-        offs.append(pos % bs)
-        state.lengths[slot] = start + n
-    bidx = jnp.asarray(np.concatenate(blocks), jnp.int32)   # [G*S]
-    oidx = jnp.asarray(np.concatenate(offs), jnp.int32)
-    mark_written(state, np.unique(np.concatenate(blocks)))
+    bidx, oidx = scatter_plan(state, slots, S, lengths)
+    bidx = jnp.asarray(bidx, jnp.int32)                     # [G*S]
+    oidx = jnp.asarray(oidx, jnp.int32)
     # pool is [L, n_blocks, KV, bs, hd]: advanced indices at axes 1 and 3
     # move to the front, so updates are laid out [G*S, L, KV, hd]
     kf = k_new.reshape(L, G * S, *k_new.shape[3:]).transpose(1, 0, 2, 3)

@@ -99,7 +99,7 @@ class EngineServer:
         e = self.engine
         return {"clock": e.clock,
                 "queue_len": len(e.queue),
-                "active": {int(s): r.rid for s, r in e.active.items()},
+                "active": {int(s): int(r) for s, r in e.slot_rids().items()},
                 "free_blocks": e.pstate.free_block_count(),
                 "blocks_in_use": e.pstate.blocks_in_use(),
                 "n_blocks": e.pstate.n_blocks,

@@ -1,0 +1,128 @@
+"""Token-budget continuous batching policy (Sarathi-Serve / vLLM style).
+
+The engine's original admission was two-phase: a prefill WAVE (whole
+prompts, one bucketed forward) alternating with decode steps. One long
+prompt therefore stalled every in-flight decode for its full prefill,
+and the batch ran under-full on mixed workloads. This module replaces
+the phase split with ONE policy over one queue: every step packs a fixed
+per-step TOKEN BUDGET with
+
+* one token per ACTIVE decode slot (decode-first: a running stream never
+  skips a step because of admission work), then
+* prefill CHUNKS for slots already mid-prefill (oldest first — finish
+  what was started, so time-to-first-token is monotone per request), then
+* prompt prefixes for WAITING queue heads (FIFO), whole prompts when the
+  remaining budget covers them, otherwise one bounded first chunk.
+
+The scheduler is pure POLICY: ``plan`` reads engine state (active /
+prefilling / queue / pool) and returns grants; it never mutates the
+engine or the pool. The engine executes grants and applies its existing
+mechanisms — block allocation with backpressure (a grant that finds no
+blocks is simply not executed and retries next step), never-fits
+rejection, copy-on-write forks — so the OutOfBlocks semantics of the
+phase engine carry over unchanged. Youngest-first preemption is likewise
+expressed here (``victims``) as an ordering policy over the one
+admission order shared by decoding and prefilling slots.
+
+Non-final chunks are rounded DOWN to a multiple of the block size so a
+persisted prefill cursor always sits on a block boundary: context
+gathers stay full-block and prefix registration never sees a
+half-written block.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class ChunkGrant:
+    """Permission to run ``n_tokens`` of one request's prefill this step.
+
+    ``slot is None`` marks a WAITING request (still at the queue head —
+    the engine pops it on execution); otherwise the request is already
+    mid-prefill in ``slot`` and this is a continuation chunk. ``final``
+    says the grant reaches the end of the prompt, so the engine samples
+    the first token and moves the request into decode rotation."""
+    req: object
+    slot: Optional[int]
+    start: int
+    n_tokens: int
+    final: bool
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One step's packing: how many decode tokens ride along, and which
+    prefill grants fill the rest of the budget."""
+    n_decode: int
+    grants: List[ChunkGrant]
+    budget: int
+
+    @property
+    def packed(self) -> int:
+        return self.n_decode + sum(g.n_tokens for g in self.grants)
+
+    @property
+    def utilization(self) -> float:
+        return self.packed / self.budget if self.budget else 0.0
+
+
+class TokenBudgetScheduler:
+    """The default paged-engine scheduler (``Engine(scheduler=
+    "token_budget")``). ``chunk_align`` is the engine's block size."""
+
+    def __init__(self, token_budget: int = 128, chunk_align: int = 16):
+        assert token_budget > 0, token_budget
+        self.token_budget = int(token_budget)
+        self.chunk_align = max(int(chunk_align), 1)
+
+    def _align(self, n: int) -> int:
+        """Largest block-aligned chunk not exceeding ``n`` (0 = too small
+        to be worth a partial grant this step)."""
+        return n - n % self.chunk_align
+
+    def plan(self, engine) -> StepPlan:
+        """Pack one step. Decode slots are charged first so prefill can
+        never crowd out running streams; the leftover budget goes to
+        in-flight prefills (oldest first), then the queue FIFO. At most
+        the LAST fresh grant is partial — the budget ran out on it."""
+        n_decode = len(engine.active)
+        remaining = self.token_budget - n_decode
+        grants: List[ChunkGrant] = []
+        for slot in list(engine._admit_order):
+            req = engine.prefilling.get(slot)
+            if req is None:
+                continue
+            if remaining <= 0:
+                break
+            left = engine.prefill_total(req) - req.prefill_pos
+            n = left if left <= remaining else self._align(remaining)
+            if n <= 0:
+                continue
+            grants.append(ChunkGrant(req, slot, req.prefill_pos, n,
+                                     final=(n == left)))
+            remaining -= n
+        free = len(engine._free_slots()) - sum(
+            1 for g in grants if g.slot is None)
+        for req in engine.queue:
+            if free <= 0 or remaining <= 0:
+                break
+            total = engine.prefill_total(req)
+            n = total if total <= remaining else self._align(remaining)
+            if n <= 0:
+                break               # FIFO: never skip past the head
+            grants.append(ChunkGrant(req, None, 0, n, final=(n == total)))
+            remaining -= n
+            free -= 1
+            if n < total:
+                break               # the partial grant drained the budget
+        return StepPlan(n_decode, grants, self.token_budget)
+
+    def victims(self, engine) -> List[int]:
+        """Preemption order under pool pressure: every slot holding
+        blocks (decoding or mid-prefill), oldest first — preempt from
+        the tail (youngest), vLLM-style. Mid-prefill slots are ordinary
+        victims: their cursor resets and the chunks replay."""
+        return [s for s in engine._admit_order
+                if s in engine.active or s in engine.prefilling]

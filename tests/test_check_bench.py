@@ -20,7 +20,7 @@ def _write(tmp_path, name, payload):
 def test_clean_report_passes(tmp_path):
     path = _write(tmp_path, "BENCH_paged_engine.json",
                   {"smoke": True, "config": {}, "dense": {}, "paged": {},
-                   "paged_over_dense_speedup": 9.7})
+                   "paged_over_dense_speedup": 9.7, "mixed_trace": {}})
     assert check_report(path, smoke_run=True) == []
 
 
@@ -58,7 +58,7 @@ def test_main_exit_codes(tmp_path, monkeypatch, capsys):
     monkeypatch.setenv("REPRO_BENCH_SMOKE", "1")
     good = _write(tmp_path, "BENCH_paged_engine.json",
                   {"smoke": True, "config": {}, "dense": {}, "paged": {},
-                   "paged_over_dense_speedup": 1.0})
+                   "paged_over_dense_speedup": 1.0, "mixed_trace": {}})
     assert main([good]) == 0
     # distinct filename: the clean report must stay clean alongside the
     # bad one (a shared name would silently overwrite it)

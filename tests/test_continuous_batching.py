@@ -1,0 +1,274 @@
+"""Token-budget continuous batching (DESIGN.md §10): chunked prefill
+must be invisible in outputs (token-identity vs the phase engine), the
+budget must actually protect decodes (no stalled streams during long
+prefills), and the mid-prefill cursor must survive preemption and
+migration without replaying landed chunks."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.engine import Engine, Request
+from repro.serving.instrument import count_host_syncs
+from repro.serving.orchestrator import Orchestrator
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, KEY, "float32")
+    return cfg, params
+
+
+def _prompts(sizes, seed=0, vocab=256):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(2, vocab, size=s).astype(np.int32) for s in sizes]
+
+
+def _reqs(prompts, *, max_new=5, temperature=0.0, top_k=0):
+    return [Request(rid=i, prompt=p, max_new_tokens=max_new,
+                    temperature=temperature, top_k=top_k, seed=100 + i)
+            for i, p in enumerate(prompts)]
+
+
+def _run(engine, reqs):
+    for r in reqs:
+        engine.submit(r)
+    return {r.rid: r.generated for r in engine.run_until_done()}
+
+
+# --------------------------------------------------------------- scheduler
+
+
+def test_plan_decode_first_fifo_and_alignment(tiny):
+    """Pure-policy unit test: decode slots charged first, in-flight
+    prefills continued before fresh admissions, at most one partial
+    (block-aligned) fresh grant."""
+    cfg, params = tiny
+    e = Engine(cfg, params, max_batch=4, max_len=64, cache_kind="paged",
+               block_size=8, token_budget=24, prefix_sharing=False)
+    for r in _reqs(_prompts([16, 16, 16], seed=3)):
+        e.submit(r)
+    plan = e.sched.plan(e)
+    assert plan.n_decode == 0 and plan.budget == 24
+    assert [g.n_tokens for g in plan.grants] == [16, 8]
+    assert plan.grants[0].final and not plan.grants[1].final
+    assert plan.grants[1].n_tokens % e.pstate.block_size == 0
+    assert plan.packed == 24 and plan.utilization == 1.0
+
+    e.step()    # r0 active, r1 mid-prefill at cursor 8
+    plan = e.sched.plan(e)
+    assert plan.n_decode == 1                      # decode charged first
+    cont = plan.grants[0]
+    assert cont.slot is not None and cont.start == 8 and cont.final
+    assert plan.packed <= plan.budget
+
+
+def test_chunked_matches_phase_greedy_and_sampled(tiny):
+    """Tentpole acceptance: the budget scheduler slices prompts across
+    steps yet emits token-identical streams — greedy and sampled, with
+    prefix sharing on and off (shared-prefix prompts exercise the
+    cache-hit + chunked-suffix fusion)."""
+    cfg, params = tiny
+    base = _prompts([40, 72, 24], seed=1)
+    shared = np.concatenate([base[0][:24], base[2]])  # aliases req 0
+    prompts = base + [shared]
+    for sharing in (False, True):
+        for temp, tk in ((0.0, 0), (0.8, 8)):
+            kw = dict(max_batch=3, max_len=128, cache_kind="paged",
+                      block_size=8, prefix_sharing=sharing)
+            ref = _run(Engine(cfg, params, scheduler="phase", **kw),
+                       _reqs(prompts, temperature=temp, top_k=tk))
+            got = _run(Engine(cfg, params, scheduler="token_budget",
+                              token_budget=24, **kw),
+                       _reqs(prompts, temperature=temp, top_k=tk))
+            assert got == ref, (sharing, temp)
+
+
+def test_chunked_matches_phase_sliding_window(tiny):
+    """Chunked prefill under a sliding window: leading blocks die while
+    the prompt is still landing; the cursor and the window-aware
+    allocator must agree on which columns exist."""
+    cfg, params = tiny
+    swa_cfg = dataclasses.replace(cfg, sliding_window=16)
+    prompts = _prompts([40, 56], seed=2)
+    kw = dict(max_batch=2, max_len=96, cache_kind="paged", block_size=4,
+              swa=True)
+    ref = _run(Engine(swa_cfg, params, scheduler="phase", **kw),
+               _reqs(prompts, max_new=6))
+    eng = Engine(swa_cfg, params, scheduler="token_budget",
+                 token_budget=16, **kw)
+    got = _run(eng, _reqs(prompts, max_new=6))
+    assert got == ref
+    assert eng.pstate.blocks_in_use() == 0
+
+
+# ------------------------------------------------------- decode protection
+
+
+def test_decode_not_stalled_by_long_prefill(tiny):
+    """The property the tentpole exists for: while a long prompt admits
+    chunk by chunk, every active decode emits exactly one token per
+    step — no step is ever a prefill-only wave that skips them."""
+    cfg, params = tiny
+    short, long = _prompts([8, 64], seed=4)
+    e = Engine(cfg, params, max_batch=2, max_len=96, cache_kind="paged",
+               block_size=8, token_budget=24)
+    a = Request(rid=0, prompt=short, max_new_tokens=24)
+    e.submit(a)
+    e.step()                      # A prefills whole (8 <= budget)
+    assert e.active and a.slot in e.active
+    b = Request(rid=1, prompt=long, max_new_tokens=4)
+    e.submit(b)
+    prefill_steps = 0
+    while b.first_token_time is None:
+        n = len(a.generated)
+        e.step()
+        assert len(a.generated) == n + 1, "decode stalled by prefill"
+        assert e.last_step_packed is not None
+        assert e.last_step_packed <= e.token_budget
+        if b.slot is not None and b.first_token_time is None:
+            prefill_steps += 1
+    # 64-token prompt through a 24-token budget sharing with a decode:
+    # the prefill must genuinely have been sliced across steps
+    assert prefill_steps >= 2
+    assert b.prefill_pos == len(long)
+
+
+def test_mid_prefill_preemption_replays_identically(tiny):
+    """A preempted mid-prefill slot resets its cursor, frees its blocks,
+    and replays to the same tokens (counter-based sampling keys)."""
+    cfg, params = tiny
+    (prompt,) = _prompts([40], seed=5)
+    ref = _run(Engine(cfg, params, max_batch=2, max_len=64,
+                      cache_kind="paged", block_size=8,
+                      prefix_sharing=False, scheduler="phase"),
+               _reqs([prompt], temperature=0.7, top_k=8))
+    e = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
+               block_size=8, prefix_sharing=False, token_budget=16)
+    (r,) = _reqs([prompt], temperature=0.7, top_k=8)
+    e.submit(r)
+    e.step()
+    slot = r.slot
+    assert slot in e.prefilling and 0 < r.prefill_pos < len(prompt)
+    e._preempt(slot)
+    assert r.prefill_pos == 0 and r.slot is None and r.preemptions == 1
+    assert e.pstate.blocks_in_use() == 0
+    assert e.queue and e.queue[0] is r
+    done = {d.rid: d.generated for d in e.run_until_done()}
+    assert done == ref
+
+
+# --------------------------------------------------------------- migration
+
+
+def _mid_prefill(cfg, params, prompt, max_len=64):
+    """An engine stepped until ``prompt`` sits mid-prefill; returns
+    (engine, request, slot)."""
+    e = Engine(cfg, params, max_batch=2, max_len=max_len,
+               cache_kind="paged", block_size=8, prefix_sharing=False,
+               token_budget=16)
+    (r,) = _reqs([prompt], temperature=0.6, top_k=8)
+    e.submit(r)
+    e.step()
+    slot = r.slot
+    assert slot in e.prefilling and 0 < r.prefill_pos < len(prompt)
+    return e, r, slot
+
+
+def test_migrate_mid_prefill_without_replay(tiny):
+    """Satellite 1: pause/resume of a WAITING-queue request caught mid
+    prefill carries cursor + written blocks — the destination resumes
+    from the cursor instead of replaying the prompt."""
+    cfg, params = tiny
+    (prompt,) = _prompts([40], seed=6)
+    ref = _run(Engine(cfg, params, max_batch=2, max_len=64,
+                      cache_kind="paged", block_size=8,
+                      prefix_sharing=False, scheduler="phase"),
+               _reqs([prompt], temperature=0.6, top_k=8))
+    src, r, slot = _mid_prefill(cfg, params, prompt)
+    cursor = r.prefill_pos
+    payload = src.pause_request(slot)
+    assert payload["phase"] == "prefill"
+    assert src.pstate.blocks_in_use() == 0
+
+    dst = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
+                 block_size=8, prefix_sharing=False, token_budget=16)
+    assert dst.resume_request(payload)
+    (dslot, dreq), = dst.prefilling.items()
+    assert dreq.rid == r.rid
+    assert dreq.prefill_pos == cursor > 0       # no replay: cursor kept
+    assert int(dst.pstate.lengths[dslot]) == cursor
+    done = {d.rid: d.generated for d in dst.run_until_done()}
+    assert done == ref
+
+
+def test_two_phase_migration_spanning_prefill_chunks(tiny):
+    """Overlapped migration of a mid-prefill request: snapshot at one
+    cursor, keep stepping the source (more chunks land), pause, commit
+    the delta — the destination continues from the PAUSE-time cursor."""
+    cfg, params = tiny
+    (prompt,) = _prompts([56], seed=7)
+    ref = _run(Engine(cfg, params, max_batch=2, max_len=96,
+                      cache_kind="paged", block_size=8,
+                      prefix_sharing=False, scheduler="phase"),
+               _reqs([prompt], temperature=0.6, top_k=8))
+    src, r, slot = _mid_prefill(cfg, params, prompt, max_len=96)
+    snap = src.snapshot_request(slot)
+    dst = Engine(cfg, params, max_batch=2, max_len=96, cache_kind="paged",
+                 block_size=8, prefix_sharing=False, token_budget=16)
+    staged = dst.prepare_resume(snap)
+    assert staged is not None
+    src.step()                    # overlap: another chunk lands at source
+    assert r.prefill_pos > snap["position"]
+    payload = src.pause_request(slot, since_epoch=snap["epoch"])
+    assert payload["phase"] == "prefill"
+    assert dst.commit_resume(staged, payload)
+    dreq = dst.prefilling[staged]
+    assert dreq.prefill_pos == payload["kv"]["length"]
+    done = {d.rid: d.generated for d in dst.run_until_done()}
+    assert done == ref
+
+
+# --------------------------------------------------------------- telemetry
+
+
+def test_budget_gauges_surface_in_orchestrator(tiny):
+    """Satellite 2: budget_utilization / ttft ride EngineTelemetry into
+    both MetricsSnapshot and orchestrator.stats()."""
+    cfg, params = tiny
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, token_budget=24)
+    for r in _reqs(_prompts([40, 24, 16], seed=8), max_new=4):
+        orch.submit(r)
+    orch.run_until_done()
+    snap = orch.snapshot()
+    assert 0.0 < snap.budget_utilization <= 1.0
+    assert snap.ttft_p50 > 0.0 and snap.ttft_p95 >= snap.ttft_p50
+    assert snap.queue_delay_p95 >= 0.0
+    stats = orch.stats()
+    assert 0.0 < stats["budget_utilization"] <= 1.0
+    assert stats["ttft_p50"] > 0.0
+    assert stats["ttft_p95"] >= stats["ttft_p50"]
+    assert "queue_delay_p95" in stats
+
+
+def test_budget_steady_state_single_host_sync(tiny):
+    """The packing loop keeps the one-host-sync-per-step contract in
+    decode steady state."""
+    cfg, params = tiny
+    e = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
+               block_size=8, token_budget=24)
+    for r in _reqs(_prompts([8, 8], seed=9), max_new=16):
+        e.submit(r)
+    e.step()                      # admission step (compiles + prefills)
+    assert len(e.active) == 2 and not e.queue and not e.prefilling
+    e.step()                      # warm the decode executable
+    with count_host_syncs() as c:
+        e.step()
+    assert c.n <= 1, f"{c.n} host syncs in a steady-state budget step"
