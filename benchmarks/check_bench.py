@@ -41,6 +41,14 @@ REQUIRED_KEYS = {
         "dropped_requests",
         "recoveries",
     ],
+    "BENCH_ingress.json": [
+        "config",
+        "streaming",
+        "routing",
+        "elasticity",
+        "token_identical",
+        "dropped_requests",
+    ],
     "BENCH_module_scaling.json": [
         "config",
         "scale_up",

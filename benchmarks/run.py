@@ -19,10 +19,11 @@ def main(argv=None) -> None:
         print("# smoke mode: toy sizes, numbers not comparable")
     from benchmarks import (ablations, chaos_bench, distributed_bench,
                             fig6_replication, fig8_single, fig9_memory,
-                            fig10_multi, fig11_robustness, kernels_bench,
-                            module_scaling_bench, paged_engine_bench,
-                            prefix_sharing_bench, roofline, speedup_model,
-                            table1_modules, table2_scaling_cost)
+                            fig10_multi, fig11_robustness, ingress_bench,
+                            kernels_bench, module_scaling_bench,
+                            paged_engine_bench, prefix_sharing_bench,
+                            roofline, speedup_model, table1_modules,
+                            table2_scaling_cost)
     suites = [
         ("table1", table1_modules),
         ("table2", table2_scaling_cost),
@@ -41,6 +42,7 @@ def main(argv=None) -> None:
         ("prefix_sharing", prefix_sharing_bench),
         ("module_scaling", module_scaling_bench),
         ("distributed", distributed_bench),
+        ("ingress", ingress_bench),
         ("roofline", roofline),
     ]
     rows = []

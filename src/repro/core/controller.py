@@ -40,13 +40,46 @@ class ControllerConfig:
     module_bytes: Optional[dict] = None
 
 
+@dataclasses.dataclass
+class PodElasticityConfig:
+    """Pod-LEVEL elasticity knobs (DESIGN.md §11): beyond rebalancing a
+    fixed instance set (module scaling, Table 2), the controller may
+    GROW the pod (spawn a whole engine-server worker) under sustained
+    pressure and SHRINK it (drain a worker through the zero-drop
+    migration path, then reap) when the pod runs mostly empty —
+    ScaleLLM-style whole-replica scaling driven by the same monitor
+    signals Alg. 1/2 read.
+
+    Both directions are deliberately sluggish: ``patience`` consecutive
+    pressure/idle ticks before acting, a shared ``cooldown_ticks``
+    between pod actions, and ``flap_guard_s`` under which a just-grown
+    worker is never a shrink target (a grow immediately followed by a
+    shrink must not orphan a booting worker). Shrink is additionally
+    gated by the Table-2-style cost model: the estimated drain cost
+    (bytes to migrate / link bandwidth) must stay under
+    ``max_drain_s``."""
+    min_instances: int = 1
+    max_instances: int = 8
+    # grow when pod-wide block vacancy falls BELOW this (pools filling)…
+    t_grow_vacancy: float = 0.15
+    # …or the backlog per instance exceeds this many queued requests
+    t_grow_queue: float = 4.0
+    # shrink when vacancy stays ABOVE this with an empty queue
+    t_shrink_vacancy: float = 0.85
+    patience: int = 2
+    cooldown_ticks: int = 4
+    flap_guard_s: float = 1.0
+    max_drain_s: float = 5.0
+
+
 class Controller:
     def __init__(self, cfg: ControllerConfig, cluster: Cluster,
                  plan: PlacementPlan, monitor: Monitor, *,
                  batch_size: int = 16,
                  is_violating: Optional[Callable] = None,
                  on_plan_change: Optional[Callable] = None,
-                 commit_replica: Optional[Callable] = None):
+                 commit_replica: Optional[Callable] = None,
+                 pod_cfg: Optional[PodElasticityConfig] = None):
         self.cfg = cfg
         self.cluster = cluster
         self.plan = plan
@@ -58,6 +91,11 @@ class Controller:
         self._cooldown = 0
         self.log: List[str] = []
         self.last_scale_down: Optional[SD.ScaleDownResult] = None
+        # pod elasticity state (pod_tick): persistence votes + cooldown
+        self.pod_cfg = pod_cfg
+        self._grow_votes = 0
+        self._shrink_votes = 0
+        self._pod_cooldown = 0
 
     def observe(self, snap: MetricsSnapshot):
         """Live-telemetry entry point: record one snapshot (built by the
@@ -116,3 +154,59 @@ class Controller:
             if not in_burst:
                 self._cooldown = self.cfg.cooldown_ticks
         return action
+
+    # ------------------------------------------------------ pod elasticity
+    def pod_tick(self, pod_size: int,
+                 est_drain_s: float = 0.0) -> Optional[str]:
+        """Pod-LEVEL decision (PodElasticityConfig docstring): returns
+        ``"grow"``, ``"shrink"``, or None. The live executor
+        (serving/orchestrator.py) calls this once per control tick with
+        the current pod population and, for the shrink gate, the
+        estimated drain cost of its cheapest shrink target — the same
+        bytes/bandwidth cost model (core/migration.estimate_cost) the
+        Table-2 module operations are priced by. Pressure votes
+        (vacancy collapse, backlog, SLO violations) must persist for
+        ``patience`` consecutive ticks before either action fires, and
+        any firing re-arms the pod cooldown."""
+        pcfg = self.pod_cfg
+        snap = self.monitor.latest
+        if pcfg is None or snap is None:
+            return None
+        if self._pod_cooldown > 0:
+            self._pod_cooldown -= 1
+            return None
+        vac = self.monitor.block_vacancy_rate()
+        backlog = snap.queue_len / max(pod_size, 1)
+        pressure = (vac < pcfg.t_grow_vacancy
+                    or backlog > pcfg.t_grow_queue
+                    or self.monitor.slo_violation_rate() > self.cfg.t_down)
+        idle = vac > pcfg.t_shrink_vacancy and snap.queue_len == 0
+        if pressure and pod_size < pcfg.max_instances:
+            self._shrink_votes = 0
+            self._grow_votes += 1
+            if self._grow_votes >= pcfg.patience:
+                self._grow_votes = 0
+                self._pod_cooldown = pcfg.cooldown_ticks
+                self.log.append(f"grow-pod[vacancy={vac:.2f} "
+                                f"backlog={backlog:.1f}]")
+                return "grow"
+        elif idle and pod_size > pcfg.min_instances:
+            self._grow_votes = 0
+            self._shrink_votes += 1
+            if self._shrink_votes >= pcfg.patience:
+                self._shrink_votes = 0
+                if est_drain_s > pcfg.max_drain_s:
+                    # Table-2 cost gate: reaping this worker would stall
+                    # its streams longer than the idleness is worth
+                    self.log.append(
+                        f"shrink-pod-skipped[est_drain={est_drain_s:.2f}s"
+                        f" > {pcfg.max_drain_s:.2f}s]")
+                    return None
+                self._pod_cooldown = pcfg.cooldown_ticks
+                self.log.append(f"shrink-pod[vacancy={vac:.2f} "
+                                f"est_drain={est_drain_s:.2f}s]")
+                return "shrink"
+        else:
+            self._grow_votes = 0
+            self._shrink_votes = 0
+        return None

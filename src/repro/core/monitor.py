@@ -46,6 +46,10 @@ class MetricsSnapshot:
     rpc_timeouts: int = 0           # calls that missed their deadline
     quarantines: int = 0            # hung peers severed + killed
     respawns: int = 0               # supervised restarts re-admitted
+    # --- pod elasticity (DESIGN.md §11): how many serving instances the
+    # pod currently has (alive, non-retired) — the population the
+    # controller's grow/shrink decisions act on ---
+    pod_size: int = 0
 
 
 class Monitor:
@@ -76,8 +80,11 @@ class Monitor:
         snap = self.latest
         if snap is None or not snap.device_util:
             return 1.0
-        per_dev = [1.0 - u for u in snap.device_util]
-        return sum(per_dev) / len(per_dev)
+        # None entries are RETIRED pod slots (index kept for alignment,
+        # instance reaped): they are not capacity, so they are excluded
+        # from the average rather than counted busy or idle
+        per_dev = [1.0 - u for u in snap.device_util if u is not None]
+        return sum(per_dev) / len(per_dev) if per_dev else 1.0
 
     def slo_violation_rate(self) -> float:
         return self.mean("slo_violation_rate")
@@ -89,7 +96,8 @@ class Monitor:
         snap = self.latest
         if snap is None or not snap.block_vacancy:
             return 1.0
-        return sum(snap.block_vacancy) / len(snap.block_vacancy)
+        vals = [v for v in snap.block_vacancy if v is not None]
+        return sum(vals) / len(vals) if vals else 1.0
 
     def prefix_hit_rate(self) -> float:
         """Latest prompt-prefix cache hit rate across the fleet — how
@@ -116,14 +124,21 @@ class Monitor:
         snap = self.latest
         if snap is None or not snap.device_util:
             return None
-        load = [max(u, m) for u, m in
-                zip(snap.device_util, snap.device_mem_frac
-                    or [0.0] * len(snap.device_util))]
+        load = [(-1.0 if u is None            # retired slot: never hot
+                 else max(u, m if m is not None else 0.0))
+                for u, m in zip(snap.device_util, snap.device_mem_frac
+                                or [0.0] * len(snap.device_util))]
+        if max(load) < 0:
+            return None
         return max(range(len(load)), key=load.__getitem__)
 
     def is_memory_bound(self, device_id: int) -> bool:
         snap = self.latest
         if snap is None or not snap.device_mem_frac:
             return True
-        return (snap.device_mem_frac[device_id] >=
-                (snap.device_util or [0.0] * len(snap.device_mem_frac))[device_id])
+        mem = snap.device_mem_frac[device_id]
+        util = (snap.device_util
+                or [0.0] * len(snap.device_mem_frac))[device_id]
+        if mem is None or util is None:
+            return True
+        return mem >= util

@@ -195,6 +195,36 @@ def launch_pod(cfg, params, nodes: List[Node], *,
     return handles
 
 
+def make_worker_factory(cfg, params, *, remote: bool = False,
+                        **engine_kw):
+    """Return the ``idx -> InstanceHandle`` callable that arms the
+    orchestrator's RUNTIME pod growth (``Orchestrator.grow_pod``): the
+    controller's grow decision spawns a whole fresh serving instance
+    through it mid-flight, after launch. ``remote=True`` spawns an
+    engine-server process and returns its ``EngineProxy`` (the same
+    plane launch-time ``--workers`` instances live on); the default
+    builds an in-process paged ``LocalInstance`` — enough for tests and
+    single-host elasticity without process spin-up cost.
+
+    Grown workers are labeled ``g<idx>`` — disjoint from the
+    launch-time ``w<k>`` namespace, so fault-injection plans and logs
+    can tell a runtime spawn from the original fleet."""
+    if remote:
+        from repro.serving.remote_engine import EngineProxy
+
+        def factory(idx: int):
+            return EngineProxy(cfg, params, peer_label=f"g{idx}",
+                               **engine_kw)
+    else:
+        from repro.serving.engine import Engine
+        from repro.serving.instance import LocalInstance
+
+        def factory(idx: int):
+            return LocalInstance(Engine(cfg, params, cache_kind="paged",
+                                        **engine_kw))
+    return factory
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     """``--serve ENDPOINT``: run ONE listening engine server in this
     process (the per-node worker entry; the orchestrator ships cfg +

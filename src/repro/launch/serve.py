@@ -29,6 +29,14 @@ loop drives them over TCP frames:
 
     PYTHONPATH=src python -m repro.launch.serve --inventory pod.toml \
         --requests 24 --rps 4 --drain
+
+``--http`` swaps the synthetic workload for the real front door
+(serving/ingress.py): streaming completions over HTTP/1.1 with
+prefix-affinity routing and 429 backpressure; add ``--elastic`` to let
+the controller grow/shrink the pod while serving:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --instances 2 --http --http-port 8080 --elastic
 """
 from __future__ import annotations
 
@@ -86,6 +94,28 @@ def main(argv=None):
                     default="token_budget",
                     help="'phase' pins the legacy prefill-wave/decode-"
                          "step alternation (paged engines only)")
+    ap.add_argument("--http", action="store_true",
+                    help="serve the HTTP front door instead of the "
+                         "synthetic workload: POST /v1/completions "
+                         "(chunked token streaming), GET /v1/models "
+                         "/healthz /stats (serving/ingress.py); paged "
+                         "engines only")
+    ap.add_argument("--http-host", default="127.0.0.1")
+    ap.add_argument("--http-port", type=int, default=8080,
+                    help="ingress port (0 = ephemeral, printed at bind)")
+    ap.add_argument("--http-seconds", type=float, default=None,
+                    help="serve for N seconds then exit cleanly "
+                         "(default: until Ctrl-C)")
+    ap.add_argument("--max-queue", type=int, default=8,
+                    help="per-instance admission ceiling: when every "
+                         "instance's queue is at this, the ingress "
+                         "sheds with 429 + Retry-After")
+    ap.add_argument("--elastic", action="store_true",
+                    help="arm pod grow/shrink: the controller may spawn "
+                         "a whole extra worker under sustained pressure "
+                         "and drain+reap one when the pod runs empty")
+    ap.add_argument("--max-pod", type=int, default=4,
+                    help="pod-size ceiling for --elastic growth")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -106,6 +136,11 @@ def main(argv=None):
 
     t_start = time.time()
 
+    if args.http and kind != "paged":
+        raise SystemExit("[serve] --http needs a paged-cache family "
+                         "(prefix-affinity routing keys on the paged "
+                         "pool's content chains)")
+
     if kind == "dense":  # legacy single-engine fallback (no paged pool)
         eng = Engine(cfg, params, max_batch=args.max_batch, max_len=128,
                      cache_kind="dense")
@@ -124,6 +159,20 @@ def main(argv=None):
     policy = RespawnPolicy() if args.supervise else None
     sched_kw = dict(scheduler=args.scheduler,
                     token_budget=args.token_budget)
+    front_kw = {}
+    if args.http:
+        # front-door knobs: admission ceiling (-> 429 at the door) and,
+        # with --elastic, the runtime worker factory + pod thresholds
+        # that let the controller grow/shrink the pod while serving
+        front_kw["max_queue"] = args.max_queue
+        if args.elastic:
+            from repro.core.controller import PodElasticityConfig
+            from repro.launch.pod import make_worker_factory
+            front_kw["worker_factory"] = make_worker_factory(
+                cfg, params, remote=bool(args.workers or args.inventory),
+                max_batch=args.max_batch, max_len=128, **sched_kw)
+            front_kw["pod_cfg"] = PodElasticityConfig(
+                max_instances=args.max_pod)
     if args.inventory:
         from repro.launch.pod import launch_pod, load_inventory
         nodes = load_inventory(args.inventory)
@@ -134,7 +183,7 @@ def main(argv=None):
         orch = Orchestrator(cfg, params, handles=handles,
                             slo_latency=args.slo, telemetry_every=4,
                             rpc_deadline=args.rpc_deadline,
-                            respawn_policy=policy)
+                            respawn_policy=policy, **front_kw)
         print(f"[serve] pod: {n_instances} engine servers over TCP "
               f"({sum(n.spawn for n in nodes)} node(s) spawned, "
               f"{sum(not n.spawn for n in nodes)} attached)")
@@ -145,10 +194,37 @@ def main(argv=None):
                             slo_latency=args.slo, telemetry_every=4,
                             remote=bool(args.workers),
                             rpc_deadline=args.rpc_deadline,
-                            respawn_policy=policy, **sched_kw)
+                            respawn_policy=policy, **front_kw,
+                            **sched_kw)
         if args.workers:
             print(f"[serve] distributed plane: {args.workers} "
                   f"engine-server processes over RPC")
+    if args.http:
+        from repro.serving.ingress import Ingress
+        ing = Ingress(orch, host=args.http_host, port=args.http_port,
+                      model_id=args.arch).start()
+        print(f"[serve] http ingress on http://{ing.host}:{ing.port}  "
+              f"(POST /v1/completions; GET /v1/models /healthz /stats)"
+              + ("  [elastic pod]" if args.elastic else ""), flush=True)
+        try:
+            if args.http_seconds is not None:
+                time.sleep(args.http_seconds)
+            else:
+                while True:
+                    time.sleep(1.0)
+        except KeyboardInterrupt:
+            print("\n[serve] interrupt; draining streams", flush=True)
+        ing.close()
+        c = ing.counters
+        print(f"[serve] ingress: {c.requests} requests "
+              f"({c.streamed} streamed), {c.tokens_out} tokens out, "
+              f"routed prefix/vacancy={c.routed_prefix}/"
+              f"{c.routed_vacancy}, 429s={c.rejected_429}, "
+              f"400s={c.bad_requests}")
+        _report(orch.finished, time.time() - t_start)
+        orch.close()
+        return len(orch.finished)
+
     submitted, step = 0, 0
     seen_actions = 0
     while len(orch.finished) < args.requests and step < 5000:

@@ -1136,6 +1136,32 @@ class Engine:
                     "blocks_saved_now": 0, "cached_blocks": 0}
         return PK.prefix_stats(self.pstate)
 
+    @property
+    def block_size(self) -> int:
+        """Pool block granularity (0 for a dense engine) — what the pod
+        router hashes incoming prompts by (serving/router.py)."""
+        return self.pstate.block_size if self.cache_kind == "paged" else 0
+
+    def prefix_keys(self) -> set:
+        """Hex-encoded content-chain keys RESIDENT in this engine's
+        prefix cache — the router's pod-wide affinity signal. Hex (not
+        raw bytes) so the set survives msgpack/JSON round trips
+        unchanged."""
+        if self.cache_kind != "paged" or not self.prefix_sharing:
+            return set()
+        return {k.hex() for k in self.pstate.prefix_cache}
+
+    def stream_progress(self) -> Dict[int, List[int]]:
+        """rid -> tokens generated so far, for every SLOT-HOLDING
+        request (decoding or mid-prefill) — the ingress streaming feed.
+        Full lists each step, not deltas: idempotent under migration
+        overlap and crash replay (a restarted stream re-emits a prefix
+        of itself; consumers keep a high-water mark)."""
+        out = {r.rid: list(r.generated) for r in self.active.values()}
+        out.update({r.rid: list(r.generated)
+                    for r in self.prefilling.values()})
+        return out
+
     def run_until_done(self, max_steps: int = 10_000):
         out = []
         steps = 0

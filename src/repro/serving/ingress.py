@@ -1,0 +1,512 @@
+"""Serving front door: a dependency-free async HTTP/1.1 ingress over
+the orchestrator (DESIGN.md §11).
+
+The plane's first client-facing surface, in the repo's no-framework
+transport style: stdlib ``asyncio`` streams and hand-rolled HTTP/1.1 —
+request line + headers parsed directly, responses with explicit
+``Content-Length`` or ``Transfer-Encoding: chunked`` — the same way
+serving/transport.py hand-rolls its RPC frames. Endpoints:
+
+* ``POST /v1/completions`` — the de-facto standard completion API.
+  Body: ``{"prompt": [token ids] | "text", "max_tokens", "temperature",
+  "top_k", "seed", "stream"}``. With ``stream: true`` the response is
+  chunked SSE: one ``data: {"token": t, "index": n}`` event per token,
+  flushed AS THE STEP LOOP EMITS IT (not after completion), terminated
+  by ``data: [DONE]``. Without, one JSON body after the request
+  finishes. String prompts are mapped by a deterministic byte-level
+  stand-in tokenizer (``2 + byte % (vocab-2)``) — the repo serves
+  randomly initialized reference models, so a real BPE vocabulary would
+  add a dependency without adding meaning; token-id prompts are the
+  precise interface.
+* ``GET /v1/models`` — the served model's identity.
+* ``GET /healthz`` — liveness + pod size (the probe surface).
+* ``GET /stats`` — the orchestrator's ``MetricsSnapshot`` plus the
+  ingress's own ``IngressCounters`` (routing/backpressure ledger).
+
+**Threading model** — the one invariant everything below serves:
+``transport.Rpc`` is NOT thread-safe, so exactly ONE thread (the
+**pump**) ever touches the orchestrator's serving ops. The asyncio
+event loop runs in its own thread and only (a) parses HTTP, (b) routes
+admissions through ``Orchestrator.route`` — which reads nothing but
+CACHED gauges (an EngineProxy's ``_info`` mirror), never the wire — and
+(c) awaits per-request ``asyncio.Queue``s. The pump drains the
+submission queue into ``submit_to``, steps the orchestrator while any
+instance has work, and pushes token events into those queues via
+``loop.call_soon_threadsafe`` — tokens cross the thread boundary, RPCs
+never do. Elasticity rides for free: the pump's ``step()`` runs the
+orchestrator's control ticks, so pod grow/shrink happens on the same
+thread that owns the instances.
+
+**Admission backpressure**: the router only considers instances whose
+queue — including requests accepted here but not yet pumped
+(``_pending``) — is under the orchestrator's ``max_queue``. When none
+qualifies the ingress answers ``429`` with ``Retry-After`` instead of
+queueing unboundedly; load sheds at the door, not as pool OOM.
+
+**Graceful shutdown**: ``close()`` stops intake (503), sends every open
+stream a ``data: {"error": "shutting down"}`` event followed by the
+proper zero-length chunk terminator (clients see a well-formed HTTP
+tail, not a reset), then stops the pump and joins both threads.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import itertools
+import json
+import queue
+import threading
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.serving.engine import Request
+from repro.serving.instrument import IngressCounters
+
+
+def byte_tokens(text: str, vocab_size: int) -> np.ndarray:
+    """Deterministic byte-level stand-in tokenizer (module docstring):
+    identical text -> identical token ids -> identical content-chain
+    keys, so string-prompt clients still exercise prefix affinity."""
+    span = max(vocab_size - 2, 1)
+    return np.asarray([2 + b % span for b in text.encode("utf-8")],
+                      np.int32)
+
+
+class _BadRequest(Exception):
+    """Malformed HTTP or JSON — answered with 400."""
+
+
+@dataclasses.dataclass
+class _Session:
+    """One in-flight completion: the bridge between the pump thread
+    (producer) and the handler coroutine (consumer)."""
+    rid: int
+    events: asyncio.Queue          # ("tok", t) | ("done", _) | ("abort", why)
+    sent: int = 0                  # pump-side high-water mark into the stream
+
+
+class Ingress:
+    """The HTTP front door over one Orchestrator (module docstring).
+
+    The caller keeps ownership of the orchestrator but MUST stop
+    driving it once ``start()`` runs — the pump thread owns every
+    serving op until ``close()``.
+    """
+
+    def __init__(self, orch, *, host: str = "127.0.0.1", port: int = 0,
+                 model_id: Optional[str] = None):
+        self.orch = orch
+        self.host = host
+        self.port = port                   # 0 -> ephemeral; real after start
+        self.model_id = model_id or getattr(orch.cfg, "name", None) \
+            or getattr(orch.cfg, "family", "model")
+        self.counters = IngressCounters()
+        self.last_snapshot = None          # refreshed by the pump
+        self._rids = itertools.count(1)
+        self._lock = threading.Lock()      # _pending + _sessions + _rids
+        self._pending: Dict[int, int] = {}  # instance -> accepted, unpumped
+        self._sessions: Dict[int, _Session] = {}
+        self._submit_q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._closing = False
+        # test hook: while set, the pump neither submits nor steps — the
+        # deterministic way to hold queues full for 429 assertions
+        self.hold_pump = threading.Event()
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._started = threading.Event()
+        self._http_thread: Optional[threading.Thread] = None
+        self._pump_thread: Optional[threading.Thread] = None
+        self._pump_error: Optional[BaseException] = None
+
+    # ---------------------------------------------------------- lifecycle
+    def start(self) -> "Ingress":
+        self._http_thread = threading.Thread(
+            target=self._run_loop, name="ingress-http", daemon=True)
+        self._http_thread.start()
+        if not self._started.wait(timeout=30):
+            raise RuntimeError("ingress failed to bind within 30s")
+        self._pump_thread = threading.Thread(
+            target=self._pump, name="ingress-pump", daemon=True)
+        self._pump_thread.start()
+        return self
+
+    def close(self):
+        """Graceful shutdown (module docstring): stop intake, abort open
+        streams with a well-formed tail, stop the pump, join."""
+        if self._loop is None:
+            return
+        self._closing = True
+        try:
+            fut = asyncio.run_coroutine_threadsafe(self._shutdown(),
+                                                   self._loop)
+            fut.result(timeout=10)
+        except Exception:
+            pass
+        self._stop.set()
+        if self._pump_thread is not None:
+            self._pump_thread.join(timeout=10)
+        self._loop.call_soon_threadsafe(self._loop.stop)
+        if self._http_thread is not None:
+            self._http_thread.join(timeout=10)
+
+    async def _shutdown(self):
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        with self._lock:
+            sessions = list(self._sessions.values())
+            self._sessions.clear()
+        for s in sessions:
+            self.counters.aborted_streams += 1
+            s.events.put_nowait(("abort", "shutting down"))
+        await asyncio.sleep(0.05)          # let handlers flush their tails
+
+    def _run_loop(self):
+        loop = asyncio.new_event_loop()
+        asyncio.set_event_loop(loop)
+        self._loop = loop
+
+        async def _bind():
+            self._server = await asyncio.start_server(
+                self._handle, self.host, self.port)
+            self.port = self._server.sockets[0].getsockname()[1]
+            self._started.set()
+
+        loop.run_until_complete(_bind())
+        try:
+            loop.run_forever()
+        finally:
+            loop.close()
+
+    # --------------------------------------------------------------- pump
+    def _has_work(self) -> bool:
+        o = self.orch
+        return any(o.instances[i].queue_len() or o.instances[i].active_rids()
+                   for i in o._alive())
+
+    def _pump(self):
+        """The ONLY thread that touches orchestrator serving ops."""
+        o = self.orch
+        self.last_snapshot = o.snapshot()
+        t_snap = t_ctl = time.monotonic()
+        try:
+            while not self._stop.is_set():
+                if self.hold_pump.is_set():
+                    time.sleep(0.002)
+                    continue
+                moved = self._drain_submissions()
+                if self._has_work():
+                    for r in o.step():
+                        self._finish(r)
+                    self._push_streams()
+                    moved = True
+                now = time.monotonic()
+                if now - t_snap > 0.2 or moved:
+                    self.last_snapshot = o.snapshot()
+                    t_snap = now
+                if not moved:
+                    # step() carries the control ticks under load; while
+                    # IDLE the loop must still tick so the idle-driven
+                    # pod decision (shrink) can ever fire
+                    if (o.pod_cfg is not None
+                            and o.worker_factory is not None
+                            and now - t_ctl > 0.25):
+                        o.control_tick()
+                        t_ctl = now
+                    time.sleep(0.002)
+        except BaseException as e:  # noqa: BLE001 — surface, don't vanish
+            self._pump_error = e
+            with self._lock:
+                sessions = list(self._sessions.values())
+                self._sessions.clear()
+            for s in sessions:
+                self._post(s, ("abort", f"pump failed: {e!r}"))
+            raise
+
+    def _drain_submissions(self) -> bool:
+        moved = False
+        while True:
+            try:
+                idx, req = self._submit_q.get_nowait()
+            except queue.Empty:
+                return moved
+            self.orch.submit_to(idx, req)
+            with self._lock:
+                n = self._pending.get(idx, 0) - 1
+                if n > 0:
+                    self._pending[idx] = n
+                else:
+                    self._pending.pop(idx, None)
+            moved = True
+
+    def _post(self, sess: _Session, event):
+        """Thread-safe event push into a session's asyncio queue."""
+        self._loop.call_soon_threadsafe(sess.events.put_nowait, event)
+
+    def _push_streams(self):
+        for rid, toks in self.orch.stream_view().items():
+            with self._lock:
+                sess = self._sessions.get(rid)
+            if sess is None or len(toks) <= sess.sent:
+                continue
+            for t in toks[sess.sent:]:
+                self._post(sess, ("tok", int(t)))
+            self.counters.tokens_out += len(toks) - sess.sent
+            sess.sent = len(toks)
+
+    def _finish(self, req: Request):
+        with self._lock:
+            sess = self._sessions.pop(req.rid, None)
+        if sess is None:
+            return
+        toks = list(req.generated)
+        for t in toks[sess.sent:]:          # final flush past the mark
+            self._post(sess, ("tok", int(t)))
+        self.counters.tokens_out += max(0, len(toks) - sess.sent)
+        sess.sent = len(toks)
+        self._post(sess, ("done", None))
+
+    # ------------------------------------------------------------ protocol
+    async def _handle(self, reader: asyncio.StreamReader,
+                      writer: asyncio.StreamWriter):
+        try:
+            try:
+                parsed = await self._read_request(reader)
+                if parsed is None:          # EOF before a request line
+                    return
+                method, path, headers, body = parsed
+            except (_BadRequest, asyncio.IncompleteReadError,
+                    ValueError, UnicodeDecodeError):
+                self.counters.bad_requests += 1
+                await self._respond(writer, 400, {"error": "bad request"})
+                return
+            if self._closing:
+                await self._respond(writer, 503,
+                                    {"error": "shutting down"})
+                return
+            if path == "/v1/completions":
+                if method != "POST":
+                    await self._respond(writer, 405,
+                                        {"error": "use POST"})
+                    return
+                await self._completions(writer, body)
+            elif path == "/v1/models" and method == "GET":
+                await self._respond(writer, 200, {
+                    "object": "list",
+                    "data": [{"id": self.model_id, "object": "model",
+                              "owned_by": "repro"}]})
+            elif path == "/healthz" and method == "GET":
+                await self._respond(writer, 200, {
+                    "status": "error" if self._pump_error else "ok",
+                    "pod_size": self.orch.pod_size()})
+            elif path == "/stats" and method == "GET":
+                await self._respond(writer, 200, self._stats())
+            else:
+                await self._respond(writer, 404, {"error": "not found"})
+        except (ConnectionError, BrokenPipeError):
+            pass                            # client went away mid-reply
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, BrokenPipeError):
+                pass
+
+    async def _read_request(self, reader):
+        line = await reader.readline()
+        if not line:
+            return None
+        parts = line.decode("latin1").strip().split()
+        if len(parts) != 3 or not parts[2].startswith("HTTP/"):
+            raise _BadRequest
+        method, path = parts[0].upper(), parts[1]
+        headers = {}
+        while True:
+            hl = await reader.readline()
+            if hl in (b"\r\n", b"\n"):
+                break
+            if not hl or b":" not in hl:
+                raise _BadRequest
+            k, v = hl.decode("latin1").split(":", 1)
+            headers[k.strip().lower()] = v.strip()
+        body = b""
+        if "content-length" in headers:
+            n = int(headers["content-length"])
+            if not 0 <= n <= 8_000_000:
+                raise _BadRequest
+            body = await reader.readexactly(n)
+        return method, path, headers, body
+
+    async def _respond(self, writer, status: int, obj: dict,
+                       extra_headers=()):
+        reasons = {200: "OK", 400: "Bad Request", 404: "Not Found",
+                   405: "Method Not Allowed", 429: "Too Many Requests",
+                   503: "Service Unavailable"}
+        body = json.dumps(obj).encode()
+        head = (f"HTTP/1.1 {status} {reasons.get(status, 'Error')}\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"Connection: close\r\n")
+        for k, v in extra_headers:
+            head += f"{k}: {v}\r\n"
+        writer.write(head.encode("latin1") + b"\r\n" + body)
+        await writer.drain()
+
+    def _stats(self) -> dict:
+        snap = self.last_snapshot
+        o = self.orch
+        return {
+            "snapshot": dataclasses.asdict(snap) if snap else None,
+            "ingress": self.counters.as_dict(),
+            "pod": {"size": o.pod_size(),
+                    "retired": sorted(o._retired),
+                    "log": list(o.pod_log)},
+            "finished": len(o.finished),
+            "dropped": o.dropped,
+        }
+
+    # --------------------------------------------------------- completions
+    def _parse_completion(self, body: bytes) -> dict:
+        try:
+            obj = json.loads(body.decode("utf-8"))
+        except (json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise _BadRequest from e
+        if not isinstance(obj, dict):
+            raise _BadRequest
+        prompt = obj.get("prompt")
+        if isinstance(prompt, str) and prompt:
+            toks = byte_tokens(prompt, self.orch.cfg.vocab_size)
+        elif (isinstance(prompt, list) and prompt
+              and all(isinstance(t, int) and 0 <= t for t in prompt)):
+            toks = np.asarray(prompt, np.int32)
+        else:
+            raise _BadRequest
+        if len(toks) > 8192:
+            raise _BadRequest
+        try:
+            out = {
+                "prompt": toks,
+                "max_tokens": int(obj.get("max_tokens", 16)),
+                "temperature": float(obj.get("temperature", 0.0)),
+                "top_k": int(obj.get("top_k", 0)),
+                "seed": int(obj.get("seed", 0)),
+                "eos_id": (None if obj.get("eos_id") is None
+                           else int(obj["eos_id"])),
+                "stream": bool(obj.get("stream", False)),
+            }
+        except (TypeError, ValueError) as e:
+            raise _BadRequest from e
+        if not 1 <= out["max_tokens"] <= 4096:
+            raise _BadRequest
+        return out
+
+    async def _completions(self, writer, body: bytes):
+        try:
+            spec = self._parse_completion(body)
+        except _BadRequest:
+            self.counters.bad_requests += 1
+            await self._respond(writer, 400,
+                                {"error": "malformed completion request"})
+            return
+        # admission: route on CACHED gauges, charging not-yet-pumped
+        # accepts so a same-tick burst cannot over-admit
+        with self._lock:
+            decision = self.orch.route(prompt=spec["prompt"],
+                                       pending=dict(self._pending))
+            if decision is None:
+                self.counters.rejected_429 += 1
+            else:
+                self._pending[decision.idx] = \
+                    self._pending.get(decision.idx, 0) + 1
+                rid = next(self._rids)
+                sess = _Session(rid, asyncio.Queue())
+                self._sessions[rid] = sess
+                self.counters.requests += 1
+                if decision.reason == "prefix":
+                    self.counters.routed_prefix += 1
+                else:
+                    self.counters.routed_vacancy += 1
+        if decision is None:
+            await self._respond(writer, 429,
+                                {"error": "all queues full, retry"},
+                                extra_headers=[("Retry-After", "1")])
+            return
+        req = Request(rid=rid, prompt=spec["prompt"],
+                      max_new_tokens=spec["max_tokens"],
+                      eos_id=spec["eos_id"],
+                      temperature=spec["temperature"],
+                      top_k=spec["top_k"], seed=spec["seed"])
+        self._submit_q.put((decision.idx, req))
+        if spec["stream"]:
+            self.counters.streamed += 1
+            await self._stream_response(writer, rid, decision, sess)
+        else:
+            await self._unary_response(writer, rid, decision, sess)
+
+    async def _unary_response(self, writer, rid, decision, sess):
+        toks = []
+        while True:
+            kind, val = await sess.events.get()
+            if kind == "tok":
+                toks.append(val)
+            elif kind == "done":
+                break
+            else:                           # abort
+                await self._respond(writer, 503,
+                                    {"error": val, "id": rid,
+                                     "tokens": toks})
+                return
+        await self._respond(writer, 200, {
+            "id": rid, "object": "text_completion",
+            "model": self.model_id, "tokens": toks,
+            "routing": {"instance": decision.idx,
+                        "matched_blocks": decision.matched_blocks,
+                        "reason": decision.reason},
+            "usage": {"completion_tokens": len(toks)}})
+
+    async def _stream_response(self, writer, rid, decision, sess):
+        head = ("HTTP/1.1 200 OK\r\n"
+                "Content-Type: text/event-stream\r\n"
+                "Cache-Control: no-cache\r\n"
+                "Transfer-Encoding: chunked\r\n"
+                "Connection: close\r\n\r\n")
+        writer.write(head.encode("latin1"))
+        await writer.drain()
+
+        def chunk(payload: bytes) -> bytes:
+            return f"{len(payload):x}\r\n".encode() + payload + b"\r\n"
+
+        # routing verdict first, so clients (and the bench) can audit
+        # affinity without scraping /stats
+        first = json.dumps({"id": rid, "instance": decision.idx,
+                            "matched_blocks": decision.matched_blocks,
+                            "routing": decision.reason})
+        writer.write(chunk(f"data: {first}\n\n".encode()))
+        await writer.drain()
+        n = 0
+        try:
+            while True:
+                kind, val = await sess.events.get()
+                if kind == "tok":
+                    ev = json.dumps({"token": val, "index": n})
+                    writer.write(chunk(f"data: {ev}\n\n".encode()))
+                    await writer.drain()
+                    n += 1
+                elif kind == "done":
+                    writer.write(chunk(b"data: [DONE]\n\n"))
+                    break
+                else:                       # abort: well-formed tail
+                    ev = json.dumps({"error": val})
+                    writer.write(chunk(f"data: {ev}\n\n".encode()))
+                    break
+            writer.write(b"0\r\n\r\n")      # chunked terminator
+            await writer.drain()
+        except (ConnectionError, BrokenPipeError):
+            # client hung up mid-stream: drop the session; the request
+            # itself finishes on the engine (tokens just go unread)
+            self.counters.aborted_streams += 1
+            with self._lock:
+                self._sessions.pop(rid, None)

@@ -151,6 +151,26 @@ class InstanceHandle:
     def prefix_stats(self) -> dict:
         raise NotImplementedError
 
+    @property
+    def block_size(self) -> int:
+        """Pool block granularity (0 = dense/no pool) — what the pod
+        router hashes incoming prompts by (serving/router.py)."""
+        return 0
+
+    def prefix_keys(self) -> set:
+        """Hex content-chain keys resident in this instance's prefix
+        cache, as of the last observation — the router's affinity
+        signal. May be one step stale for a remote instance (costs a
+        routing miss, never correctness)."""
+        return set()
+
+    def stream_view(self) -> Dict[int, List[int]]:
+        """rid -> tokens generated so far by every slot-holding request,
+        as of the last completed step — the ingress streaming feed.
+        Full token lists (idempotent under migration/replay), not
+        deltas; consumers keep a high-water mark."""
+        return {}
+
     # -------------------------------------------------------- migration
     def pause_request(self, slot: int,
                       since_epoch: Optional[int] = None) -> dict:
@@ -272,6 +292,16 @@ class LocalInstance(InstanceHandle):
 
     def prefix_stats(self) -> dict:
         return self.engine.prefix_stats()
+
+    @property
+    def block_size(self) -> int:
+        return self.engine.block_size
+
+    def prefix_keys(self) -> set:
+        return self.engine.prefix_keys()
+
+    def stream_view(self) -> Dict[int, List[int]]:
+        return self.engine.stream_progress()
 
     # -------------------------------------------------------- migration
     def pause_request(self, slot: int,

@@ -64,7 +64,8 @@ from typing import Dict, List, Optional
 from repro.configs.base import ModelConfig
 from repro.core import migration as MIG
 from repro.core.cluster import Cluster, Device, layer_weight_bytes
-from repro.core.controller import Controller, ControllerConfig
+from repro.core.controller import (Controller, ControllerConfig,
+                                   PodElasticityConfig)
 from repro.core.monitor import MetricsSnapshot, Monitor
 from repro.core.plan import PlacementPlan
 from repro.serving import faults as FLT
@@ -72,6 +73,8 @@ from repro.serving import transport as TR
 from repro.serving.engine import Engine, Request
 from repro.serving.instance import InstanceHandle, LocalInstance
 from repro.serving.instrument import FaultCounters
+from repro.serving.router import (PrefixAffinityRouter, RouteDecision,
+                                  RouterPolicy)
 
 
 @dataclasses.dataclass
@@ -120,12 +123,27 @@ class Orchestrator:
                  max_phases: int = 3,
                  rpc_deadline: Optional[float] = None,
                  respawn_policy: Optional[RespawnPolicy] = None,
+                 router: Optional[RouterPolicy] = None,
+                 max_queue: Optional[int] = None,
+                 worker_factory=None,
+                 pod_cfg: Optional[PodElasticityConfig] = None,
                  **engine_kw):
         self.cfg = cfg
         self.slo_latency = slo_latency
         self.telemetry_every = telemetry_every
         self.link_bandwidth = link_bandwidth
         self.max_phases = max_phases
+        # routing policy (serving/router.py): prefix-affinity by default
+        # — falls back to the historical vacancy order when no chain
+        # matches, so non-shared workloads route exactly as before
+        self.router = router if router is not None else PrefixAffinityRouter()
+        # per-instance admission ceiling for the ingress (None = no
+        # backpressure; route() returns None -> HTTP 429 + Retry-After)
+        self.max_queue = max_queue
+        # pod elasticity: a factory (idx -> InstanceHandle) arms
+        # grow_pod; pod_cfg arms the controller's pod decisions
+        self.worker_factory = worker_factory
+        self.pod_cfg = pod_cfg
         if handles is not None:
             self.instances: List[InstanceHandle] = list(handles)
         elif remote:
@@ -163,6 +181,7 @@ class Orchestrator:
                 ccfg, module_bytes={
                     "layer": rs, "attn": rs / 3, "ffn": 2 * rs / 3,
                     "kv_cache": pool_bytes / max(mb, 1)})
+        self._ccfg = ccfg   # kept: grow_pod sizes new Devices from it
         cap = pool_bytes + 2 * cfg.num_layers * ccfg.replica_size
         self.cluster = Cluster(
             devices=[Device(i, mem_capacity=cap, compute_flops=1.0)
@@ -177,7 +196,8 @@ class Orchestrator:
             # instead control_tick feeds the post-action snapshot back
             # and iterates Alg. 2's phases across the same burst
             is_violating=lambda plan, bs: False,
-            on_plan_change=self._on_plan_change)
+            on_plan_change=self._on_plan_change,
+            pod_cfg=pod_cfg)
         self.finished: List[Request] = []
         self.migrations: List[MigrationRecord] = []
         self.recoveries: List[dict] = []    # crash-recovery audit trail
@@ -185,6 +205,17 @@ class Orchestrator:
         self._tick = 0
         self._home: Dict[int, int] = {}     # rid -> instance
         self._recovered: set = set()        # instances already recovered
+        # --- pod elasticity state (DESIGN.md §11) ---
+        # indices deliberately drained + reaped by shrink_pod. Index
+        # slots are NEVER reused or shifted (_home/_respawn/_evicted are
+        # idx-keyed); a retired slot just goes dark everywhere.
+        self._retired: set = set()
+        self._grown_at: Dict[int, float] = {}   # idx -> monotonic birth
+        self.pod_log: List[dict] = []           # grow/shrink audit trail
+        # rid -> longest token list observed for slot-holding streams
+        # (the ingress feed; full lists make migration overlap and
+        # crash replay idempotent — longest == most progressed)
+        self._stream_acc: Dict[int, List[int]] = {}
         # finishes collected by migrate_requests_overlapped's internal
         # overlap steps: already in self.finished, surfaced through the
         # NEXT step()'s return so run_until_done callers never miss one
@@ -231,7 +262,8 @@ class Orchestrator:
                 if isinstance(h, LocalInstance)]
 
     def _alive(self) -> List[int]:
-        return [i for i, h in enumerate(self.instances) if h.alive()]
+        return [i for i, h in enumerate(self.instances)
+                if i not in self._retired and h.alive()]
 
     def clock(self) -> float:
         alive = self._alive()
@@ -246,33 +278,50 @@ class Orchestrator:
 
     # -------------------------------------------------------------- intake
     def submit(self, req: Request):
-        """Route to the alive instance with the most free pool blocks
-        (ties: shortest queue, lowest id) — block vacancy is the live
-        resource the paper's admission reasons about. The count includes
-        cached-free blocks (refcount-0 prefix-cache residents): they are
-        evictable on demand, so they ARE vacancy.
+        """Route through the policy (serving/router.py — default:
+        prefix-affinity on the prompt's content-chain keys, falling back
+        to most free pool blocks / shortest queue / lowest id) and admit.
 
         A routed peer that fails DURING the submit (died, or hung past
         its deadline) does not lose the request: the handle mirrors the
         pristine clone before sending, so failing the peer replays the
         clone — with everything else it held — onto a survivor."""
-        i = self._route()
-        self._home[req.rid] = i
+        self.submit_to(self._route(prompt=req.prompt), req)
+
+    def submit_to(self, idx: int, req: Request):
+        """Admit on a SPECIFIC instance — the ingress routes on its own
+        thread (``route``) and hands (idx, req) to the pump, which must
+        not re-route; bookkeeping and failure handling stay here either
+        way."""
+        self._home[req.rid] = idx
         t_obs = time.monotonic()
         try:
-            self.instances[i].submit(req)
+            self.instances[idx].submit(req)
         except (TR.TransportClosed, TR.RpcTimeout) as e:
-            self._fail_instance(i, hung=isinstance(e, TR.RpcTimeout),
+            self._fail_instance(idx, hung=isinstance(e, TR.RpcTimeout),
                                 t_obs=t_obs)
 
-    def _route(self, among: Optional[List[int]] = None) -> int:
+    def route(self, prompt=None,
+              pending: Optional[Dict[int, int]] = None
+              ) -> Optional[RouteDecision]:
+        """Admission-checked routing for the ingress: the policy's full
+        verdict, or None when every alive instance is at ``max_queue``
+        (counting ``pending`` — accepted-but-not-yet-submitted requests)
+        — the HTTP 429 + Retry-After signal. Reads only cached gauges:
+        safe to call off the orchestrator's thread."""
+        alive = self._alive()
+        if not alive:
+            return None
+        return self.router.select(self.instances, alive, prompt=prompt,
+                                  pending=pending,
+                                  max_queue=self.max_queue)
+
+    def _route(self, among: Optional[List[int]] = None,
+               prompt=None) -> int:
         cands = among if among is not None else self._alive()
         assert cands, "no alive instance to route to"
-
-        def score(i: int):
-            h = self.instances[i]
-            return (-h.free_blocks(), h.queue_len(), i)
-        return min(cands, key=score)
+        return self.router.select(self.instances, cands,
+                                  prompt=prompt).idx
 
     # ------------------------------------------------------------ main loop
     def _step_all(self) -> List[Request]:
@@ -291,6 +340,8 @@ class Orchestrator:
         pendings: List = []
         self._fanout_t = time.monotonic()
         for i, h in enumerate(self.instances):
+            if i in self._retired:
+                continue       # deliberately reaped: nothing to step
             if not h.alive():
                 if i not in self._recovered:
                     # died silently since the last tick (nothing raised
@@ -405,7 +456,33 @@ class Orchestrator:
         self._tick += 1
         if self._tick % self.telemetry_every == 0:
             self.control_tick()
-        return self._drain_orphans() + fin
+        out = self._drain_orphans() + fin
+        self._collect_streams(out)
+        return out
+
+    # ------------------------------------------------------ token streams
+    def _collect_streams(self, fin: List[Request]):
+        """Fold every instance's per-step stream feed into the rid ->
+        tokens accumulator the ingress flushes from. Keeping the LONGEST
+        list seen makes the fold idempotent under migration overlap
+        (source and destination may both report the stream for a step)
+        and under crash replay (a restarted stream re-emits a prefix of
+        itself — token-identical replay means longest == truth).
+        Finished rids leave the accumulator: their full token lists
+        travel on the finished Request objects."""
+        for i in self._alive():
+            for rid, toks in self.instances[i].stream_view().items():
+                cur = self._stream_acc.get(rid)
+                if cur is None or len(toks) > len(cur):
+                    self._stream_acc[rid] = list(toks)
+        for r in fin:
+            self._stream_acc.pop(r.rid, None)
+
+    def stream_view(self) -> Dict[int, List[int]]:
+        """rid -> tokens generated so far for every LIVE stream, as of
+        the last step — consumers (the ingress pump) keep a per-rid
+        high-water mark and flush only the tail."""
+        return self._stream_acc
 
     def _drain_orphans(self) -> List[Request]:
         """Finishes collected inside migrate_requests_overlapped's
@@ -418,8 +495,9 @@ class Orchestrator:
         out: List[Request] = self._drain_orphans()
         steps = 0
         while steps < max_steps and any(
-                h.alive() and (h.queue_len() or h.active_rids())
-                for h in self.instances):
+                self.instances[i].queue_len()
+                or self.instances[i].active_rids()
+                for i in self._alive()):
             out.extend(self.step())
             steps += 1
         return out
@@ -437,6 +515,15 @@ class Orchestrator:
         util, memf, vac = [], [], []
         new_preempts = 0
         for i, h in enumerate(self.instances):
+            if i in self._retired:
+                # deliberately reaped: a None entry keeps the per-device
+                # lists index-aligned with the cluster Devices without
+                # poisoning the fleet vacancy averages forever (unlike a
+                # dead instance, a retired one is never coming back)
+                util.append(None)
+                memf.append(None)
+                vac.append(None)
+                continue
             if not h.alive():
                 util.append(1.0)
                 memf.append(1.0)
@@ -492,11 +579,16 @@ class Orchestrator:
             faults_injected=FLT.injected_total(),
             rpc_timeouts=self.faults.rpc_timeouts,
             quarantines=self.faults.quarantines,
-            respawns=self.faults.respawns)
+            respawns=self.faults.respawns,
+            pod_size=len(self._alive()))
 
     def _sync_cluster(self, snap: MetricsSnapshot):
         for d, u, m in zip(self.cluster.devices, snap.device_util,
                            snap.device_mem_frac):
+            if u is None:     # retired slot: full + idle, never a target
+                d.util_compute = 0.0
+                d.used_mem = d.mem_capacity
+                continue
             h = self.instances[d.device_id]
             pool = h.pool_bytes() if h.alive() else d.mem_capacity
             d.util_compute = u
@@ -530,7 +622,138 @@ class Orchestrator:
             if self._execute_scale_down() == 0:
                 break       # nothing left to move: the burst is done
         self.plan = self.controller.plan
-        return last
+        pod_action = self._pod_tick()
+        return last or pod_action
+
+    # -------------------------------------------------- pod elasticity
+    def pod_size(self) -> int:
+        """Alive, non-retired instances — the controller's population."""
+        return len(self._alive())
+
+    def _pod_tick(self) -> Optional[str]:
+        """Consult the controller's pod-level decision (armed by
+        ``worker_factory`` + ``pod_cfg``) and execute it: grow spawns a
+        worker through the factory; shrink drains the cheapest eligible
+        worker through the zero-drop migration path, then reaps it."""
+        if self.worker_factory is None or self.pod_cfg is None:
+            return None
+        target = self._shrink_target()
+        decision = self.controller.pod_tick(
+            self.pod_size(),
+            est_drain_s=target[1] if target else 0.0)
+        if decision == "grow":
+            idx = self.grow_pod()
+            return f"grow-pod[{idx}]" if idx is not None else None
+        if decision == "shrink" and target is not None:
+            idx = self.shrink_pod(target[0])
+            return f"shrink-pod[{idx}]" if idx is not None else None
+        return None
+
+    def grow_pod(self) -> Optional[int]:
+        """Spawn ONE fresh instance through the worker factory and admit
+        it to the plane: handle + telemetry + a cluster Device sized by
+        the same capacity formula as the launch-time fleet. The router
+        starts steering to it immediately (it has the most free blocks
+        in the pod); under an armed RPC deadline it gets the same
+        cold-start grace as a respawned replica. Returns the new index,
+        or None when the factory is absent or the pod is at its max."""
+        if self.worker_factory is None:
+            return None
+        if (self.pod_cfg is not None
+                and self.pod_size() >= self.pod_cfg.max_instances):
+            return None
+        idx = len(self.instances)
+        h = self.worker_factory(idx)
+        self.instances.append(h)
+        self.telemetry.append(h.telemetry)
+        self._preempt_seen.append(0)
+        cap = (h.pool_bytes()
+               + 2 * self.cfg.num_layers * self._ccfg.replica_size)
+        self.cluster.devices.append(
+            Device(idx, mem_capacity=cap, compute_flops=1.0))
+        if any(d != 1 for d in self.plan.p):
+            h.apply_plan(list(self.plan.p))   # adopt the live plan
+        if self.rpc_deadline is not None:
+            # cold-start grace (same as respawn): arm the deadline only
+            # after its first completed ACTIVE step
+            h.set_rpc_deadline(None)
+            self._grace.add(idx)
+        self._grown_at[idx] = time.monotonic()
+        self.pod_log.append({"event": "grow", "instance": idx,
+                             "pod_size": self.pod_size()})
+        return idx
+
+    def _shrink_candidates(self) -> List[int]:
+        """Instances eligible for reaping: alive, warmed up (not in
+        cold-start grace — flap protection: a grow immediately followed
+        by a shrink must not orphan a BOOTING worker), and older than
+        the flap-guard window."""
+        now = time.monotonic()
+        guard = self.pod_cfg.flap_guard_s if self.pod_cfg else 0.0
+        return [i for i in self._alive()
+                if i not in self._grace
+                and now - self._grown_at.get(i, float("-inf")) >= guard]
+
+    def _shrink_target(self) -> Optional[tuple]:
+        """(index, estimated drain seconds) of the cheapest eligible
+        shrink victim — the cost the controller's Table-2-style gate
+        prices — or None when the pod cannot shrink."""
+        floor = self.pod_cfg.min_instances if self.pod_cfg else 1
+        if len(self._alive()) <= max(floor, 1):
+            return None
+        cands = self._shrink_candidates()
+        if not cands:
+            return None
+        idx = min(cands, key=lambda i: (self.instances[i].active_count(),
+                                        self.instances[i].queue_len(),
+                                        -i))
+        h = self.instances[idx]
+        per_block = h.pool_bytes() / max(h.n_blocks, 1)
+        est = MIG.estimate_cost(h.blocks_in_use() * per_block,
+                                self.link_bandwidth)
+        return idx, est
+
+    def shrink_pod(self, idx: Optional[int] = None) -> Optional[int]:
+        """Drain instance ``idx`` (default: the cheapest eligible
+        victim) through the existing zero-drop path — queue handoff,
+        then overlapped KV-block migration of its active streams — and
+        RETIRE it: close the handle, keep the index slot dark forever
+        (indices are never reused; _home/_respawn/_evicted are
+        idx-keyed). Returns the reaped index, or None when the pod is at
+        its floor or the victim is ineligible (booting / flap-guarded).
+        """
+        floor = self.pod_cfg.min_instances if self.pod_cfg else 1
+        if len(self._alive()) <= max(floor, 1):
+            return None
+        cands = self._shrink_candidates()
+        if idx is None:
+            if not cands:
+                return None
+            idx = min(cands,
+                      key=lambda i: (self.instances[i].active_count(),
+                                     self.instances[i].queue_len(), -i))
+        elif idx not in cands:
+            return None
+        self.drain_instance(idx)
+        self._retire_instance(idx)
+        return idx
+
+    def _retire_instance(self, idx: int):
+        """Take a DRAINED instance out of the plane for good. Also
+        registered in ``_recovered``: a deliberate removal must never be
+        mistaken for a crash (its streams were migrated, not lost — a
+        replay would duplicate them)."""
+        self._retired.add(idx)
+        self._recovered.add(idx)
+        self._grace.discard(idx)
+        self._respawn.pop(idx, None)   # a reaped slot is never respawned
+        self._grown_at.pop(idx, None)
+        try:
+            self.instances[idx].close()
+        except TR.TransportError:
+            pass
+        self.pod_log.append({"event": "shrink", "instance": idx,
+                             "pod_size": self.pod_size()})
 
     def _on_plan_change(self, plan: PlacementPlan, batch_size: int):
         """Controller callback: push the new replication degrees to every
@@ -830,7 +1053,7 @@ class Orchestrator:
                 survivors = self._alive()
                 assert survivors, \
                     "every instance died: nothing to recover onto"
-                j = self._route(survivors)
+                j = self._route(survivors, prompt=req.prompt)
                 t_sub = time.monotonic()
                 try:
                     self.instances[j].submit(req)
@@ -862,7 +1085,7 @@ class Orchestrator:
         pol = self.respawn_policy
         h = self.instances[idx]
         if (pol is None or not getattr(h, "respawnable", False)
-                or idx in self._evicted):
+                or idx in self._evicted or idx in self._retired):
             return
         st = self._respawn.setdefault(
             idx, {"failures": deque(), "attempts": 0, "due": None,
@@ -970,6 +1193,10 @@ class Orchestrator:
             "faults": dict(self.faults.as_dict(),
                            injected=FLT.injected_total()),
             "respawn_log": list(self.respawn_log),
+            "pod": {"size": self.pod_size(),
+                    "retired": sorted(self._retired),
+                    "grown": sorted(self._grown_at),
+                    "log": list(self.pod_log)},
         }
 
     def control_plane_stats(self) -> Dict:

@@ -74,7 +74,12 @@ class EngineServer:
     def step(self):
         done = INS.timed_step(self.engine, self.telemetry)
         return {"finished": done, "telemetry": self.telemetry.to_state(),
-                "info": self.info()}
+                "info": self.info(),
+                # full per-stream token lists each step (tiny at decode
+                # rates; idempotent under migration/replay) — the ingress
+                # streaming feed rides the reply, no extra RPC
+                "streams": {int(r): list(t) for r, t
+                            in self.engine.stream_progress().items()}}
 
     def apply_plan(self, p: List[int]):
         self.engine.apply_plan(list(p))
@@ -106,7 +111,11 @@ class EngineServer:
                 "max_batch": e.max_batch,
                 "pool_bytes": e.pstate.pool_bytes(),
                 "preempt_count": e.preempt_count,
-                "prefix_stats": e.prefix_stats()}
+                "prefix_stats": e.prefix_stats(),
+                "block_size": e.block_size,
+                # sorted list (sets aren't msgpack-able); the proxy
+                # rebuilds the set on read
+                "prefix_keys": sorted(e.prefix_keys())}
 
     # ---- migration (each blocks until device state is real — the reply
     # frame doubles as the transfer-complete barrier — and piggybacks
@@ -240,6 +249,7 @@ class EngineProxy(InstanceHandle):
                  **engine_kw):
         self.telemetry = EngineTelemetry()
         self._inflight: Dict[int, Request] = {}   # rid -> pristine clone
+        self._streams: Dict[int, List[int]] = {}  # last step's stream feed
         self._dead = False
         self.process = None
         self.endpoint = endpoint
@@ -368,6 +378,8 @@ class EngineProxy(InstanceHandle):
         cache, retire finished requests from the inflight mirror."""
         self.telemetry.load_state(reply["telemetry"])
         self._info = reply["info"]
+        self._streams = {int(r): list(t) for r, t
+                         in reply.get("streams", {}).items()}
         done = reply["finished"]
         for r in done:
             self._inflight.pop(r.rid, None)
@@ -427,6 +439,16 @@ class EngineProxy(InstanceHandle):
 
     def prefix_stats(self) -> dict:
         return self._info["prefix_stats"]
+
+    @property
+    def block_size(self) -> int:
+        return self._info.get("block_size", 0)
+
+    def prefix_keys(self) -> set:
+        return set(self._info.get("prefix_keys", ()))
+
+    def stream_view(self) -> Dict[int, List[int]]:
+        return self._streams
 
     # -------------------------------------------------------- migration
     def _unwrap(self, reply: dict):

@@ -77,5 +77,20 @@ def test_registry_covers_every_emitting_bench():
     # new bench starts emitting
     assert set(REQUIRED_KEYS) == {
         "BENCH_chaos.json", "BENCH_distributed.json",
-        "BENCH_module_scaling.json", "BENCH_paged_engine.json",
-        "BENCH_prefix_sharing.json"}
+        "BENCH_ingress.json", "BENCH_module_scaling.json",
+        "BENCH_paged_engine.json", "BENCH_prefix_sharing.json"}
+
+
+def test_ingress_report_keys_match_the_emitter(tmp_path):
+    # the keys the acceptance criteria read (routing gate, elasticity
+    # capacity gain, token identity, drop count) are required
+    assert set(REQUIRED_KEYS["BENCH_ingress.json"]) == {
+        "config", "streaming", "routing", "elasticity",
+        "token_identical", "dropped_requests"}
+    path = _write(tmp_path, "BENCH_ingress.json",
+                  {"smoke": True, "config": {}, "streaming": {},
+                   "routing": {}, "elasticity": {}})
+    problems = check_report(path, smoke_run=True)
+    assert sorted(problems) == [
+        "BENCH_ingress.json: missing required key 'dropped_requests'",
+        "BENCH_ingress.json: missing required key 'token_identical'"]

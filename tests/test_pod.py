@@ -187,3 +187,221 @@ def test_pod_deadline_reaps_spawned_but_unadopted_children(monkeypatch):
     assert all(p.killed and p.joined for p in reaped)
     assert not any(p.killed for p in _FakeProc._all
                    if id(p) in adopted)
+
+
+# =================================================== pod elasticity (§11)
+# Controller decision logic on synthetic snapshots (cheap), then the
+# orchestrator's grow/shrink MECHANISM on real engines: a runtime-spawned
+# worker takes routed traffic, a drained worker hands its streams off
+# token-identically, and the flap guard keeps a booting worker alive.
+import dataclasses
+import time as _time
+
+from repro.core.cluster import Cluster
+from repro.core.controller import (Controller, ControllerConfig,
+                                   PodElasticityConfig)
+from repro.core.monitor import MetricsSnapshot, Monitor
+from repro.core.plan import PlacementPlan
+
+
+def _pod_ctrl(pcfg=None):
+    mon = Monitor()
+    return Controller(ControllerConfig(), Cluster.homogeneous(2),
+                      PlacementPlan.initial(4), mon,
+                      pod_cfg=pcfg or PodElasticityConfig()), mon
+
+
+def _snap(vac, queue=0, t=0.0):
+    return MetricsSnapshot(t=t, queue_len=queue,
+                           block_vacancy=[vac, vac],
+                           device_util=[1 - vac, 1 - vac])
+
+
+def test_pod_tick_grow_needs_patience_then_cooldown():
+    ctrl, mon = _pod_ctrl(PodElasticityConfig(patience=2,
+                                              cooldown_ticks=3))
+    mon.record(_snap(vac=0.05))               # pools nearly full
+    assert ctrl.pod_tick(pod_size=2) is None  # vote 1 of 2
+    assert ctrl.pod_tick(pod_size=2) == "grow"
+    assert any(a.startswith("grow-pod") for a in ctrl.log)
+    # the action re-armed the pod cooldown: pressure is ignored for 3
+    for _ in range(3):
+        assert ctrl.pod_tick(pod_size=2) is None
+    assert ctrl.pod_tick(pod_size=2) is None  # cooldown over: vote 1
+    assert ctrl.pod_tick(pod_size=2) == "grow"
+
+
+def test_pod_tick_backlog_pressure_and_vote_reset():
+    ctrl, mon = _pod_ctrl(PodElasticityConfig(patience=2))
+    mon.record(_snap(vac=0.5, queue=20))      # backlog 10/instance > 4
+    assert ctrl.pod_tick(pod_size=2) is None
+    mon.record(_snap(vac=0.5, queue=0))       # neutral tick RESETS votes
+    assert ctrl.pod_tick(pod_size=2) is None
+    mon.record(_snap(vac=0.5, queue=20))
+    assert ctrl.pod_tick(pod_size=2) is None  # back to vote 1
+    assert ctrl.pod_tick(pod_size=2) == "grow"
+
+
+def test_pod_tick_respects_size_bounds():
+    ctrl, mon = _pod_ctrl(PodElasticityConfig(patience=1,
+                                              max_instances=2,
+                                              min_instances=2))
+    mon.record(_snap(vac=0.02))
+    assert ctrl.pod_tick(pod_size=2) is None  # at the ceiling: no grow
+    mon.record(_snap(vac=0.99, queue=0))
+    assert ctrl.pod_tick(pod_size=2) is None  # at the floor: no shrink
+
+
+def test_pod_tick_shrink_gated_by_drain_cost():
+    pcfg = PodElasticityConfig(patience=2, max_drain_s=1.0)
+    ctrl, mon = _pod_ctrl(pcfg)
+    mon.record(_snap(vac=0.95, queue=0))      # idle pod
+    assert ctrl.pod_tick(pod_size=2) is None
+    # Table-2 cost gate: too expensive to drain -> skipped, logged
+    assert ctrl.pod_tick(pod_size=2, est_drain_s=9.0) is None
+    assert any("shrink-pod-skipped" in a for a in ctrl.log)
+    assert ctrl.pod_tick(pod_size=2) is None  # votes were consumed
+    assert ctrl.pod_tick(pod_size=2, est_drain_s=0.1) == "shrink"
+    assert any(a.startswith("shrink-pod[") for a in ctrl.log)
+
+
+# ------------------------------------------------ live grow/shrink (slowish)
+import jax
+import numpy as np
+import pytest as _pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.engine import Engine, Request
+from repro.serving.orchestrator import Orchestrator
+from repro.launch.pod import make_worker_factory
+
+ENG_KW = dict(max_batch=2, max_len=64, block_size=8)
+
+
+@_pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    return cfg, T.init_params(cfg, jax.random.PRNGKey(0), "float32")
+
+
+def _elastic_orch(cfg, params, n=1, **pod_kw):
+    pod_kw.setdefault("max_instances", 4)
+    pod_kw.setdefault("flap_guard_s", 0.3)
+    return Orchestrator(cfg, params, n_instances=n,
+                        worker_factory=make_worker_factory(cfg, params,
+                                                           **ENG_KW),
+                        pod_cfg=PodElasticityConfig(**pod_kw), **ENG_KW)
+
+
+def _reqs(n, max_new=6, plen=12):
+    rng = np.random.default_rng(3)
+    return [Request(rid=100 + i,
+                    prompt=rng.integers(2, 1000, size=plen)
+                    .astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+
+
+def _solo_reference(cfg, params, requests):
+    out = {}
+    for r in requests:
+        e = Engine(cfg, params, max_batch=1, cache_kind="paged",
+                   max_len=64, block_size=8)
+        e.submit(dataclasses.replace(
+            r, generated=[], slot=None, submit_time=0.0,
+            first_token_time=None, finish_time=None, preemptions=0))
+        out[r.rid] = e.run_until_done()[0].generated
+    return out
+
+
+def test_runtime_grown_worker_takes_routed_traffic(tiny):
+    cfg, params = tiny
+    orch = _elastic_orch(cfg, params, n=1)
+    try:
+        warm, req = _reqs(2, max_new=16)
+        orch.submit(warm)
+        orch.step()                           # warm holds blocks on 0
+        idx = orch.grow_pod()
+        assert idx == 1 and orch.pod_size() == 2
+        assert orch.pod_log and orch.pod_log[-1]["event"] == "grow"
+        # the fleet snapshot immediately covers the new worker
+        snap = orch.snapshot()
+        assert len(snap.block_vacancy) == 2
+        assert snap.pod_size == 2
+        # vacancy routing prefers the empty newcomer over the busy
+        # original (warm's stream is holding pool blocks on instance 0)
+        d = orch.route(prompt=req.prompt)
+        assert d.idx == 1 and d.reason == "vacancy"
+        orch.submit_to(d.idx, req)
+        orch.run_until_done()
+        assert {r.rid for r in orch.finished} == {warm.rid, req.rid}
+        assert orch.instances[1].telemetry.total_finished == 1
+        assert orch.dropped == 0
+    finally:
+        orch.close()
+
+
+def test_shrink_hands_streams_off_token_identically(tiny):
+    """ISSUE-8 acceptance: draining a worker mid-decode through
+    shrink_pod moves its streams to the survivor with ZERO drops and
+    token-identical output vs the solo-engine oracle; the retired slot
+    goes dark (None telemetry, never stepped, never reused)."""
+    cfg, params = tiny
+    orch = _elastic_orch(cfg, params, n=2, min_instances=1)
+    try:
+        requests = _reqs(4, max_new=8)
+        for r in requests:
+            orch.submit(r)
+        for _ in range(3):                    # get streams mid-flight
+            orch.step()
+        assert any(orch.instances[1].active_rids())
+        assert orch.shrink_pod(1) == 1
+        assert 1 in orch._retired and orch.pod_size() == 1
+        orch.run_until_done()
+        assert len(orch.finished) == len(requests) and orch.dropped == 0
+        ref = _solo_reference(cfg, params, requests)
+        for r in orch.finished:
+            assert list(r.generated) == list(ref[r.rid]), r.rid
+        # retired slot: dark in telemetry, skipped by routing/stepping
+        snap = orch.snapshot()
+        assert snap.block_vacancy[1] is None
+        assert snap.device_util[1] is None
+        assert snap.pod_size == 1
+        assert orch.route(prompt=requests[0].prompt).idx == 0
+        orch.step()                           # must not touch the corpse
+        # ...and never reused: the next grow takes a FRESH index
+        assert orch.grow_pod() == 2
+        assert 1 in orch._retired
+    finally:
+        orch.close()
+
+
+def test_flap_guard_protects_booting_worker(tiny):
+    cfg, params = tiny
+    orch = _elastic_orch(cfg, params, n=1, flap_guard_s=0.4)
+    try:
+        idx = orch.grow_pod()
+        assert idx == 1
+        # inside the guard window the newcomer is not a shrink target:
+        # an explicit request for it is refused, and the auto-picked
+        # victim can only be the OLD worker
+        assert orch.shrink_pod(idx) is None
+        assert orch._shrink_target()[0] == 0
+        assert orch.pod_size() == 2
+        _time.sleep(0.45)
+        assert orch.shrink_pod(idx) == 1
+        assert orch.pod_size() == 1
+    finally:
+        orch.close()
+
+
+def test_worker_factory_builds_local_paged_instances(tiny):
+    cfg, params = tiny
+    factory = make_worker_factory(cfg, params, **ENG_KW)
+    h = factory(0)
+    try:
+        assert h.block_size == 8
+        assert h.free_blocks() > 0 and h.alive()
+        assert h.prefix_keys() == set()
+    finally:
+        h.close()

@@ -1,0 +1,208 @@
+"""Routing policies (serving/router.py): chain-affinity selection,
+vacancy fallback order, admission backpressure, determinism — all on
+fake handles (the policy reads nothing but the handle gauge surface) —
+plus the tier-2 pod-wide acceptance: same-prefix tenants streaming
+through the REAL ingress land on their chain-holding instance >= 90% of
+the time after warmup."""
+import numpy as np
+import pytest
+
+from repro.serving.router import (PrefixAffinityRouter, RoundRobinRouter,
+                                  RouteDecision, VacancyRouter,
+                                  chain_hexkeys)
+
+BS = 8
+
+
+class FakeHandle:
+    """Just the gauges the policies read."""
+
+    def __init__(self, free=100, queue=0, keys=(), block_size=BS):
+        self._free = free
+        self._queue = queue
+        self._keys = set(keys)
+        self.block_size = block_size
+
+    def free_blocks(self):
+        return self._free
+
+    def queue_len(self):
+        return self._queue
+
+    def prefix_keys(self):
+        return self._keys
+
+
+def _prompt(n_tokens, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(2, 1000, size=n_tokens).astype(np.int32)
+
+
+def _holder_of(prompt, n_blocks, block_size=BS, **kw):
+    """A handle whose resident set covers the prompt's first n_blocks."""
+    keys = chain_hexkeys(prompt, block_size)[:n_blocks]
+    return FakeHandle(keys=keys, block_size=block_size, **kw)
+
+
+# ------------------------------------------------------------ chain keys
+def test_chain_hexkeys_one_per_full_block_and_content_dependent():
+    p = _prompt(3 * BS + 5)
+    keys = chain_hexkeys(p, BS)
+    assert len(keys) == 3                      # partial tail block: no key
+    # chained: same first block -> same first key; divergence at block 2
+    q = p.copy()
+    q[BS] += 1
+    keys_q = chain_hexkeys(q, BS)
+    assert keys_q[0] == keys[0] and keys_q[1] != keys[1]
+    # ...and the chain poisons everything downstream of the divergence
+    assert keys_q[2] != keys[2]
+    assert chain_hexkeys(p, 0) == [] and chain_hexkeys(None, BS) == []
+
+
+# ------------------------------------------------------- affinity policy
+def test_affinity_picks_the_chain_holder():
+    p = _prompt(4 * BS)
+    handles = [FakeHandle(free=500),           # emptier, but no match
+               _holder_of(p, 4, free=10)]
+    d = PrefixAffinityRouter().select(handles, [0, 1], prompt=p)
+    assert d == RouteDecision(1, matched_blocks=4, reason="prefix")
+
+
+def test_affinity_longest_leading_run_wins():
+    p = _prompt(4 * BS)
+    keys = chain_hexkeys(p, BS)
+    handles = [_holder_of(p, 2),
+               _holder_of(p, 3),
+               # holds MORE keys but not the leading ones: a later block
+               # without its predecessors certifies nothing
+               FakeHandle(keys=keys[1:4])]
+    d = PrefixAffinityRouter().select(handles, [0, 1, 2], prompt=p)
+    assert (d.idx, d.matched_blocks, d.reason) == (1, 3, "prefix")
+
+
+def test_affinity_tie_breaks_by_vacancy_order():
+    p = _prompt(2 * BS)
+    handles = [_holder_of(p, 2, free=10),
+               _holder_of(p, 2, free=50),      # same match, more room
+               _holder_of(p, 2, free=50, queue=3)]
+    d = PrefixAffinityRouter().select(handles, [0, 1, 2], prompt=p)
+    assert (d.idx, d.reason) == (1, "prefix")
+
+
+def test_min_match_floor_falls_through_to_vacancy():
+    p = _prompt(2 * BS)
+    handles = [FakeHandle(free=500), _holder_of(p, 1, free=10)]
+    d = PrefixAffinityRouter(min_match=2).select(handles, [0, 1], prompt=p)
+    assert (d.idx, d.reason) == (0, "vacancy")
+    d = PrefixAffinityRouter(min_match=1).select(handles, [0, 1], prompt=p)
+    assert (d.idx, d.reason) == (1, "prefix")
+
+
+def test_no_match_routes_by_vacancy_then_queue_then_index():
+    handles = [FakeHandle(free=10, queue=0),
+               FakeHandle(free=50, queue=9),   # most room wins regardless
+               FakeHandle(free=50, queue=9)]
+    d = PrefixAffinityRouter().select(handles, [0, 1, 2],
+                                      prompt=_prompt(BS, seed=7))
+    assert (d.idx, d.reason) == (1, "vacancy")
+    # pending charges count like queue: tip the tie to idx 2
+    d = VacancyRouter().select(handles, [1, 2], pending={1: 1})
+    assert d.idx == 2
+
+
+def test_router_is_deterministic():
+    p = _prompt(3 * BS)
+    handles = [FakeHandle(free=40), _holder_of(p, 3, free=40),
+               FakeHandle(free=40)]
+    router = PrefixAffinityRouter()
+    picks = {router.select(handles, [0, 1, 2], prompt=p).idx
+             for _ in range(10)}
+    assert picks == {1}
+
+
+def test_heterogeneous_block_sizes_hash_per_instance():
+    p = _prompt(4 * BS)
+    # instance 1 runs 2x the block size: its chain keys differ, and the
+    # router must score it against ITS hashing, not instance 0's
+    big = _holder_of(p, 2, block_size=2 * BS, free=10)
+    handles = [_holder_of(p, 1, free=500), big]
+    d = PrefixAffinityRouter().select(handles, [0, 1], prompt=p)
+    assert (d.idx, d.matched_blocks) == (1, 2)
+
+
+# --------------------------------------------------- admission back-off
+def test_max_queue_sheds_and_pending_counts():
+    handles = [FakeHandle(queue=2), FakeHandle(queue=1)]
+    r = PrefixAffinityRouter()
+    assert r.select(handles, [0, 1], max_queue=2).idx == 1
+    # the accepted-but-unpumped charge fills the last seat -> None = 429
+    assert r.select(handles, [0, 1], pending={1: 1}, max_queue=2) is None
+    assert VacancyRouter().select(handles, [0, 1], pending={1: 1},
+                                  max_queue=2) is None
+    assert RoundRobinRouter().select(handles, [0, 1], pending={1: 1},
+                                     max_queue=2) is None
+
+
+def test_round_robin_rotates_over_admissible():
+    handles = [FakeHandle(), FakeHandle(queue=9), FakeHandle()]
+    rr = RoundRobinRouter()
+    picks = [rr.select(handles, [0, 1, 2], max_queue=5).idx
+             for _ in range(4)]
+    assert picks == [0, 2, 0, 2]               # full instance 1 skipped
+
+
+# ------------------------------------------------- tier-2 e2e acceptance
+@pytest.mark.slow
+def test_pod_wide_affinity_through_ingress():
+    """ISSUE-8 acceptance: distinct tenants sharing per-tenant prompt
+    prefixes, streamed through the REAL HTTP ingress over a 2-instance
+    pod — after each tenant's first (cold) request, >= 90% of its
+    repeats must route to the chain-holding instance."""
+    import json
+    import socket
+
+    import jax
+
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    from repro.serving.ingress import Ingress
+    from repro.serving.orchestrator import Orchestrator
+
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=4,
+                        max_len=96, block_size=8, prefix_sharing=True)
+    ing = Ingress(orch).start()
+    try:
+        def complete(prompt):
+            s = socket.create_connection(("127.0.0.1", ing.port),
+                                         timeout=60)
+            body = json.dumps({"prompt": prompt,
+                               "max_tokens": 2}).encode()
+            s.sendall(b"POST /v1/completions HTTP/1.1\r\nHost: t\r\n"
+                      b"Content-Length: %d\r\n\r\n" % len(body) + body)
+            data = b""
+            while chunk := s.recv(65536):
+                data += chunk
+            s.close()
+            return json.loads(data.split(b"\r\n\r\n", 1)[1])
+
+        tenants = [[7 + t] * 40 for t in range(4)]  # 5 full blocks each
+        repeats, hits = 0, 0
+        homes = {}
+        for round_i in range(6):
+            for t, prefix in enumerate(tenants):
+                reply = complete(prefix + [900 + round_i, 900 + t])
+                routing = reply["routing"]
+                if round_i == 0:
+                    homes[t] = routing["instance"]  # cold: vacancy pick
+                    continue
+                repeats += 1
+                if (routing["reason"] == "prefix"
+                        and routing["instance"] == homes[t]):
+                    hits += 1
+        assert repeats == 20
+        assert hits / repeats >= 0.9, (hits, repeats, homes)
+    finally:
+        ing.close()
+        orch.close()

@@ -1,0 +1,180 @@
+"""Property tests for the token-budget scheduler's invariants
+(serving/scheduler.py) over GENERATED engine states and multi-step
+traces:
+
+* decode-never-stalled — every active slot is charged exactly one token
+  before any prefill work, no matter the queue pressure;
+* budget never exceeded — grants fit in ``budget - n_decode`` (decode
+  itself may exceed a tiny budget by design: running streams never skip);
+* block-aligned chunks — a non-final grant is a multiple of the block
+  size, so a persisted prefill cursor always sits on a block boundary;
+* FIFO admission, slot accounting, and liveness (a trace drains).
+
+The scheduler is pure policy over a narrow engine surface, so the tests
+drive it with a fake engine — no JAX, no pools. Runs under the real
+``hypothesis`` package when importable (the nightly CI job) and under
+tests/_hypothesis_stub.py otherwise (tier-1): only ``given``/
+``settings`` and the integers/floats/lists strategies are used.
+"""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+
+class FakeReq:
+    _n = 0
+
+    def __init__(self, total):
+        FakeReq._n += 1
+        self.rid = FakeReq._n
+        self.total = total
+        self.prefill_pos = 0
+
+
+class FakeEngine:
+    """The exact surface TokenBudgetScheduler.plan reads."""
+
+    def __init__(self, max_batch, n_active, prefilling, queue):
+        self.max_batch = max_batch
+        self.active = {s: FakeReq(1) for s in range(n_active)}
+        self.prefilling = {}
+        self._admit_order = list(self.active)
+        slot = n_active
+        for total, pos in prefilling:
+            r = FakeReq(total)
+            r.prefill_pos = pos
+            self.prefilling[slot] = r
+            self._admit_order.append(slot)
+            slot += 1
+        self.queue = [FakeReq(t) for t in queue]
+
+    def _free_slots(self):
+        used = len(self.active) + len(self.prefilling)
+        return list(range(max(0, self.max_batch - used)))
+
+    def prefill_total(self, req):
+        return req.total
+
+
+def _mk(budget, align, n_active, prefill_totals, queue_totals):
+    from repro.serving.scheduler import TokenBudgetScheduler
+    # mid-prefill cursors sit on block boundaries (the invariant under
+    # test preserves it; the generator must establish it)
+    prefilling = []
+    for i, t in enumerate(prefill_totals):
+        pos = min((i % 3) * align, max(t - 1, 0))
+        pos -= pos % align
+        prefilling.append((t, pos))
+    eng = FakeEngine(n_active + len(prefilling) + 2, n_active,
+                     prefilling, queue_totals)
+    return TokenBudgetScheduler(budget, chunk_align=align), eng
+
+
+WORKLOADS = dict(
+    budget=st.integers(1, 256),
+    align=st.integers(1, 32),
+    n_active=st.integers(0, 12),
+    prefill_totals=st.lists(st.integers(1, 300), min_size=0, max_size=6),
+    queue_totals=st.lists(st.integers(1, 300), min_size=0, max_size=8),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(**WORKLOADS)
+def test_single_step_invariants(budget, align, n_active, prefill_totals,
+                                queue_totals):
+    sched, eng = _mk(budget, align, n_active, prefill_totals,
+                     queue_totals)
+    plan = sched.plan(eng)
+
+    # decode never stalled: one token per active slot, charged first
+    assert plan.n_decode == len(eng.active)
+    # budget never exceeded by grants (decode itself may overflow a tiny
+    # budget — by design)
+    granted = sum(g.n_tokens for g in plan.grants)
+    assert granted <= max(0, budget - plan.n_decode)
+    if plan.n_decode <= budget:
+        assert plan.packed <= budget
+
+    fresh = [g for g in plan.grants if g.slot is None]
+    for g in plan.grants:
+        assert g.n_tokens >= 1
+        total = eng.prefill_total(g.req)
+        assert g.start + g.n_tokens <= total
+        assert g.final == (g.start + g.n_tokens == total)
+        # block-aligned chunks: a NON-final grant ends on a boundary
+        if not g.final:
+            assert g.n_tokens % align == 0
+            assert (g.start + g.n_tokens) % align == 0
+        if g.slot is None:
+            assert g.start == 0
+        else:
+            assert g.start == eng.prefilling[g.slot].prefill_pos
+
+    # fresh admissions: FIFO prefix of the queue, never past free slots,
+    # at most the LAST one partial
+    assert [g.req.rid for g in fresh] == \
+        [r.rid for r in eng.queue[:len(fresh)]]
+    assert len(fresh) <= len(eng._free_slots())
+    assert sum(1 for g in fresh if not g.final) <= 1
+    if fresh and not fresh[-1].final:
+        assert all(g.final for g in fresh[:-1])
+
+    # continuations come oldest-first, before any fresh admission
+    cont_slots = [g.slot for g in plan.grants if g.slot is not None]
+    order = [s for s in eng._admit_order if s in eng.prefilling]
+    assert cont_slots == [s for s in order if s in cont_slots]
+    assert plan.grants[:len(cont_slots)] == \
+        [g for g in plan.grants if g.slot is not None]
+
+
+@settings(max_examples=25, deadline=None)
+@given(budget=st.integers(8, 128), align=st.integers(1, 16),
+       prefill_totals=st.lists(st.integers(1, 200), min_size=1,
+                               max_size=5),
+       queue_totals=st.lists(st.integers(1, 200), min_size=0,
+                             max_size=5))
+def test_trace_drains_with_invariants_held(budget, align, prefill_totals,
+                                           queue_totals):
+    """Liveness: executing plans step after step (decodes retire after 4
+    tokens, finals enter decode) drains every request, with the cursor
+    staying block-aligned the whole way. Budget >= align, as in any real
+    engine (token_budget >= block_size) — a sub-block budget cannot
+    grant a first chunk at all."""
+    budget = max(budget, align)
+    sched, eng = _mk(budget, align, 0, [],
+                     prefill_totals + queue_totals)
+    decoded = {}
+    done = set()
+    next_slot = 1000
+    for step in range(10_000):
+        if not (eng.active or eng.prefilling or eng.queue):
+            break
+        plan = sched.plan(eng)
+        assert plan.n_decode == len(eng.active)
+        for slot, r in list(eng.active.items()):
+            decoded[r.rid] = decoded.get(r.rid, 0) + 1
+            if decoded[r.rid] >= 4:
+                done.add(r.rid)
+                del eng.active[slot]
+                eng._admit_order.remove(slot)
+        progressed = bool(plan.n_decode)
+        for g in plan.grants:
+            slot = g.slot
+            if slot is None:                  # engine pops the head
+                assert eng.queue and eng.queue[0] is g.req
+                eng.queue.pop(0)
+                slot = next_slot = next_slot + 1
+                eng.prefilling[slot] = g.req
+                eng._admit_order.append(slot)
+            assert g.req.prefill_pos == g.start
+            g.req.prefill_pos += g.n_tokens
+            if not g.final:
+                assert g.req.prefill_pos % align == 0
+            else:
+                assert g.req.prefill_pos == g.req.total
+                del eng.prefilling[slot]
+                eng.active[slot] = g.req
+            progressed = True
+        assert progressed, "scheduler stalled with work outstanding"
+    assert not (eng.active or eng.prefilling or eng.queue)
+    assert len(done) == len(prefill_totals) + len(queue_totals)
