@@ -49,6 +49,14 @@ REQUIRED_KEYS = {
         "token_identical",
         "dropped_requests",
     ],
+    "BENCH_observe.json": [
+        "config",
+        "tracing_off",
+        "tracing_on",
+        "tokens_per_s_ratio",
+        "overhead_ok",
+        "traces_complete",
+    ],
     "BENCH_module_scaling.json": [
         "config",
         "scale_up",

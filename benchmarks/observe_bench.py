@@ -1,0 +1,144 @@
+"""Tracing-overhead benchmark: the observability plane's acceptance
+gate.
+
+Runs the SAME mixed trace as benchmarks/paged_engine_bench.py (short
+decode streams with long prompts landing mid-stream — the workload
+where per-step bookkeeping would hurt most) through the orchestrator
+twice: tracing off (``tracer=None`` — every engine span hook is a None
+check, the documented zero-cost path) and tracing on (a live Tracer,
+every request traced end to end, every finished tree structurally
+validated). The acceptance criterion is the throughput ratio
+on/off >= 0.98: full tracing may cost at most 2%.
+
+Emits ``benchmarks/BENCH_observe.json`` (registered in check_bench.py).
+"""
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._smoke import is_smoke, pick
+from benchmarks.paged_engine_bench import (BLOCK_SIZE, MAX_BATCH, MAX_LEN,
+                                           MIXED_LONG_PROMPT, MIXED_N_LONG,
+                                           MIXED_SHORT_NEW, POOL_BLOCKS,
+                                           PROMPT_LEN, TOKEN_BUDGET)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_observe.json")
+
+REPS = pick(3, 1)        # median over reps: wall-time noise ~10% per run
+MIN_RATIO = 0.98         # tracing may cost at most 2% throughput
+
+
+def _requests(cfg, seed=0):
+    from repro.serving.engine import Request
+    rng = np.random.default_rng(seed)
+    shorts = [Request(rid=i,
+                      prompt=rng.integers(2, cfg.vocab_size,
+                                          size=PROMPT_LEN).astype(np.int32),
+                      max_new_tokens=MIXED_SHORT_NEW)
+              for i in range(MAX_BATCH - 1)]
+    longs = [Request(rid=100 + i,
+                     prompt=rng.integers(2, cfg.vocab_size,
+                                         size=MIXED_LONG_PROMPT)
+                     .astype(np.int32),
+                     max_new_tokens=8)
+             for i in range(MIXED_N_LONG)]
+    return shorts, longs
+
+
+def _run(cfg, params, traced, seed=7):
+    from repro.serving import observe as OBS
+    from repro.serving.orchestrator import Orchestrator
+    tracer = OBS.Tracer() if traced else None
+    orch = Orchestrator(cfg, params, n_instances=1, max_batch=MAX_BATCH,
+                        max_len=MAX_LEN, block_size=BLOCK_SIZE,
+                        n_blocks=POOL_BLOCKS, token_budget=TOKEN_BUDGET,
+                        telemetry_every=10_000, tracer=tracer)
+    shorts, longs = _requests(cfg, seed=seed)
+    t0 = time.perf_counter()
+    for r in shorts:
+        if tracer is not None:
+            tracer.begin(r.rid, prompt_tokens=len(r.prompt))
+        orch.submit(r)
+    orch.step()                      # shorts prefill + start decoding
+    for r in longs:                  # long prompts land mid-stream
+        if tracer is not None:
+            tracer.begin(r.rid, prompt_tokens=len(r.prompt))
+        orch.submit(r)
+    orch.run_until_done()
+    wall = time.perf_counter() - t0
+    toks = sum(len(r.generated) for r in shorts + longs)
+    complete = True
+    if tracer is not None:
+        # the overhead number only counts if the traces it paid for are
+        # actually whole: every request closed one connected span tree
+        complete = (len(tracer.finished) == len(shorts) + len(longs)
+                    and tracer.dropped_spans == 0
+                    and all(OBS.span_tree_ok(rec["spans"]) is None
+                            for rec in tracer.finished))
+    out = {r.rid: list(r.generated) for r in shorts + longs}
+    orch.close()
+    return {"tokens": toks, "wall_s": wall,
+            "tokens_per_s": toks / wall}, complete, out
+
+
+def _bench(cfg, params):
+    _run(cfg, params, traced=False)          # warm: compile shapes
+    res, outs = {}, {}
+    complete = True
+    for arm, traced in (("tracing_off", False), ("tracing_on", True)):
+        runs = []
+        for _ in range(REPS):
+            r, ok, outs[arm] = _run(cfg, params, traced)
+            complete = complete and ok
+            runs.append(r)
+        res[arm] = {k: float(np.median([r[k] for r in runs]))
+                    if isinstance(runs[0][k], float) else runs[0][k]
+                    for k in runs[0]}
+    ratio = (res["tracing_on"]["tokens_per_s"]
+             / res["tracing_off"]["tokens_per_s"])
+    return {
+        "config": {"long_prompt": MIXED_LONG_PROMPT,
+                   "n_long": MIXED_N_LONG,
+                   "short_prompt": PROMPT_LEN,
+                   "short_new_tokens": MIXED_SHORT_NEW,
+                   "n_short": MAX_BATCH - 1,
+                   "token_budget": TOKEN_BUDGET,
+                   "reps": REPS,
+                   "min_ratio": MIN_RATIO},
+        "tracing_off": res["tracing_off"],
+        "tracing_on": res["tracing_on"],
+        "tokens_per_s_ratio": ratio,
+        "overhead_ok": ratio >= MIN_RATIO,
+        "traces_complete": complete,
+        "token_identical": outs["tracing_off"] == outs["tracing_on"],
+    }
+
+
+def run():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
+
+    report = _bench(cfg, params)
+    report["smoke"] = is_smoke()
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+    off, on = report["tracing_off"], report["tracing_on"]
+    return [
+        ("observe_tracing_off", 0.0, f"{off['tokens_per_s']:.1f} tok/s"),
+        ("observe_tracing_on", 0.0, f"{on['tokens_per_s']:.1f} tok/s"),
+        ("observe_overhead", 0.0,
+         f"ratio {report['tokens_per_s_ratio']:.3f} "
+         f"(>= {MIN_RATIO}: {report['overhead_ok']}, "
+         f"complete: {report['traces_complete']})"),
+    ]
+
+
+if __name__ == "__main__":
+    run()

@@ -21,9 +21,9 @@ def main(argv=None) -> None:
                             fig6_replication, fig8_single, fig9_memory,
                             fig10_multi, fig11_robustness, ingress_bench,
                             kernels_bench, module_scaling_bench,
-                            paged_engine_bench, prefix_sharing_bench,
-                            roofline, speedup_model, table1_modules,
-                            table2_scaling_cost)
+                            observe_bench, paged_engine_bench,
+                            prefix_sharing_bench, roofline, speedup_model,
+                            table1_modules, table2_scaling_cost)
     suites = [
         ("table1", table1_modules),
         ("table2", table2_scaling_cost),
@@ -43,6 +43,7 @@ def main(argv=None) -> None:
         ("module_scaling", module_scaling_bench),
         ("distributed", distributed_bench),
         ("ingress", ingress_bench),
+        ("observe", observe_bench),
         ("roofline", roofline),
     ]
     rows = []

@@ -106,6 +106,16 @@ def main(argv=None):
     ap.add_argument("--http-seconds", type=float, default=None,
                     help="serve for N seconds then exit cleanly "
                          "(default: until Ctrl-C)")
+    ap.add_argument("--trace-out", default=None,
+                    help="append one JSONL line per finished request "
+                         "trace (the span tree: accept/route/queue/"
+                         "prefill chunks/first token/decode/migration "
+                         "hops); --http only")
+    ap.add_argument("--flightrec-out", default=None,
+                    help="file the control-plane flight recorder "
+                         "auto-dumps its event ring to on crash-"
+                         "recovery events (also served live at "
+                         "GET /debug/flightrec)")
     ap.add_argument("--max-queue", type=int, default=8,
                     help="per-instance admission ceiling: when every "
                          "instance's queue is at this, the ingress "
@@ -173,6 +183,8 @@ def main(argv=None):
                 max_batch=args.max_batch, max_len=128, **sched_kw)
             front_kw["pod_cfg"] = PodElasticityConfig(
                 max_instances=args.max_pod)
+    if args.flightrec_out:
+        front_kw["flightrec_path"] = args.flightrec_out
     if args.inventory:
         from repro.launch.pod import launch_pod, load_inventory
         nodes = load_inventory(args.inventory)
@@ -202,9 +214,11 @@ def main(argv=None):
     if args.http:
         from repro.serving.ingress import Ingress
         ing = Ingress(orch, host=args.http_host, port=args.http_port,
-                      model_id=args.arch).start()
+                      model_id=args.arch,
+                      trace_out=args.trace_out).start()
         print(f"[serve] http ingress on http://{ing.host}:{ing.port}  "
-              f"(POST /v1/completions; GET /v1/models /healthz /stats)"
+              f"(POST /v1/completions; GET /v1/models /healthz /stats "
+              f"/metrics /debug/flightrec)"
               + ("  [elastic pod]" if args.elastic else ""), flush=True)
         try:
             if args.http_seconds is not None:

@@ -359,6 +359,11 @@ class Engine:
 
         self._paged_impl = paged_attn_impl
         self._interpret = interpret
+        # optional observe.EngineSpanRecorder: lifecycle span hooks
+        # (queue / prefill chunks / first token / decode / finish).
+        # None (the default) keeps every hook site a falsy check —
+        # tracing off costs nothing in the step loop.
+        self.span_hook = None
         # live module-scaling state (Engine.apply_plan)
         self.replication_degrees: Optional[tuple] = None  # plan intent
         self._step_degrees: Optional[tuple] = None        # quantized/static
@@ -394,6 +399,8 @@ class Engine:
     # ------------------------------------------------------------- lifecycle
     def submit(self, req: Request):
         req.submit_time = self.clock
+        if self.span_hook:
+            self.span_hook.on_submit(req)
         self.queue.append(req)
 
     def _free_slots(self):
@@ -463,6 +470,7 @@ class Engine:
 
     def _activate(self, req: Request, slot: int, length: int,
                   first_tok: Optional[int]):
+        fresh_first = first_tok is not None and not req.generated
         req.prefill_pos = length
         if req.prefill_start_time is None:
             req.prefill_start_time = self.clock
@@ -470,6 +478,8 @@ class Engine:
             req.generated.append(int(first_tok))
         if req.first_token_time is None:
             req.first_token_time = self.clock
+        if self.span_hook:
+            self.span_hook.on_activate(req, fresh_first)
         # the admission-sampled token can already satisfy a finish
         # condition (eos on the first token, max_new_tokens == 1): retire
         # without ever occupying a decode slot
@@ -482,6 +492,8 @@ class Engine:
                 PK.free_slot(self.pstate, slot)
             if slot in self._admit_order:   # was mid-prefill (chunked)
                 self._admit_order.remove(slot)
+            if self.span_hook:
+                self.span_hook.on_finish(req)
             self._admit_finished.append(req)
             return
         req.slot = slot
@@ -860,6 +872,8 @@ class Engine:
         if need > self.pstate.n_blocks or S // bs >= width:
             self.queue.popleft()
             req.finish_time = self.clock  # rejected: no output
+            if self.span_hook:
+                self.span_hook.on_finish(req)
             raise PK.OutOfBlocks(
                 f"request rid={req.rid} needs {need} live blocks up to "
                 f"column {S // bs}; pool has {self.pstate.n_blocks}, "
@@ -942,9 +956,17 @@ class Engine:
                                                   + sp.n]
                      for sp in padded]
         ctxs = [sp.req.prefill_pos for sp in padded]
+        t_chunk0 = self.span_hook.now() if self.span_hook else 0.0
         logits = self._prefill_shared_batch(
             [sp.slot for sp in padded], toks_list, ctxs, cb, Sb,
             n_real=len(gsp))
+        if self.span_hook:
+            # one batched forward ran all chunks: they honestly share a
+            # wall window, recorded per request against its prefill span
+            t_chunk1 = self.span_hook.now()
+            for sp in gsp:
+                self.span_hook.on_chunk(sp.req.rid, sp.req.prefill_pos,
+                                        sp.n, t_chunk0, t_chunk1)
         finals = [sp for sp in gsp
                   if sp.req.prefill_pos + sp.n
                   >= self.prefill_total(sp.req)]
@@ -999,6 +1021,8 @@ class Engine:
         req.prefill_pos = 0
         req.preemptions += 1
         self.preempt_count += 1
+        if self.span_hook:
+            self.span_hook.on_preempt(req.rid)
         self.queue.appendleft(req)
 
     def _ensure_decode_room(self):
@@ -1027,6 +1051,8 @@ class Engine:
                     if len(victims) <= 1:
                         req = self.active[slot]
                         req.finish_time = self.clock  # truncated output
+                        if self.span_hook:
+                            self.span_hook.on_finish(req)
                         self._retire(slot)
                         raise PK.OutOfBlocks(
                             f"request rid={req.rid} outgrew the pool at "
@@ -1114,6 +1140,8 @@ class Engine:
             over = int(pre_lengths[slot]) + 2 >= self.logical_max
             if hit_eos or full or over:
                 req.finish_time = self.clock
+                if self.span_hook:
+                    self.span_hook.on_finish(req)
                 finished.append(req)
                 self._retire(slot)
         return finished
@@ -1230,6 +1258,8 @@ class Engine:
             self._prefill_matched.pop(slot, None)
             phase = "prefill"
         self._admit_order.remove(slot)
+        if self.span_hook:
+            self.span_hook.on_pause(req.rid)
         payload = PK.export_blocks(self.pstate, slot,
                                    since_epoch=since_epoch)
         PK.free_slot(self.pstate, slot)
@@ -1280,6 +1310,8 @@ class Engine:
         else:
             self.active[slot] = req
         self._admit_order.append(slot)  # migrated-in = youngest
+        if self.span_hook:
+            self.span_hook.on_resume(req, payload.get("phase", "decode"))
 
     # ------------------------------- overlapped (two-phase) migration
     def snapshot_request(self, slot: int) -> dict:

@@ -22,6 +22,21 @@ serving/transport.py hand-rolls its RPC frames. Endpoints:
 * ``GET /healthz`` — liveness + pod size (the probe surface).
 * ``GET /stats`` — the orchestrator's ``MetricsSnapshot`` plus the
   ingress's own ``IngressCounters`` (routing/backpressure ledger).
+* ``GET /metrics`` — Prometheus text exposition (serving/observe.py's
+  in-repo registry, no client library): request/429/token counters,
+  fleet gauges (tok/s, budget utilization, prefix hit rate, pod size),
+  per-instance queue depth / vacancy / TTFT / ITL histograms, fault
+  counters. Rendered from an IMMUTABLE mirror the pump thread rebuilds
+  next to ``last_snapshot`` — a scrape never touches the orchestrator.
+* ``GET /debug/flightrec`` — the orchestrator's flight-recorder ring
+  (controller votes with inputs, migrations with phase timings,
+  quarantines/respawns, routing verdicts), newest last.
+
+**Tracing**: every accepted completion opens a trace
+(serving/observe.py); its id returns as ``X-Request-Id`` (unary header
+/ SSE head). The HTTP thread records accept + route spans; engine-side
+spans ride the step replies and the orchestrator closes the tree when
+the request finishes, exporting JSONL when ``trace_out`` is set.
 
 **Threading model** — the one invariant everything below serves:
 ``transport.Rpc`` is NOT thread-safe, so exactly ONE thread (the
@@ -61,6 +76,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.serving import observe as OBS
 from repro.serving.engine import Request
 from repro.serving.instrument import IngressCounters
 
@@ -96,7 +112,8 @@ class Ingress:
     """
 
     def __init__(self, orch, *, host: str = "127.0.0.1", port: int = 0,
-                 model_id: Optional[str] = None):
+                 model_id: Optional[str] = None,
+                 trace_out: Optional[str] = None):
         self.orch = orch
         self.host = host
         self.port = port                   # 0 -> ephemeral; real after start
@@ -104,6 +121,16 @@ class Ingress:
             or getattr(orch.cfg, "family", "model")
         self.counters = IngressCounters()
         self.last_snapshot = None          # refreshed by the pump
+        # request tracing: adopt the orchestrator's tracer (a test may
+        # have installed one) or own a fresh one; trace_out appends one
+        # JSONL line per finished trace
+        if orch.tracer is None:
+            orch.tracer = OBS.Tracer(out_path=trace_out)
+            self._own_tracer = True
+        else:
+            self._own_tracer = False
+        self.tracer = orch.tracer
+        self._metrics_mirror = None        # pump-built, swapped atomically
         self._rids = itertools.count(1)
         self._lock = threading.Lock()      # _pending + _sessions + _rids
         self._pending: Dict[int, int] = {}  # instance -> accepted, unpumped
@@ -151,6 +178,8 @@ class Ingress:
         self._loop.call_soon_threadsafe(self._loop.stop)
         if self._http_thread is not None:
             self._http_thread.join(timeout=10)
+        if self._own_tracer:
+            self.tracer.close()
 
     async def _shutdown(self):
         if self._server is not None:
@@ -191,6 +220,7 @@ class Ingress:
         """The ONLY thread that touches orchestrator serving ops."""
         o = self.orch
         self.last_snapshot = o.snapshot()
+        self._metrics_mirror = self._build_mirror()
         t_snap = t_ctl = time.monotonic()
         try:
             while not self._stop.is_set():
@@ -206,6 +236,10 @@ class Ingress:
                 now = time.monotonic()
                 if now - t_snap > 0.2 or moved:
                     self.last_snapshot = o.snapshot()
+                    # one plain-data mirror per refresh; /metrics (HTTP
+                    # thread) renders whichever mirror it observes — it
+                    # never reads handles or telemetry deques itself
+                    self._metrics_mirror = self._build_mirror()
                     t_snap = now
                 if not moved:
                     # step() carries the control ticks under load; while
@@ -304,6 +338,10 @@ class Ingress:
                     "pod_size": self.orch.pod_size()})
             elif path == "/stats" and method == "GET":
                 await self._respond(writer, 200, self._stats())
+            elif path == "/metrics" and method == "GET":
+                await self._respond_text(writer, self._render_metrics())
+            elif path == "/debug/flightrec" and method == "GET":
+                await self._respond(writer, 200, self.orch.flightrec.dump())
             else:
                 await self._respond(writer, 404, {"error": "not found"})
         except (ConnectionError, BrokenPipeError):
@@ -355,6 +393,131 @@ class Ingress:
         writer.write(head.encode("latin1") + b"\r\n" + body)
         await writer.drain()
 
+    async def _respond_text(self, writer, text: str):
+        """Prometheus text exposition (the one non-JSON responder)."""
+        body = text.encode("utf-8")
+        head = ("HTTP/1.1 200 OK\r\n"
+                "Content-Type: text/plain; version=0.0.4; "
+                "charset=utf-8\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                "Connection: close\r\n\r\n")
+        writer.write(head.encode("latin1") + body)
+        await writer.drain()
+
+    # --------------------------------------------------------- /metrics
+    # TTFT is on the ENGINE clock (steps); ITL's stand-in is per-step
+    # wall seconds (one decode step emits one token per active stream)
+    _TTFT_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
+    _ITL_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
+                    0.1, 0.25, 1.0)
+
+    def _build_mirror(self) -> dict:
+        """Plain-data snapshot of everything /metrics exposes, built on
+        the PUMP thread (the only one allowed to read handles and
+        telemetry windows). The HTTP thread renders from whichever
+        mirror reference it sees — immutable once built."""
+        o = self.orch
+        snap = self.last_snapshot
+        inst = []
+        for i, h in enumerate(o.instances):
+            if i in o._retired:
+                continue
+            up = h.alive()
+            tel = o.telemetry[i]
+            inst.append({
+                "idx": i, "up": 1 if up else 0,
+                "queue_depth": h.queue_len() if up else 0,
+                "block_vacancy": (1.0 - h.blocks_in_use()
+                                  / max(h.n_blocks, 1)) if up else 0.0,
+                "tokens_per_s": tel.tokens_per_s(),
+                "ttfts": list(tel.ttfts),
+                "itls": list(tel.step_seconds)})
+        return {
+            "instances": inst,
+            "tokens_per_s": snap.tokens_per_s if snap else 0.0,
+            "budget_utilization": (snap.budget_utilization
+                                   if snap else 0.0),
+            "prefix_hit_rate": snap.prefix_hit_rate if snap else 0.0,
+            "pod_size": o.pod_size(),
+            "faults": {"rpc_timeouts": o.faults.rpc_timeouts,
+                       "quarantines": o.faults.quarantines,
+                       "respawns": o.faults.respawns,
+                       "evictions": o.faults.evictions},
+        }
+
+    def _render_metrics(self) -> str:
+        """One scrape: counters (plain-int reads, safe cross-thread) +
+        the pump's latest immutable mirror, through the in-repo
+        registry (serving/observe.py)."""
+        reg = OBS.MetricsRegistry()
+        c = self.counters
+        reg.counter("repro_requests_total",
+                    "Completions accepted at the front door.", c.requests)
+        reg.counter("repro_http_429_total",
+                    "Admissions shed by backpressure.", c.rejected_429)
+        reg.counter("repro_bad_requests_total",
+                    "Malformed requests answered 400.", c.bad_requests)
+        reg.counter("repro_tokens_out_total",
+                    "Tokens flushed to clients.", c.tokens_out)
+        reg.counter("repro_streams_total",
+                    "Completions served as SSE streams.", c.streamed)
+        reg.counter("repro_aborted_streams_total",
+                    "Streams cut by shutdown or client hangup.",
+                    c.aborted_streams)
+        reg.counter("repro_routed_total", "Admissions by routing rule.",
+                    c.routed_prefix, labels={"reason": "prefix"})
+        reg.counter("repro_routed_total", "Admissions by routing rule.",
+                    c.routed_vacancy, labels={"reason": "vacancy"})
+        m = self._metrics_mirror
+        if m is not None:
+            reg.gauge("repro_tokens_per_s",
+                      "Fleet decode throughput (tokens/s).",
+                      m["tokens_per_s"])
+            reg.gauge("repro_budget_utilization",
+                      "Mean fraction of the per-step token budget "
+                      "packed.", m["budget_utilization"])
+            reg.gauge("repro_prefix_hit_rate",
+                      "Fraction of prompt blocks served from the "
+                      "prefix cache.", m["prefix_hit_rate"])
+            reg.gauge("repro_pod_size", "Alive, non-retired instances.",
+                      m["pod_size"])
+            for kind, v in sorted(m["faults"].items()):
+                reg.counter("repro_faults_total",
+                            "Failure-domain events by kind.", v,
+                            labels={"kind": kind})
+            for e in m["instances"]:
+                lab = {"instance": str(e["idx"])}
+                reg.gauge("repro_instance_up",
+                          "1 while the instance answers.", e["up"],
+                          labels=lab)
+                reg.gauge("repro_queue_depth",
+                          "Requests queued on the instance.",
+                          e["queue_depth"], labels=lab)
+                reg.gauge("repro_block_vacancy",
+                          "Fraction of the instance's KV pool free.",
+                          e["block_vacancy"], labels=lab)
+                reg.gauge("repro_instance_tokens_per_s",
+                          "Per-instance decode throughput.",
+                          e["tokens_per_s"], labels=lab)
+                reg.histogram("repro_ttft_steps",
+                              "Time to first token, engine-clock steps "
+                              "(rolling window).", e["ttfts"],
+                              self._TTFT_BUCKETS, labels=lab)
+                reg.histogram("repro_itl_seconds",
+                              "Inter-token latency: wall seconds per "
+                              "engine step (rolling window).", e["itls"],
+                              self._ITL_BUCKETS, labels=lab)
+        reg.counter("repro_traces_exported_total",
+                    "Finished traces written to the JSONL sink.",
+                    self.tracer.exported)
+        reg.counter("repro_trace_spans_dropped_total",
+                    "Spans that arrived for unknown/finished traces.",
+                    self.tracer.dropped_spans)
+        reg.gauge("repro_flightrec_events",
+                  "Control-plane events recorded since start.",
+                  self.orch.flightrec.dump()["recorded"])
+        return reg.render()
+
     def _stats(self) -> dict:
         snap = self.last_snapshot
         o = self.orch
@@ -404,6 +567,7 @@ class Ingress:
         return out
 
     async def _completions(self, writer, body: bytes):
+        t_accept = OBS.server_now()
         try:
             spec = self._parse_completion(body)
         except _BadRequest:
@@ -414,6 +578,7 @@ class Ingress:
         # admission: route on CACHED gauges, charging not-yet-pumped
         # accepts so a same-tick burst cannot over-admit
         with self._lock:
+            t_route = OBS.server_now()
             decision = self.orch.route(prompt=spec["prompt"],
                                        pending=dict(self._pending))
             if decision is None:
@@ -434,6 +599,16 @@ class Ingress:
                                 {"error": "all queues full, retry"},
                                 extra_headers=[("Retry-After", "1")])
             return
+        # open the trace BEFORE the submit queue: the pump attaches its
+        # context to the RPC frame, so engine spans record from hook one
+        trace_id = self.tracer.begin(
+            rid, t0=t_accept, prompt_tokens=int(len(spec["prompt"])),
+            max_tokens=spec["max_tokens"], stream=spec["stream"])
+        self.tracer.span(rid, "accept", t_accept, t_route)
+        self.tracer.span(rid, "route", t_route,
+                         attrs={"instance": decision.idx,
+                                "reason": decision.reason,
+                                "matched_blocks": decision.matched_blocks})
         req = Request(rid=rid, prompt=spec["prompt"],
                       max_new_tokens=spec["max_tokens"],
                       eos_id=spec["eos_id"],
@@ -442,11 +617,14 @@ class Ingress:
         self._submit_q.put((decision.idx, req))
         if spec["stream"]:
             self.counters.streamed += 1
-            await self._stream_response(writer, rid, decision, sess)
+            await self._stream_response(writer, rid, decision, sess,
+                                        trace_id)
         else:
-            await self._unary_response(writer, rid, decision, sess)
+            await self._unary_response(writer, rid, decision, sess,
+                                       trace_id)
 
-    async def _unary_response(self, writer, rid, decision, sess):
+    async def _unary_response(self, writer, rid, decision, sess,
+                              trace_id):
         toks = []
         while True:
             kind, val = await sess.events.get()
@@ -457,7 +635,9 @@ class Ingress:
             else:                           # abort
                 await self._respond(writer, 503,
                                     {"error": val, "id": rid,
-                                     "tokens": toks})
+                                     "tokens": toks},
+                                    extra_headers=[("X-Request-Id",
+                                                    trace_id)])
                 return
         await self._respond(writer, 200, {
             "id": rid, "object": "text_completion",
@@ -465,12 +645,15 @@ class Ingress:
             "routing": {"instance": decision.idx,
                         "matched_blocks": decision.matched_blocks,
                         "reason": decision.reason},
-            "usage": {"completion_tokens": len(toks)}})
+            "usage": {"completion_tokens": len(toks)}},
+            extra_headers=[("X-Request-Id", trace_id)])
 
-    async def _stream_response(self, writer, rid, decision, sess):
+    async def _stream_response(self, writer, rid, decision, sess,
+                               trace_id):
         head = ("HTTP/1.1 200 OK\r\n"
                 "Content-Type: text/event-stream\r\n"
                 "Cache-Control: no-cache\r\n"
+                f"X-Request-Id: {trace_id}\r\n"
                 "Transfer-Encoding: chunked\r\n"
                 "Connection: close\r\n\r\n")
         writer.write(head.encode("latin1"))

@@ -75,7 +75,10 @@ class InstanceHandle:
     telemetry: EngineTelemetry
 
     # ------------------------------------------------------ serving ops
-    def submit(self, req: Request):
+    def submit(self, req: Request, trace: Optional[dict] = None):
+        """Enqueue ``req``; ``trace`` is an optional observe.Tracer
+        propagation context ({"trace_id", "rid"}) that makes the
+        instance record engine-side spans for this request."""
         raise NotImplementedError
 
     def step(self) -> List[Request]:
@@ -171,6 +174,20 @@ class InstanceHandle:
         deltas; consumers keep a high-water mark."""
         return {}
 
+    # ---------------------------------------------------------- tracing
+    def register_trace(self, ctx: dict):
+        """Associate a trace context with its rid on this instance so
+        engine-side spans record for it — the explicit path migration /
+        replay continuations use (a fresh submit carries the context on
+        the frame instead). Default: tracing not wired, no-op."""
+
+    def drain_spans(self) -> List[dict]:
+        """Engine-recorded spans closed since the last drain, already
+        on the ORCHESTRATOR's clock (remote handles skew-correct before
+        buffering). The orchestrator feeds these to the Tracer each
+        step."""
+        return []
+
     # -------------------------------------------------------- migration
     def pause_request(self, slot: int,
                       since_epoch: Optional[int] = None) -> dict:
@@ -237,10 +254,24 @@ class LocalInstance(InstanceHandle):
                  telemetry: Optional[EngineTelemetry] = None):
         self.engine = engine
         self.telemetry = telemetry or EngineTelemetry()
+        self._recorder = None   # lazy observe.EngineSpanRecorder
 
     # ------------------------------------------------------ serving ops
-    def submit(self, req: Request):
+    def submit(self, req: Request, trace: Optional[dict] = None):
+        if trace is not None:
+            self.register_trace(trace)
         self.engine.submit(req)
+
+    # ---------------------------------------------------------- tracing
+    def register_trace(self, ctx: dict):
+        if self._recorder is None:
+            from repro.serving import observe as OBS
+            self._recorder = OBS.EngineSpanRecorder(origin="local")
+            self.engine.span_hook = self._recorder
+        self._recorder.register(int(ctx["rid"]), ctx["trace_id"])
+
+    def drain_spans(self) -> List[dict]:
+        return self._recorder.drain() if self._recorder else []
 
     def step(self) -> List[Request]:
         return INS.timed_step(self.engine, self.telemetry)

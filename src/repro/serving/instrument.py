@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 from collections import deque
 from typing import Deque, Iterable, Optional
 
@@ -42,8 +43,11 @@ class FaultCounters:
     respawns: int = 0         # supervised restarts that re-admitted
     evictions: int = 0        # flap-detector permanent removals
     # wall seconds from control fan-out to failure classification, one
-    # entry per recovery — the "detected within 2x deadline" evidence
-    detect_latencies: list = dataclasses.field(default_factory=list)
+    # entry per recovery — the "detected within 2x deadline" evidence.
+    # Bounded: a week-long chaos soak records one float per recovery
+    # forever, and the quantiles only need the recent window anyway.
+    detect_latencies: Deque[float] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=512))
 
     def detect_quantile(self, q: float) -> float:
         if not self.detect_latencies:
@@ -255,19 +259,45 @@ def timed_step(engine, telemetry: EngineTelemetry):
     return done
 
 
+# count_host_syncs patches the GLOBAL jax.device_get: with nested or
+# concurrent contexts (an ingress pump thread stepping engines while a
+# test counts its own block), naive save/restore corrupts the chain —
+# the inner exit can reinstall an outer context's counted wrapper as
+# "the original". Instead: one process-wide patch installed when the
+# FIRST context enters and removed when the LAST leaves, every active
+# counter incremented per sync.
+_sync_lock = threading.Lock()
+_sync_active: list = []
+_sync_orig = None
+
+
 @contextlib.contextmanager
 def count_host_syncs():
     """Context manager yielding a SyncCounter; every ``jax.device_get``
-    inside the block increments it."""
+    anywhere in the process increments it while the block is active.
+    Re-entrant and thread-safe: nested/concurrent contexts each get an
+    exact count, and the original ``jax.device_get`` is restored only
+    when the outermost context exits."""
+    global _sync_orig
     counter = SyncCounter()
-    orig = jax.device_get
+    with _sync_lock:
+        if not _sync_active:
+            _sync_orig = jax.device_get
 
-    def counted(x):
-        counter.n += 1
-        return orig(x)
+            def counted(x):
+                with _sync_lock:
+                    active = list(_sync_active)
+                for c in active:
+                    c.n += 1
+                return _sync_orig(x)
 
-    jax.device_get = counted
+            jax.device_get = counted
+        _sync_active.append(counter)
     try:
         yield counter
     finally:
-        jax.device_get = orig
+        with _sync_lock:
+            _sync_active.remove(counter)
+            if not _sync_active:
+                jax.device_get = _sync_orig
+                _sync_orig = None

@@ -69,6 +69,7 @@ from repro.core.controller import (Controller, ControllerConfig,
 from repro.core.monitor import MetricsSnapshot, Monitor
 from repro.core.plan import PlacementPlan
 from repro.serving import faults as FLT
+from repro.serving import observe as OBS
 from repro.serving import transport as TR
 from repro.serving.engine import Engine, Request
 from repro.serving.instance import InstanceHandle, LocalInstance
@@ -127,8 +128,18 @@ class Orchestrator:
                  max_queue: Optional[int] = None,
                  worker_factory=None,
                  pod_cfg: Optional[PodElasticityConfig] = None,
+                 tracer: Optional[OBS.Tracer] = None,
+                 flightrec_path: Optional[str] = None,
                  **engine_kw):
         self.cfg = cfg
+        # observability plane (serving/observe.py): the tracer is opt-in
+        # (the ingress installs one, or tests pass it); the flight
+        # recorder is ALWAYS on — a bounded ring of control-plane
+        # decisions is cheap and is exactly the thing you need after
+        # the incident you didn't plan for
+        self.tracer = tracer
+        self.flightrec = OBS.FlightRecorder(capacity=512,
+                                            dump_path=flightrec_path)
         self.slo_latency = slo_latency
         self.telemetry_every = telemetry_every
         self.link_bandwidth = link_bandwidth
@@ -294,9 +305,18 @@ class Orchestrator:
         not re-route; bookkeeping and failure handling stay here either
         way."""
         self._home[req.rid] = idx
+        # trace context rides the submit itself (piggybacked on the RPC
+        # frame for a remote instance) so engine-side spans record from
+        # the request's very first hook
+        trace = self.tracer.ctx(req.rid) if self.tracer else None
         t_obs = time.monotonic()
         try:
-            self.instances[idx].submit(req)
+            # positional call when untraced: handle subclasses predating
+            # the trace kwarg (tests stub the surface) keep working
+            if trace is None:
+                self.instances[idx].submit(req)
+            else:
+                self.instances[idx].submit(req, trace=trace)
         except (TR.TransportClosed, TR.RpcTimeout) as e:
             self._fail_instance(idx, hung=isinstance(e, TR.RpcTimeout),
                                 t_obs=t_obs)
@@ -311,10 +331,18 @@ class Orchestrator:
         safe to call off the orchestrator's thread."""
         alive = self._alive()
         if not alive:
+            self.flightrec.record("route", verdict="no-alive-instance")
             return None
-        return self.router.select(self.instances, alive, prompt=prompt,
-                                  pending=pending,
+        d = self.router.select(self.instances, alive, prompt=prompt,
+                               pending=pending, max_queue=self.max_queue)
+        if d is None:
+            self.flightrec.record("route", verdict="shed",
+                                  alive=len(alive),
                                   max_queue=self.max_queue)
+        else:
+            self.flightrec.record("route", verdict="admit",
+                                  **d.as_event())
+        return d
 
     def _route(self, among: Optional[List[int]] = None,
                prompt=None) -> int:
@@ -435,6 +463,7 @@ class Orchestrator:
         h = self.instances[idx]
         if hung and idx not in self._recovered:
             self.faults.quarantines += 1
+            self.flightrec.record("quarantine", instance=idx)
             try:
                 h.quarantine()
             except TR.TransportError:
@@ -458,7 +487,25 @@ class Orchestrator:
             self.control_tick()
         out = self._drain_orphans() + fin
         self._collect_streams(out)
+        self._collect_spans(out)
         return out
+
+    def _collect_spans(self, fin: List[Request]):
+        """Drain each instance's engine-recorded spans into the tracer
+        (remote handles buffer them off the step replies, already
+        skew-corrected onto this clock), then close the trace of every
+        request that finished this step — AFTER the drain, so a finish's
+        own decode/finish spans ride the same reply and land in the tree
+        before the root closes."""
+        if self.tracer is None:
+            return
+        for i in self._alive():
+            spans = self.instances[i].drain_spans()
+            if spans:
+                self.tracer.ingest(spans)
+        for r in fin:
+            self.tracer.finish(r.rid, instance=self._home.get(r.rid),
+                               tokens=len(r.generated))
 
     # ------------------------------------------------------ token streams
     def _collect_streams(self, fin: List[Request]):
@@ -615,6 +662,19 @@ class Orchestrator:
             self.controller.observe(snap)
             self._sync_cluster(snap)
             action = self.controller.tick(in_burst=phase > 0)
+            # every verdict — including "no action" — lands in the
+            # flight recorder WITH the inputs that produced it, so a
+            # post-incident reader sees why the controller did nothing
+            self.flightrec.record(
+                "controller", phase=phase, action=action,
+                inputs={"slo_violation_rate": snap.slo_violation_rate,
+                        "queue_len": snap.queue_len,
+                        "tokens_per_s": snap.tokens_per_s,
+                        "vacancy": self.monitor.vacancy_rate(),
+                        "block_vacancy": self.monitor.block_vacancy_rate(),
+                        "pool_pressure": self.monitor.pool_pressure(),
+                        "budget_utilization": snap.budget_utilization,
+                        "pod_size": snap.pod_size})
             if action:
                 last = action
             if not (action and action.startswith("scale-down")):
@@ -641,6 +701,12 @@ class Orchestrator:
         decision = self.controller.pod_tick(
             self.pod_size(),
             est_drain_s=target[1] if target else 0.0)
+        if decision:
+            self.flightrec.record(
+                "pod_decision", decision=decision,
+                pod_size=self.pod_size(),
+                target=target[0] if target else None,
+                est_drain_s=target[1] if target else 0.0)
         if decision == "grow":
             idx = self.grow_pod()
             return f"grow-pod[{idx}]" if idx is not None else None
@@ -681,6 +747,8 @@ class Orchestrator:
         self._grown_at[idx] = time.monotonic()
         self.pod_log.append({"event": "grow", "instance": idx,
                              "pod_size": self.pod_size()})
+        self.flightrec.record("pod_grow", instance=idx,
+                              pod_size=self.pod_size())
         return idx
 
     def _shrink_candidates(self) -> List[int]:
@@ -754,6 +822,8 @@ class Orchestrator:
             pass
         self.pod_log.append({"event": "shrink", "instance": idx,
                              "pod_size": self.pod_size()})
+        self.flightrec.record("pod_shrink", instance=idx,
+                              pod_size=self.pod_size())
 
     def _on_plan_change(self, plan: PlacementPlan, batch_size: int):
         """Controller callback: push the new replication degrees to every
@@ -809,6 +879,7 @@ class Orchestrator:
         out: List[MigrationRecord] = []
         for slot in slots:
             t0 = time.perf_counter()
+            t_hop0 = OBS.server_now()
             t_obs = time.monotonic()
             try:
                 payload = hsrc.pause_request(slot)
@@ -820,6 +891,10 @@ class Orchestrator:
                                     t_obs=t_obs)
                 break
             req = payload["request"]
+            # the destination must know the trace BEFORE the resume so
+            # its engine records the continuation's spans (the explicit
+            # registration path — no submit frame to piggyback on)
+            self._register_trace_on(dst, req.rid)
             t_obs = time.monotonic()
             try:
                 ok = hdst.resume_request(payload)
@@ -848,8 +923,41 @@ class Orchestrator:
                 resumed=ok, mode="stw", stall_s=dt)
             self._home[req.rid] = dst
             self.migrations.append(rec)
+            self._record_migration(rec, t_hop0)
             out.append(rec)
         return out
+
+    def _register_trace_on(self, idx: int, rid: int):
+        """Re-associate a live trace with its rid on instance ``idx``
+        (migration landing, crash replay). Best-effort: a transport
+        failure here surfaces on the very next real op, which owns the
+        recovery — tracing must never alter the control flow."""
+        if self.tracer is None:
+            return
+        ctx = self.tracer.ctx(rid)
+        if ctx is None:
+            return
+        try:
+            self.instances[idx].register_trace(ctx)
+        except (TR.TransportClosed, TR.RpcTimeout):
+            pass
+
+    def _record_migration(self, rec: MigrationRecord, t_hop0: float):
+        """One executed migration -> a flight-recorder event (phase
+        timings included) and, when the stream is traced, a
+        ``migration_hop`` span parented under its request root."""
+        self.flightrec.record(
+            "migration", rid=rec.rid, src=rec.src, dst=rec.dst,
+            mode=rec.mode, resumed=rec.resumed, n_blocks=rec.n_blocks,
+            bytes_moved=rec.bytes_moved, seconds=rec.seconds,
+            stall_s=rec.stall_s, delta_blocks=rec.delta_blocks,
+            delta_bytes=rec.delta_bytes)
+        if self.tracer is not None:
+            self.tracer.span(
+                rec.rid, "migration_hop", t_hop0, OBS.server_now(),
+                origin="orchestrator",
+                attrs={"src": rec.src, "dst": rec.dst, "mode": rec.mode,
+                       "stall_s": rec.stall_s, "resumed": rec.resumed})
 
     def begin_migration(self, src: int, dst: int, slot: int) -> dict:
         """Phase 1 of an overlapped migration: snapshot the victim's
@@ -865,7 +973,8 @@ class Orchestrator:
         return {"src": src, "dst": dst, "slot": slot, "rid": snap["rid"],
                 "epoch": snap["epoch"], "pending": pending,
                 "snap_blocks": len(snap["kv"]["cols"]),
-                "snap_bytes": snap["kv"]["nbytes"], "t0": t0}
+                "snap_bytes": snap["kv"]["nbytes"], "t0": t0,
+                "t_hop0": OBS.server_now()}
 
     def finish_migration(self, ticket: dict) -> Optional[MigrationRecord]:
         """Phase 2: pause the victim, ship ONLY the dirty-set delta
@@ -928,6 +1037,7 @@ class Orchestrator:
             self._fail_instance(src, hung=isinstance(e, TR.RpcTimeout),
                                 t_obs=t_obs)
             return None
+        self._register_trace_on(dst, ticket["rid"])
         t_obs = time.monotonic()
         try:
             if staged is None:
@@ -965,6 +1075,7 @@ class Orchestrator:
             delta_bytes=delta_bytes)
         self._home[req.rid] = dst
         self.migrations.append(rec)
+        self._record_migration(rec, ticket["t_hop0"])
         return rec
 
     def migrate_requests_overlapped(self, src: int, dst: int,
@@ -1054,9 +1165,16 @@ class Orchestrator:
                 assert survivors, \
                     "every instance died: nothing to recover onto"
                 j = self._route(survivors, prompt=req.prompt)
+                # re-attach the live trace: the replayed continuation's
+                # spans belong to the SAME tree as the lost ones
+                trace = (self.tracer.ctx(req.rid)
+                         if self.tracer else None)
                 t_sub = time.monotonic()
                 try:
-                    self.instances[j].submit(req)
+                    if trace is None:
+                        self.instances[j].submit(req)
+                    else:
+                        self.instances[j].submit(req, trace=trace)
                 except (TR.TransportClosed, TR.RpcTimeout) as e:
                     # the chosen survivor failed DURING recovery. Its
                     # mirror already holds the clone (mirror-first
@@ -1072,6 +1190,13 @@ class Orchestrator:
         self.recoveries.append({"instance": idx, "reason": reason,
                                 "detect_s": detect,
                                 "rids": sorted(r.rid for r in replay)})
+        self.flightrec.record("crash_recovery", instance=idx,
+                              reason=reason, detect_s=detect,
+                              replayed=len(replay),
+                              rids=sorted(r.rid for r in replay))
+        # the event that makes the recorder worth having: persist the
+        # decision history that LED here before anything else goes wrong
+        self.flightrec.auto_dump(f"crash_recovery:instance{idx}:{reason}")
         self._schedule_respawn(idx, now)
         return replay
 
@@ -1113,6 +1238,8 @@ class Orchestrator:
             self.respawn_log.append({
                 "instance": idx, "event": "evicted",
                 "failures_in_window": len(fails)})
+            self.flightrec.record("evicted", instance=idx,
+                                  failures_in_window=len(fails))
 
     def _tick_respawns(self):
         """Run due respawns (called at the top of every ``step()`` —
@@ -1136,6 +1263,8 @@ class Orchestrator:
                 fresh = old.respawn(start_timeout=pol.start_timeout)
             except Exception:  # noqa: BLE001 — ANY bring-up failure flaps
                 now = time.monotonic()
+                self.flightrec.record("respawn_failed", instance=idx,
+                                      attempt=st["attempts"])
                 self._record_flap(idx, st, now)
                 if idx not in self._evicted:
                     st["due"] = now + min(
@@ -1157,6 +1286,9 @@ class Orchestrator:
                 "instance": idx, "event": "respawned",
                 "label": getattr(fresh, "peer_label", None),
                 "downtime_s": time.monotonic() - st["t_fail"]})
+            self.flightrec.record(
+                "respawned", instance=idx,
+                downtime_s=time.monotonic() - st["t_fail"])
 
     # -------------------------------------------------------------- summary
     def stats(self) -> Dict:

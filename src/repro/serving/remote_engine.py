@@ -52,6 +52,7 @@ import os
 from typing import Dict, List, Optional
 
 from repro.serving import instrument as INS
+from repro.serving import observe as OBS
 from repro.serving import transport as TR
 from repro.serving.instance import InstanceHandle, pristine
 from repro.serving.instrument import EngineTelemetry
@@ -65,6 +66,7 @@ class EngineServer:
     def __init__(self, engine):
         self.engine = engine
         self.telemetry = EngineTelemetry()
+        self.recorder = None   # lazy observe.EngineSpanRecorder
 
     # ---- serving ops
     def submit(self, req: Request):
@@ -73,13 +75,41 @@ class EngineServer:
 
     def step(self):
         done = INS.timed_step(self.engine, self.telemetry)
-        return {"finished": done, "telemetry": self.telemetry.to_state(),
-                "info": self.info(),
-                # full per-stream token lists each step (tiny at decode
-                # rates; idempotent under migration/replay) — the ingress
-                # streaming feed rides the reply, no extra RPC
-                "streams": {int(r): list(t) for r, t
-                            in self.engine.stream_progress().items()}}
+        out = {"finished": done, "telemetry": self.telemetry.to_state(),
+               "info": self.info(),
+               # full per-stream token lists each step (tiny at decode
+               # rates; idempotent under migration/replay) — the ingress
+               # streaming feed rides the reply, no extra RPC
+               "streams": {int(r): list(t) for r, t
+                           in self.engine.stream_progress().items()}}
+        if self.recorder is not None:
+            # spans ship home piggybacked like telemetry; stamped with
+            # THIS process's clock — the proxy skew-corrects on ingest
+            out["spans"] = self.recorder.drain()
+        return out
+
+    # ---- tracing
+    def _on_trace(self, ctx: dict):
+        """Trace context piggybacked on an RPC frame (transport.serve
+        delivers it before the op runs): install the span recorder on
+        first use, register rid -> trace id so the engine's lifecycle
+        hooks start recording for this request."""
+        if self.recorder is None:
+            self.recorder = OBS.EngineSpanRecorder(
+                origin=f"server:{os.getpid()}")
+            self.engine.span_hook = self.recorder
+        self.recorder.register(int(ctx["rid"]), ctx["trace_id"])
+
+    def trace_register(self, ctx: dict):
+        """Explicit registration op — migration/replay continuations
+        arrive via resume/commit payloads, not a traced submit frame."""
+        self._on_trace(ctx)
+        return True
+
+    def clock_sync(self) -> float:
+        """This process's span clock, for the proxy's RTT-midpoint
+        offset estimation (observe.estimate_clock_offset)."""
+        return OBS.server_now()
 
     def apply_plan(self, p: List[int]):
         self.engine.apply_plan(list(p))
@@ -125,14 +155,26 @@ class EngineServer:
         import jax
         jax.block_until_ready((self.engine.pstate.k, self.engine.pstate.v))
 
+    def _reply(self, result):
+        """Migration reply envelope: the gauge dict, plus any spans the
+        op itself closed (a pause closes the victim's decode span —
+        shipping it HERE instead of on the next step reply means the
+        trace can finish before this server ever steps again)."""
+        out = {"result": result, "info": self.info()}
+        if self.recorder is not None:
+            spans = self.recorder.drain()
+            if spans:
+                out["spans"] = spans
+        return out
+
     def pause_request(self, slot: int, since_epoch=None):
         payload = self.engine.pause_request(slot, since_epoch=since_epoch)
-        return {"result": payload, "info": self.info()}
+        return self._reply(payload)
 
     def resume_request(self, payload: dict):
         ok = self.engine.resume_request(payload)
         self._sync()
-        return {"result": ok, "info": self.info()}
+        return self._reply(ok)
 
     def snapshot_request(self, slot: int):
         return self.engine.snapshot_request(slot)
@@ -140,16 +182,16 @@ class EngineServer:
     def prepare_resume(self, snap: dict):
         slot = self.engine.prepare_resume(snap)
         self._sync()
-        return {"result": slot, "info": self.info()}
+        return self._reply(slot)
 
     def commit_resume(self, slot: int, payload: dict):
         ok = self.engine.commit_resume(slot, payload)
         self._sync()
-        return {"result": ok, "info": self.info()}
+        return self._reply(ok)
 
     def abort_resume(self, slot: int):
         self.engine.abort_resume(slot)
-        return {"result": True, "info": self.info()}
+        return self._reply(True)
 
     # ---- liveness
     def ping(self):
@@ -170,11 +212,16 @@ class EngineServer:
         os._exit(17)
 
     def dispatch(self) -> dict:
-        return {op: getattr(self, op) for op in (
+        d = {op: getattr(self, op) for op in (
             "submit", "step", "apply_plan", "requeue_front", "push_queue",
             "drain_queue", "info", "pause_request", "resume_request",
             "snapshot_request", "prepare_resume", "commit_resume",
-            "abort_resume", "ping", "heartbeat", "crash")}
+            "abort_resume", "ping", "heartbeat", "crash",
+            "trace_register", "clock_sync")}
+        # not a wire op: transport.serve's hook for trace contexts
+        # piggybacked on ordinary frames
+        d["_on_trace"] = self._on_trace
+        return d
 
 
 def _serve_connection(conn: "TR.Connection"):
@@ -250,6 +297,8 @@ class EngineProxy(InstanceHandle):
         self.telemetry = EngineTelemetry()
         self._inflight: Dict[int, Request] = {}   # rid -> pristine clone
         self._streams: Dict[int, List[int]] = {}  # last step's stream feed
+        self._span_feed: List[dict] = []   # skew-corrected server spans
+        self.clock_offset = 0.0            # server clock - ours (est.)
         self._dead = False
         self.process = None
         self.endpoint = endpoint
@@ -338,6 +387,11 @@ class EngineProxy(InstanceHandle):
         ready = self.conn.recv()          # init ack doubles as ready gate
         assert ready.get("result") == "ready", ready
         self._info = self._call("info")
+        # estimate the server's span-clock offset from a few cheap round
+        # trips while the connection is otherwise idle — a respawned
+        # server gets a fresh proxy, hence a fresh estimate
+        self.clock_offset = OBS.estimate_clock_offset(
+            lambda: self._call("clock_sync"))
 
     # ------------------------------------------------------------- rpc
     def _call(self, op, *args, **kw):
@@ -354,9 +408,9 @@ class EngineProxy(InstanceHandle):
     # ops piggyback the server's returned depth; migration ops re-pull
     # info — they are rare, the extra round trip is noise), so routing
     # and run-until-done loops never act on a stale zero.
-    def submit(self, req: Request):
+    def submit(self, req: Request, trace: Optional[dict] = None):
         self._inflight[req.rid] = pristine(req)
-        self._info["queue_len"] = self._call("submit", req)
+        self._info["queue_len"] = self._call("submit", req, _trace=trace)
 
     def step(self) -> List[Request]:
         return self.finish_step(self._call("step"))
@@ -380,10 +434,24 @@ class EngineProxy(InstanceHandle):
         self._info = reply["info"]
         self._streams = {int(r): list(t) for r, t
                          in reply.get("streams", {}).items()}
+        spans = reply.get("spans")
+        if spans:
+            self._span_feed.extend(
+                OBS.correct_spans(spans, self.clock_offset))
         done = reply["finished"]
         for r in done:
             self._inflight.pop(r.rid, None)
         return done
+
+    # ---------------------------------------------------------- tracing
+    def register_trace(self, ctx: dict):
+        self._call("trace_register", ctx)
+
+    def drain_spans(self) -> List[dict]:
+        if not self._span_feed:
+            return []
+        out, self._span_feed = self._span_feed, []
+        return out
 
     def apply_plan(self, p):
         p = list(p.p) if hasattr(p, "p") else list(p)
@@ -452,8 +520,14 @@ class EngineProxy(InstanceHandle):
 
     # -------------------------------------------------------- migration
     def _unwrap(self, reply: dict):
-        """Migration replies piggyback the server's gauge dict."""
+        """Migration replies piggyback the server's gauge dict (and any
+        spans the op closed — skew-corrected into the feed like the
+        step-reply ones)."""
         self._info = reply["info"]
+        spans = reply.get("spans")
+        if spans:
+            self._span_feed.extend(
+                OBS.correct_spans(spans, self.clock_offset))
         return reply["result"]
 
     def pause_request(self, slot: int,

@@ -54,6 +54,12 @@ class RouteDecision:
     matched_blocks: int = 0
     reason: str = "vacancy"
 
+    def as_event(self) -> dict:
+        """Flight-recorder payload for this verdict (observe.FlightRecorder
+        ``route`` events) — plain dict, msgpack/JSON-safe."""
+        return {"idx": self.idx, "matched_blocks": self.matched_blocks,
+                "reason": self.reason}
+
 
 def chain_hexkeys(prompt, block_size: int) -> List[str]:
     """The prompt's content-chain keys (one per FULL block), hex-encoded

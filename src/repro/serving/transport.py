@@ -489,10 +489,16 @@ class Rpc:
         self._next_id = 0
         self._replies: Dict[int, Any] = {}
 
-    def call_async(self, op: str, *args, **kw) -> Pending:
+    def call_async(self, op: str, *args, _trace=None, **kw) -> Pending:
         self._next_id += 1
         cid = self._next_id
-        self.conn.send({"id": cid, "op": op, "args": list(args), "kw": kw})
+        msg = {"id": cid, "op": op, "args": list(args), "kw": kw}
+        if _trace is not None:
+            # trace-context propagation (serving/observe.py): rides the
+            # existing frame, invisible to the dispatched handler — the
+            # server's ``_on_trace`` dispatch hook consumes it
+            msg["trace"] = _trace
+        self.conn.send(msg)
         deadline = (None if self.call_timeout is None
                     else time.monotonic() + self.call_timeout)
         return Pending(self, cid, deadline=deadline)
@@ -714,6 +720,12 @@ def serve(conn: Connection, dispatch: Dict[str, Callable],
         try:
             if fn is None:
                 raise KeyError(f"unknown op {op!r}")
+            trace = msg.get("trace")
+            if trace is not None and "_on_trace" in dispatch:
+                # piggybacked trace context: hand it to the server
+                # BEFORE the op runs, so e.g. a submit records spans
+                # from its very first lifecycle hook
+                dispatch["_on_trace"](trace)
             result = fn(*msg.get("args", ()), **msg.get("kw", {}))
             reply = {"id": cid, "ok": True, "result": result}
         except Exception as e:  # noqa: BLE001 - proxied to the caller
