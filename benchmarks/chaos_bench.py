@@ -52,13 +52,15 @@ RID_POST = 5000
 
 
 def _requests(cfg, n, rid0=0, seed=0, prompt_len=24, max_new=10):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec, SamplingParams
     rng = np.random.default_rng(seed)
-    return [Request(rid=rid0 + i,
-                    prompt=rng.integers(2, cfg.vocab_size, size=prompt_len)
-                    .astype(np.int32),
-                    max_new_tokens=max_new, temperature=0.7, top_k=8,
-                    seed=131 + rid0 + i)
+    return [RequestSpec(rid=rid0 + i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=prompt_len)
+                        .astype(np.int32),
+                        max_tokens=max_new,
+                        sampling=SamplingParams(temperature=0.7, top_k=8,
+                                                seed=131 + rid0 + i))
             for i in range(n)]
 
 
@@ -66,15 +68,13 @@ def _reference(cfg, params, reqs, *, max_len, block_size):
     """Fault-free oracle: each request decoded alone on a pristine
     single engine — counter-based sampling keys make this the exact
     token sequence every chaos-side replay must reproduce."""
-    import dataclasses
     from repro.serving.engine import Engine
+    from repro.serving.request import RequestSpec
     out = {}
     for r in reqs:
         e = Engine(cfg, params, max_batch=1, max_len=max_len,
                    cache_kind="paged", block_size=block_size)
-        e.submit(dataclasses.replace(r, generated=[], slot=None,
-                                     submit_time=0.0, first_token_time=None,
-                                     finish_time=None, preemptions=0))
+        e.submit(RequestSpec.from_request(r))
         out[r.rid] = e.run_until_done()[0].generated
     return out
 

@@ -71,6 +71,15 @@ REQUIRED_KEYS = {
         "paged_over_dense_speedup",
         "mixed_trace",
     ],
+    "BENCH_slo.json": [
+        "config",
+        "fifo",
+        "slo",
+        "interactive_ttft_ratio",
+        "throughput_ratio",
+        "token_identical",
+        "dropped_requests",
+    ],
     "BENCH_prefix_sharing.json": [
         "config",
         "sharing_on",

@@ -63,26 +63,26 @@ OUT_PATH = os.path.join(os.path.dirname(__file__),
 
 def _requests(cfg, n, rid0=0, seed=0, prompt_len=PROMPT_LEN,
               max_new=MAX_NEW):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec, SamplingParams
     rng = np.random.default_rng(seed)
-    return [Request(rid=rid0 + i,
-                    prompt=rng.integers(2, cfg.vocab_size, size=prompt_len)
-                    .astype(np.int32),
-                    max_new_tokens=max_new, temperature=0.7, top_k=8,
-                    seed=31 + rid0 + i)
+    return [RequestSpec(rid=rid0 + i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=prompt_len)
+                        .astype(np.int32),
+                        max_tokens=max_new,
+                        sampling=SamplingParams(temperature=0.7, top_k=8,
+                                                seed=31 + rid0 + i))
             for i in range(n)]
 
 
 def _reference(cfg, params, reqs):
-    import dataclasses
     from repro.serving.engine import Engine
+    from repro.serving.request import RequestSpec
     out = {}
     for r in reqs:
         e = Engine(cfg, params, max_batch=1, max_len=MAX_LEN,
                    cache_kind="paged", block_size=BLOCK_SIZE)
-        e.submit(dataclasses.replace(r, generated=[], slot=None,
-                                     submit_time=0.0, first_token_time=None,
-                                     finish_time=None, preemptions=0))
+        e.submit(RequestSpec.from_request(r))
         out[r.rid] = e.run_until_done()[0].generated
     return out
 

@@ -141,11 +141,12 @@ def _routing_arm(cfg, params, make_router):
 
 
 def _burst(seed):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec
     rng = np.random.default_rng(seed)
-    return [Request(rid=1000 * seed + i,
-                    prompt=rng.integers(2, 1000, size=12).astype(np.int32),
-                    max_new_tokens=MAX_NEW) for i in range(BURST)]
+    return [RequestSpec(rid=1000 * seed + i,
+                        prompt=rng.integers(2, 1000, size=12)
+                        .astype(np.int32),
+                        max_tokens=MAX_NEW) for i in range(BURST)]
 
 
 def _drain_all(orch):
@@ -210,9 +211,8 @@ def _elasticity_arm(cfg, params):
         for r in drained:
             e = Engine(cfg, params, max_batch=1, cache_kind="paged",
                        max_len=96, block_size=BLOCK_SIZE)
-            e.submit(dataclasses.replace(
-                r, generated=[], slot=None, submit_time=0.0,
-                first_token_time=None, finish_time=None, preemptions=0))
+            from repro.serving.request import RequestSpec
+            e.submit(RequestSpec.from_request(r))
             solo = e.run_until_done()[0].generated
             identical &= list(by_rid[r.rid].generated) == list(solo)
         capacity_gain = (pod2["tokens_per_tick"]

@@ -42,12 +42,13 @@ OUT_PATH = os.path.join(os.path.dirname(__file__),
 
 
 def _requests(cfg, n, rid0=0, seed=0):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec
     rng = np.random.default_rng(seed)
-    return [Request(rid=rid0 + i,
-                    prompt=rng.integers(2, cfg.vocab_size, size=PROMPT_LEN)
-                    .astype(np.int32),
-                    max_new_tokens=MAX_NEW)
+    return [RequestSpec(rid=rid0 + i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=PROMPT_LEN)
+                        .astype(np.int32),
+                        max_tokens=MAX_NEW)
             for i in range(n)]
 
 
@@ -149,11 +150,8 @@ def run():
         ref_eng = Engine(cfg, params, max_batch=1, max_len=MAX_LEN,
                          cache_kind="paged", block_size=BLOCK_SIZE)
         req = by_rid[rid]
-        from repro.serving.engine import Request
-        ref_eng.submit(Request(rid=rid, prompt=req.prompt,
-                               max_new_tokens=req.max_new_tokens,
-                               temperature=req.temperature,
-                               top_k=req.top_k, seed=req.seed))
+        from repro.serving.request import RequestSpec
+        ref_eng.submit(RequestSpec.from_request(req))
         ref = ref_eng.run_until_done()[0].generated
         identical &= (ref == req.generated)
 

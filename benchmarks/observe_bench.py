@@ -32,18 +32,19 @@ MIN_RATIO = 0.98         # tracing may cost at most 2% throughput
 
 
 def _requests(cfg, seed=0):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec
     rng = np.random.default_rng(seed)
-    shorts = [Request(rid=i,
-                      prompt=rng.integers(2, cfg.vocab_size,
-                                          size=PROMPT_LEN).astype(np.int32),
-                      max_new_tokens=MIXED_SHORT_NEW)
+    shorts = [RequestSpec(rid=i,
+                          prompt=rng.integers(2, cfg.vocab_size,
+                                              size=PROMPT_LEN)
+                          .astype(np.int32),
+                          max_tokens=MIXED_SHORT_NEW)
               for i in range(MAX_BATCH - 1)]
-    longs = [Request(rid=100 + i,
-                     prompt=rng.integers(2, cfg.vocab_size,
-                                         size=MIXED_LONG_PROMPT)
-                     .astype(np.int32),
-                     max_new_tokens=8)
+    longs = [RequestSpec(rid=100 + i,
+                         prompt=rng.integers(2, cfg.vocab_size,
+                                             size=MIXED_LONG_PROMPT)
+                         .astype(np.int32),
+                         max_tokens=8)
              for i in range(MIXED_N_LONG)]
     return shorts, longs
 
@@ -67,9 +68,9 @@ def _run(cfg, params, traced, seed=7):
         if tracer is not None:
             tracer.begin(r.rid, prompt_tokens=len(r.prompt))
         orch.submit(r)
-    orch.run_until_done()
+    done = orch.run_until_done()
     wall = time.perf_counter() - t0
-    toks = sum(len(r.generated) for r in shorts + longs)
+    toks = sum(len(r.generated) for r in done)
     complete = True
     if tracer is not None:
         # the overhead number only counts if the traces it paid for are
@@ -78,7 +79,7 @@ def _run(cfg, params, traced, seed=7):
                     and tracer.dropped_spans == 0
                     and all(OBS.span_tree_ok(rec["spans"]) is None
                             for rec in tracer.finished))
-    out = {r.rid: list(r.generated) for r in shorts + longs}
+    out = {r.rid: list(r.generated) for r in done}
     orch.close()
     return {"tokens": toks, "wall_s": wall,
             "tokens_per_s": toks / wall}, complete, out

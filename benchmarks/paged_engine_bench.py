@@ -55,12 +55,13 @@ def _make_engine(cfg, params, kind, **extra):
 
 
 def _workload(cfg, n, seed=0):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec
     rng = np.random.default_rng(seed)
-    return [Request(rid=i,
-                    prompt=rng.integers(2, cfg.vocab_size, size=PROMPT_LEN)
-                    .astype(np.int32),
-                    max_new_tokens=MAX_NEW)
+    return [RequestSpec(rid=i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=PROMPT_LEN)
+                        .astype(np.int32),
+                        max_tokens=MAX_NEW)
             for i in range(n)]
 
 
@@ -112,19 +113,19 @@ def _bench_kind(cfg, params, kind, **engine_kw):
 
 
 def _mixed_requests(cfg, seed=0):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec
     rng = np.random.default_rng(seed)
-    shorts = [Request(rid=i,
-                      prompt=rng.integers(2, cfg.vocab_size,
-                                          size=PROMPT_LEN)
-                      .astype(np.int32),
-                      max_new_tokens=MIXED_SHORT_NEW)
+    shorts = [RequestSpec(rid=i,
+                          prompt=rng.integers(2, cfg.vocab_size,
+                                              size=PROMPT_LEN)
+                          .astype(np.int32),
+                          max_tokens=MIXED_SHORT_NEW)
               for i in range(MAX_BATCH - 1)]
-    longs = [Request(rid=100 + i,
-                     prompt=rng.integers(2, cfg.vocab_size,
-                                         size=MIXED_LONG_PROMPT)
-                     .astype(np.int32),
-                     max_new_tokens=8)
+    longs = [RequestSpec(rid=100 + i,
+                         prompt=rng.integers(2, cfg.vocab_size,
+                                             size=MIXED_LONG_PROMPT)
+                         .astype(np.int32),
+                         max_tokens=8)
              for i in range(MIXED_N_LONG)]
     return shorts, longs
 
@@ -135,12 +136,10 @@ def _run_mixed(cfg, params, scheduler, seed=0):
     in-flight decodes a long prefill can stall)."""
     eng = _make_engine(cfg, params, "paged", scheduler=scheduler,
                        token_budget=TOKEN_BUDGET)
-    shorts, longs = _mixed_requests(cfg, seed=seed)
-    for r in shorts:
-        eng.submit(r)
+    short_specs, long_specs = _mixed_requests(cfg, seed=seed)
+    shorts = [eng.submit(s) for s in short_specs]
     eng.step()                       # shorts prefill + start decoding
-    for r in longs:                  # long prompts land mid-stream
-        eng.submit(r)
+    longs = [eng.submit(s) for s in long_specs]   # land mid-stream
     itl, last_emit, last_len = [], {}, {r.rid: len(r.generated)
                                         for r in shorts}
     t0 = time.perf_counter()

@@ -37,15 +37,16 @@ OUT_PATH = os.path.join(os.path.dirname(__file__),
 
 
 def _workload(cfg, n, seed=0):
-    from repro.serving.engine import Request
+    from repro.serving.request import RequestSpec
     rng = np.random.default_rng(seed)
     sys_prompt = rng.integers(2, cfg.vocab_size,
                               size=SYS_PROMPT_LEN).astype(np.int32)
     reqs = []
     for i in range(n):
         user = rng.integers(2, cfg.vocab_size, size=USER_LEN).astype(np.int32)
-        reqs.append(Request(rid=i, prompt=np.concatenate([sys_prompt, user]),
-                            max_new_tokens=MAX_NEW))
+        reqs.append(RequestSpec(rid=i,
+                                prompt=np.concatenate([sys_prompt, user]),
+                                max_tokens=MAX_NEW))
     return reqs
 
 

@@ -22,8 +22,9 @@ def main(argv=None) -> None:
                             fig10_multi, fig11_robustness, ingress_bench,
                             kernels_bench, module_scaling_bench,
                             observe_bench, paged_engine_bench,
-                            prefix_sharing_bench, roofline, speedup_model,
-                            table1_modules, table2_scaling_cost)
+                            prefix_sharing_bench, roofline, slo_bench,
+                            speedup_model, table1_modules,
+                            table2_scaling_cost)
     suites = [
         ("table1", table1_modules),
         ("table2", table2_scaling_cost),
@@ -43,6 +44,7 @@ def main(argv=None) -> None:
         ("module_scaling", module_scaling_bench),
         ("distributed", distributed_bench),
         ("ingress", ingress_bench),
+        ("slo", slo_bench),
         ("observe", observe_bench),
         ("roofline", roofline),
     ]

@@ -1,0 +1,223 @@
+"""SLO-aware scheduling through the real HTTP front door.
+
+One mixed trace — a wave of prefill-heavy BATCH completions followed
+immediately by short INTERACTIVE ones, all on raw sockets against
+serving/ingress.py — served twice by the same single-instance pod:
+
+* **fifo** — the default ``"budget"`` ``TokenBudgetScheduler``: strict
+  arrival order, so every interactive request prefills behind the whole
+  batch backlog;
+* **slo** — the ``"slo"`` ``SloScheduler``: the per-step token budget
+  is split by class in strict priority order, so interactive admissions
+  jump the batch continuations the moment a slot is free.
+
+Judged numbers (the PR-10 acceptance gates):
+
+* interactive p95 TTFT (ENGINE-clock steps, from the per-class
+  telemetry windows the /metrics histograms read) at most 0.6x the
+  fifo baseline;
+* throughput at least 0.9x the baseline, measured as tokens per
+  ENGINE STEP (same trace, token-identical output, so the ratio is
+  pure packing efficiency — class-aware packing is work-conserving,
+  it reorders work instead of shedding it). Wall tok/s is reported
+  raw but not gated: this container's wall clock swings >10% between
+  arms, while the engine-step count is load-independent;
+* every stream token-identical across the two arms (counter-based
+  sampling keys travel with the request, so scheduling order can never
+  change tokens);
+* zero dropped requests.
+
+The budget governor is OFF for both arms (fixed equal budgets) so the
+comparison isolates the scheduling policy. Emits
+``benchmarks/BENCH_slo.json``.
+"""
+import json
+import os
+import socket
+import time
+
+import jax
+import numpy as np
+
+from benchmarks._smoke import is_smoke, pick
+
+BLOCK_SIZE = 8
+TOKEN_BUDGET = 16                  # per-step packing budget (contended)
+MAX_BATCH = 6                      # slots are NOT the bottleneck
+N_BATCH = pick(8, 4)               # prefill-heavy background wave
+BATCH_PROMPT = pick(96, 64)        # 6 (4) budget-sized chunks each
+BATCH_NEW = pick(48, 16)           # decode volume drowns fixed costs
+N_INT = pick(3, 2)                 # the latency-sensitive foreground
+INT_PROMPT = 8
+INT_NEW = pick(16, 8)
+ENG_KW = dict(max_batch=MAX_BATCH, max_len=pick(192, 128),
+              block_size=BLOCK_SIZE, token_budget=TOKEN_BUDGET)
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_slo.json")
+
+TTFT_GATE = 0.6                    # slo p95 TTFT <= 0.6x fifo
+TPS_GATE = 0.9                     # slo tok/s >= 0.9x fifo
+
+
+def _tps_gate():
+    """The judged 0.9x gate applies at FULL size, where decode volume
+    amortizes the extra partial-chunk steps class-aware packing takes;
+    smoke only sanity-checks that reordering didn't destroy packing."""
+    return TPS_GATE * 0.75 if is_smoke() else TPS_GATE
+
+
+def _bodies():
+    """The mixed trace, deterministic across arms: batch first, then
+    interactive. Seeded sampling makes token identity a real claim."""
+    rng = np.random.default_rng(7)
+    trace = []
+    for i in range(N_BATCH):
+        trace.append({"prompt": rng.integers(2, 1000, size=BATCH_PROMPT)
+                      .astype(int).tolist(),
+                      "max_tokens": BATCH_NEW, "slo_class": "batch",
+                      "temperature": 0.7, "top_k": 8, "seed": 100 + i})
+    for i in range(N_INT):
+        trace.append({"prompt": rng.integers(2, 1000, size=INT_PROMPT)
+                      .astype(int).tolist(),
+                      "max_tokens": INT_NEW, "slo_class": "interactive",
+                      "deadline_ms": 500, "temperature": 0.7, "top_k": 8,
+                      "seed": 200 + i})
+    return trace
+
+
+def _send(port, body):
+    s = socket.create_connection(("127.0.0.1", port), timeout=120)
+    payload = json.dumps(body).encode()
+    s.sendall(b"POST /v1/completions HTTP/1.1\r\nHost: b\r\n"
+              b"Content-Length: %d\r\n\r\n" % len(payload) + payload)
+    return s
+
+
+def _read(s):
+    data = b""
+    while chunk := s.recv(65536):
+        data += chunk
+    s.close()
+    head, _, body = data.partition(b"\r\n\r\n")
+    assert b"200 OK" in head.split(b"\r\n", 1)[0], head[:200]
+    return json.loads(body)
+
+
+def _arm(cfg, params, scheduler):
+    from repro.serving.ingress import Ingress
+    from repro.serving.orchestrator import Orchestrator
+    orch = Orchestrator(cfg, params, n_instances=1, telemetry_every=2,
+                        scheduler=scheduler, **ENG_KW)
+    ing = Ingress(orch, govern_budget=False).start()
+    try:
+        trace = _bodies()
+        tel = orch.telemetry[0]
+        # a FULL unmeasured warmup, then three measured passes: the
+        # packing mix (and so the set of jit shapes) depends on where
+        # the interactive wave lands in engine time, which itself moves
+        # as compiles disappear — by the measured passes the engine is
+        # jit-clean no matter which arm ran first in the process. Wall
+        # is best-of-3 (tiny smoke runs are scheduler-noise-dominated);
+        # the TTFT windows come from the LAST pass only.
+        walls, steps = [], []
+        for measured in (False, True, True, True):
+            t0 = time.perf_counter()
+            c0 = orch.engines[0].clock
+            socks = [_send(ing.port, b) for b in trace if
+                     b["slo_class"] == "batch"]
+            time.sleep(0.005)      # batch wave parsed + queued first
+            socks += [_send(ing.port, b) for b in trace if
+                      b["slo_class"] == "interactive"]
+            outs = [_read(s) for s in socks]
+            if measured:
+                walls.append(time.perf_counter() - t0)
+                steps.append(orch.engines[0].clock - c0)
+            if measured != (len(walls) == 3):
+                # every pass except the LAST is dropped from the
+                # per-class windows the gates read (the engine is idle
+                # between passes)
+                tel.class_ttfts.clear()
+                tel.class_itls.clear()
+        wall = min(walls)
+        n_steps = min(steps)
+        tokens = sum(len(o["tokens"]) for o in outs)
+        return {"scheduler": scheduler,
+                "requests": len(outs),
+                "tokens": tokens,
+                "wall_s": wall,
+                "tokens_per_s": tokens / wall,
+                "engine_steps": n_steps,
+                "tokens_per_step": tokens / n_steps,
+                "interactive_ttft_p95_steps":
+                    tel.class_ttft_quantile("interactive", 0.95),
+                "batch_ttft_p95_steps":
+                    tel.class_ttft_quantile("batch", 0.95),
+                "interactive_itl_p95_steps":
+                    tel.class_itl_quantile("interactive", 0.95),
+                "streams": {str(i): o["tokens"]
+                            for i, o in enumerate(outs)},
+                "dropped": orch.stats()["dropped"],
+                "rejected_429": ing.counters.rejected_429}
+    finally:
+        ing.close()
+        orch.close()
+
+
+def run():
+    from repro.configs import get_config
+    from repro.models import transformer as T
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
+
+    fifo = _arm(cfg, params, "budget")
+    slo = _arm(cfg, params, "slo")
+
+    ttft_ratio = (slo["interactive_ttft_p95_steps"]
+                  / max(fifo["interactive_ttft_p95_steps"], 1e-9))
+    tps_ratio = (slo["tokens_per_step"]
+                 / max(fifo["tokens_per_step"], 1e-9))
+    wall_ratio = slo["tokens_per_s"] / max(fifo["tokens_per_s"], 1e-9)
+    identical = fifo["streams"] == slo["streams"]
+    dropped = fifo["dropped"] + slo["dropped"]
+    report = {
+        "smoke": is_smoke(),
+        "config": {"arch": "tinyllama-1.1b (reduced)",
+                   "token_budget": TOKEN_BUDGET, "max_batch": MAX_BATCH,
+                   "block_size": BLOCK_SIZE,
+                   "n_batch": N_BATCH, "batch_prompt": BATCH_PROMPT,
+                   "batch_new": BATCH_NEW, "n_interactive": N_INT,
+                   "interactive_prompt": INT_PROMPT,
+                   "interactive_new": INT_NEW},
+        "fifo": fifo,
+        "slo": slo,
+        "interactive_ttft_ratio": ttft_ratio,
+        "meets_ttft_gate": ttft_ratio <= TTFT_GATE,
+        "throughput_ratio": tps_ratio,
+        "meets_throughput_gate": tps_ratio >= _tps_gate(),
+        "wall_throughput_ratio": wall_ratio,
+        "token_identical": identical,
+        "dropped_requests": dropped,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"[slo_bench] interactive p95 TTFT: "
+          f"{fifo['interactive_ttft_p95_steps']:.1f} steps (fifo) -> "
+          f"{slo['interactive_ttft_p95_steps']:.1f} steps (slo) = "
+          f"{ttft_ratio:.2f}x (gate <= {TTFT_GATE}x: "
+          f"{'PASS' if report['meets_ttft_gate'] else 'FAIL'})")
+    print(f"[slo_bench] throughput: {fifo['tokens_per_step']:.2f} -> "
+          f"{slo['tokens_per_step']:.2f} tok/engine-step = "
+          f"{tps_ratio:.2f}x (gate >= {_tps_gate():.3g}x"
+          f"{', smoke-relaxed' if is_smoke() else ''}: "
+          f"{'PASS' if report['meets_throughput_gate'] else 'FAIL'}); "
+          f"wall {fifo['tokens_per_s']:.0f} -> {slo['tokens_per_s']:.0f} "
+          f"tok/s ({wall_ratio:.2f}x, not gated); "
+          f"token_identical={identical}, dropped={dropped}")
+    return [("slo_interactive_ttft", slo["wall_s"] * 1e6,
+             f"{ttft_ratio:.2f}x"),
+            ("slo_throughput", fifo["wall_s"] * 1e6,
+             f"{tps_ratio:.2f}x")]
+
+
+if __name__ == "__main__":
+    run()

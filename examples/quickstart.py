@@ -52,16 +52,17 @@ def main():
     # admission, block-pool decode, on-device sampling — one host sync
     # per step. (Attention decoders only; other families run dense.)
     if cfg.supports_paged_kv:
-        from repro.serving.engine import Engine, Request
+        from repro.serving.engine import Engine
+        from repro.serving.request import RequestSpec
         eng = Engine(cfg, params, max_batch=2, max_len=64,
                      cache_kind="paged", block_size=8)
         rng = np.random.default_rng(0)
         for i in range(3):
-            eng.submit(Request(rid=i,
-                               prompt=rng.integers(2, cfg.vocab_size,
-                                                   size=6 + i)
-                               .astype(np.int32),
-                               max_new_tokens=6))
+            eng.submit(RequestSpec(rid=i,
+                                   prompt=rng.integers(2, cfg.vocab_size,
+                                                       size=6 + i)
+                                   .astype(np.int32),
+                                   max_tokens=6))
         done = eng.run_until_done()
         for r in sorted(done, key=lambda r: r.rid):
             print(f"paged engine rid={r.rid}: {r.generated}")

@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec
 
 
 def make_requests(cfg, n_streams, sys_len, user_len, max_new, seed=0):
@@ -29,9 +30,9 @@ def make_requests(cfg, n_streams, sys_len, user_len, max_new, seed=0):
     reqs = []
     for i in range(n_streams):
         user = rng.integers(2, cfg.vocab_size, size=user_len).astype(np.int32)
-        reqs.append(Request(rid=i,
-                            prompt=np.concatenate([system_prompt, user]),
-                            max_new_tokens=max_new))
+        reqs.append(RequestSpec(rid=i,
+                                prompt=np.concatenate([system_prompt, user]),
+                                max_tokens=max_new))
     return reqs
 
 

@@ -11,6 +11,12 @@ fall back to a single dense engine with the same submission loop.
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --requests 24 --rps 4 --instances 2
 
+Every flag lives on ``ServeConfig`` — one dataclass, built either from
+the command line (``ServeConfig.from_args``) or from a TOML file
+(``ServeConfig.from_toml``; pass ``--config serve.toml`` and override
+individual keys with normal flags on top). Programmatic callers build
+the dataclass directly and hand it to ``run()``.
+
 ``--workers N`` lifts the same loop onto the DISTRIBUTED serving plane:
 N engine-server processes are spawned (one real paged Engine each,
 serving/remote_engine.py) and the orchestrator drives them over the RPC
@@ -32,102 +38,204 @@ loop drives them over TCP frames:
 
 ``--http`` swaps the synthetic workload for the real front door
 (serving/ingress.py): streaming completions over HTTP/1.1 with
-prefix-affinity routing and 429 backpressure; add ``--elastic`` to let
-the controller grow/shrink the pod while serving:
+prefix-affinity routing, SLO-class admission and 429 backpressure; add
+``--elastic`` to let the controller grow/shrink the pod while serving.
+``--scheduler slo`` runs the class-aware scheduler (DESIGN.md §13) so
+``"slo_class": "interactive"`` completions pre-empt batch traffic:
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --instances 2 --http --http-port 8080 --elastic
+        --instances 2 --http --http-port 8080 --scheduler slo
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from typing import Optional
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.serving import scheduler as SCH
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec
 
 
-def main(argv=None):
+@dataclasses.dataclass
+class ServeConfig:
+    """Every serve.py knob in one place (module docstring). Field names
+    are the CLI flags with ``-`` -> ``_``; the same names key the TOML
+    form (flat, or under a ``[serve]`` table)."""
+    arch: str = "tinyllama-1.1b"
+    requests: int = 16
+    rps: float = 4.0
+    max_batch: int = 4
+    max_new: int = 16
+    prompt_len: int = 12
+    instances: int = 2
+    workers: int = 0
+    inventory: Optional[str] = None
+    slo: float = 40.0
+    rpc_deadline: Optional[float] = None
+    supervise: bool = False
+    drain: bool = False
+    cache: str = "auto"
+    token_budget: int = 128
+    scheduler: str = "budget"
+    http: bool = False
+    http_host: str = "127.0.0.1"
+    http_port: int = 8080
+    http_seconds: Optional[float] = None
+    trace_out: Optional[str] = None
+    flightrec_out: Optional[str] = None
+    max_queue: int = 8
+    elastic: bool = False
+    max_pod: int = 4
+    govern_budget: bool = True
+
+    def validate(self) -> "ServeConfig":
+        if self.scheduler not in SCH.POLICIES:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r} "
+                f"(registered: {', '.join(sorted(SCH.POLICIES))})")
+        if self.cache not in ("auto", "dense", "paged"):
+            raise ValueError(f"cache must be auto|dense|paged, "
+                             f"got {self.cache!r}")
+        if self.requests < 0 or self.token_budget < 1:
+            raise ValueError("requests must be >= 0 and "
+                             "token_budget >= 1")
+        return self
+
+    @classmethod
+    def from_toml(cls, path: str) -> "ServeConfig":
+        """Load a config file: all keys optional, unknown keys are an
+        error (a typo should not silently fall back to a default).
+        Reuses launch/pod.py's tomllib/tomli probe."""
+        from repro.launch.pod import _toml
+        if _toml is None:  # pragma: no cover - tomli/tomllib baked in
+            raise RuntimeError("TOML config needs tomllib (py3.11+) or "
+                               "tomli")
+        with open(path, "rb") as f:
+            data = _toml.load(f)
+        if "serve" in data and isinstance(data["serve"], dict):
+            data = data["serve"]
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - names)
+        if unknown:
+            raise ValueError("unknown serve config key(s): "
+                             + ", ".join(unknown))
+        return cls(**data).validate()
+
+    @classmethod
+    def from_args(cls, argv=None) -> "ServeConfig":
+        """CLI front: ``--config file.toml`` seeds the defaults, every
+        other flag overrides field-by-field on top."""
+        pre = argparse.ArgumentParser(add_help=False)
+        pre.add_argument("--config", default=None,
+                         help="TOML file of ServeConfig keys; flags "
+                              "given alongside override it")
+        known, rest = pre.parse_known_args(argv)
+        base = cls.from_toml(known.config) if known.config else cls()
+        args = _build_parser(base).parse_args(rest)
+        return cls(**{f.name: getattr(args, f.name)
+                      for f in dataclasses.fields(cls)}).validate()
+
+
+def _build_parser(d: ServeConfig) -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama-1.1b")
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--rps", type=float, default=4.0)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--prompt-len", type=int, default=12)
-    ap.add_argument("--instances", type=int, default=2)
-    ap.add_argument("--workers", type=int, default=0,
+    ap.add_argument("--config", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--arch", default=d.arch)
+    ap.add_argument("--requests", type=int, default=d.requests)
+    ap.add_argument("--rps", type=float, default=d.rps)
+    ap.add_argument("--max-batch", type=int, default=d.max_batch)
+    ap.add_argument("--max-new", type=int, default=d.max_new)
+    ap.add_argument("--prompt-len", type=int, default=d.prompt_len)
+    ap.add_argument("--instances", type=int, default=d.instances)
+    ap.add_argument("--workers", type=int, default=d.workers,
                     help="spawn N engine-server PROCESSES and drive them "
                          "over the RPC transport (the distributed serving "
                          "plane); 0 = in-process instances")
-    ap.add_argument("--inventory", default=None,
+    ap.add_argument("--inventory", default=d.inventory,
                     help="pod inventory file (.toml/.json): bring up one "
                          "engine server per tcp:// endpoint it lists "
                          "(launch/pod.py) and drive them as the serving "
                          "plane; overrides --workers/--instances")
-    ap.add_argument("--slo", type=float, default=40.0,
+    ap.add_argument("--slo", type=float, default=d.slo,
                     help="engine-clock latency SLO (steps)")
-    ap.add_argument("--rpc-deadline", type=float, default=None,
+    ap.add_argument("--rpc-deadline", type=float, default=d.rpc_deadline,
                     help="per-call RPC deadline in seconds: a hung "
                          "worker (socket open, no reply) is detected "
                          "within 2x this and quarantined instead of "
                          "stalling the control tick (default: off)")
     ap.add_argument("--supervise", action="store_true",
+                    default=d.supervise,
                     help="respawn dead/quarantined spawned workers with "
                          "capped exponential backoff (flap detector "
                          "evicts a worker that keeps dying)")
-    ap.add_argument("--drain", action="store_true",
+    ap.add_argument("--drain", action="store_true", default=d.drain,
                     help="after the workload, drain instance N-1 "
                          "(scale-down consolidation demo)")
     ap.add_argument("--cache", choices=["auto", "dense", "paged"],
-                    default="auto")
-    ap.add_argument("--token-budget", type=int, default=128,
+                    default=d.cache)
+    ap.add_argument("--token-budget", type=int, default=d.token_budget,
                     help="per-step token budget for the continuous-"
                          "batching scheduler (DESIGN.md §10): decode "
                          "slots are charged first, the remainder admits "
                          "prefill chunks; paged engines only")
-    ap.add_argument("--scheduler", choices=["token_budget", "phase"],
-                    default="token_budget",
-                    help="'phase' pins the legacy prefill-wave/decode-"
-                         "step alternation (paged engines only)")
-    ap.add_argument("--http", action="store_true",
+    ap.add_argument("--scheduler", choices=sorted(SCH.POLICIES),
+                    default=d.scheduler,
+                    help="scheduler policy (serving/scheduler.py "
+                         "registry): 'budget' = token-budget continuous "
+                         "batching, 'slo' adds per-class budget splits + "
+                         "deadline ordering, 'phase' pins the legacy "
+                         "prefill-wave/decode-step alternation")
+    ap.add_argument("--http", action="store_true", default=d.http,
                     help="serve the HTTP front door instead of the "
                          "synthetic workload: POST /v1/completions "
                          "(chunked token streaming), GET /v1/models "
                          "/healthz /stats (serving/ingress.py); paged "
                          "engines only")
-    ap.add_argument("--http-host", default="127.0.0.1")
-    ap.add_argument("--http-port", type=int, default=8080,
+    ap.add_argument("--http-host", default=d.http_host)
+    ap.add_argument("--http-port", type=int, default=d.http_port,
                     help="ingress port (0 = ephemeral, printed at bind)")
-    ap.add_argument("--http-seconds", type=float, default=None,
+    ap.add_argument("--http-seconds", type=float, default=d.http_seconds,
                     help="serve for N seconds then exit cleanly "
                          "(default: until Ctrl-C)")
-    ap.add_argument("--trace-out", default=None,
+    ap.add_argument("--trace-out", default=d.trace_out,
                     help="append one JSONL line per finished request "
                          "trace (the span tree: accept/route/queue/"
                          "prefill chunks/first token/decode/migration "
                          "hops); --http only")
-    ap.add_argument("--flightrec-out", default=None,
+    ap.add_argument("--flightrec-out", default=d.flightrec_out,
                     help="file the control-plane flight recorder "
                          "auto-dumps its event ring to on crash-"
                          "recovery events (also served live at "
                          "GET /debug/flightrec)")
-    ap.add_argument("--max-queue", type=int, default=8,
+    ap.add_argument("--max-queue", type=int, default=d.max_queue,
                     help="per-instance admission ceiling: when every "
                          "instance's queue is at this, the ingress "
                          "sheds with 429 + Retry-After")
-    ap.add_argument("--elastic", action="store_true",
+    ap.add_argument("--elastic", action="store_true", default=d.elastic,
                     help="arm pod grow/shrink: the controller may spawn "
                          "a whole extra worker under sustained pressure "
                          "and drain+reap one when the pod runs empty")
-    ap.add_argument("--max-pod", type=int, default=4,
+    ap.add_argument("--max-pod", type=int, default=d.max_pod,
                     help="pod-size ceiling for --elastic growth")
-    args = ap.parse_args(argv)
+    ap.add_argument("--no-govern-budget", dest="govern_budget",
+                    action="store_false", default=d.govern_budget,
+                    help="pin per-instance token budgets (disable the "
+                         "ingress budget governor); --http only")
+    return ap
 
+
+def main(argv=None):
+    return run(ServeConfig.from_args(argv))
+
+
+def run(args: ServeConfig):
+    args.validate()
     cfg = get_config(args.arch).reduced()
     params = T.init_params(cfg, jax.random.PRNGKey(0), "float32")
     kind = args.cache
@@ -138,11 +246,11 @@ def main(argv=None):
     rng = np.random.default_rng(0)
 
     def make_request(rid):
-        return Request(
+        return RequestSpec(
             rid=rid,
             prompt=rng.integers(2, cfg.vocab_size,
                                 size=args.prompt_len).astype(np.int32),
-            max_new_tokens=args.max_new)
+            max_tokens=args.max_new)
 
     t_start = time.time()
 
@@ -214,8 +322,8 @@ def main(argv=None):
     if args.http:
         from repro.serving.ingress import Ingress
         ing = Ingress(orch, host=args.http_host, port=args.http_port,
-                      model_id=args.arch,
-                      trace_out=args.trace_out).start()
+                      model_id=args.arch, trace_out=args.trace_out,
+                      govern_budget=args.govern_budget).start()
         print(f"[serve] http ingress on http://{ing.host}:{ing.port}  "
               f"(POST /v1/completions; GET /v1/models /healthz /stats "
               f"/metrics /debug/flightrec)"

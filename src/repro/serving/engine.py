@@ -82,6 +82,7 @@ from repro.serving import kvcache as KV
 from repro.serving import paged_kv as PK
 from repro.serving import sampling as SMP
 from repro.serving import scheduler as SCH
+from repro.serving.request import MIGRATION_WIRE_VERSION, RequestSpec
 
 
 @dataclasses.dataclass
@@ -93,6 +94,11 @@ class Request:
     temperature: float = 0.0        # 0 => greedy
     top_k: int = 0                  # 0 => full distribution
     seed: int = 0
+    # SLO contract (request.RequestSpec is the construction API; these
+    # ride the Request so they survive preemption, crash replay and
+    # cross-instance migration exactly like the sampling state does)
+    slo_class: str = "standard"
+    deadline_ms: Optional[float] = None
     # filled by the engine
     generated: list = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
@@ -339,22 +345,22 @@ class Engine:
             self.cache = T.init_cache(cfg, max_batch, self.max_len, dtype)
             self.pstate = None
 
-        # scheduler: TOKEN-BUDGET continuous batching is the default
-        # paged path (one step loop packs decode tokens + bounded prefill
-        # chunks — long prompts never stall decodes); "phase" keeps the
+        # scheduler: resolved through the policy registry
+        # (serving/scheduler.py). TOKEN-BUDGET continuous batching is the
+        # default paged path (one step loop packs decode tokens + bounded
+        # prefill chunks — long prompts never stall decodes); "slo" adds
+        # class-aware splits of the same budget; "phase" keeps the
         # original prefill-wave/decode-step alternation as the parity
         # oracle and the bench baseline. Dense engines are always phase
         # (chunking targets the block pool's progressive allocation).
         if scheduler is None:
-            scheduler = "token_budget" if cache_kind == "paged" else "phase"
-        assert scheduler in ("token_budget", "phase"), scheduler
+            scheduler = "budget" if cache_kind == "paged" else "phase"
         if cache_kind != "paged":
             scheduler = "phase"
-        self.scheduler_kind = scheduler
-        self.sched = (SCH.TokenBudgetScheduler(token_budget,
-                                               chunk_align=block_size)
-                      if scheduler == "token_budget" else None)
-        self.token_budget = token_budget if self.sched else 0
+        self.sched = SCH.make_scheduler(scheduler, token_budget=token_budget,
+                                        chunk_align=block_size)
+        self.scheduler_kind = self.sched.name
+        self.token_budget = token_budget if self.sched.budgeted else 0
         self.last_step_packed: Optional[int] = None  # telemetry, per step
 
         self._paged_impl = paged_attn_impl
@@ -397,11 +403,46 @@ class Engine:
         return temps, topks, seeds, ctrs
 
     # ------------------------------------------------------------- lifecycle
-    def submit(self, req: Request):
+    def submit(self, spec: RequestSpec) -> Request:
+        """Admit one request. Accepts ONLY a ``RequestSpec`` (the
+        construction-time contract — serving/request.py); the engine
+        mints and returns the mutable ``Request`` it will drive.
+        Already-minted Requests re-enter through queue surgery
+        (``queue.appendleft`` on preemption, ``resume_request`` on
+        migration, push/requeue handle hooks on replay), never through
+        ``submit``."""
+        if not isinstance(spec, RequestSpec):
+            raise TypeError(
+                f"Engine.submit takes a RequestSpec, got "
+                f"{type(spec).__name__} (build one via "
+                "repro.serving.request, or RequestSpec.from_request "
+                "for replays)")
+        spec.validate()
+        req = spec.to_request()
         req.submit_time = self.clock
         if self.span_hook:
             self.span_hook.on_submit(req)
         self.queue.append(req)
+        return req
+
+    def _queue_remove(self, req: Request):
+        """Pop ``req`` from the waiting queue by IDENTITY (Request's
+        field-wise __eq__ would compare prompt arrays)."""
+        for i, r in enumerate(self.queue):
+            if r is req:
+                del self.queue[i]
+                return
+        raise ValueError(f"rid={req.rid} is not in the waiting queue")
+
+    def set_token_budget(self, budget: int) -> int:
+        """Retarget the per-step token budget LIVE (the ingress budget
+        governor's knob). No-op on phase/dense engines — there is no
+        budget to govern. Returns the budget now in force."""
+        if self.sched.budgeted:
+            budget = max(int(budget), 1)
+            self.sched.token_budget = budget
+            self.token_budget = budget
+        return self.token_budget
 
     def _free_slots(self):
         return [s for s in range(self.max_batch)
@@ -802,7 +843,7 @@ class Engine:
 
     def _admit(self):
         if self.cache_kind == "paged":
-            if self.sched is not None:
+            if self.sched.budgeted:
                 self._admit_budget()
             else:
                 self._admit_paged()
@@ -828,10 +869,14 @@ class Engine:
             if g.slot is not None:
                 continue
             if g.final:
-                assert self.queue and self.queue[0] is g.req
-                wave.append(self.queue.popleft())
+                # granted fresh requests need not be a queue PREFIX —
+                # class-aware policies admit out of FIFO order — so pop
+                # each one wherever it sits (raises if the policy granted
+                # something not actually queued)
+                self._queue_remove(g.req)
+                wave.append(g.req)
             else:
-                partial = g         # stays at the queue head for now
+                partial = g         # stays queued for now
         requeued = False
         if wave:
             admitted = self._admit_paged(wave)
@@ -855,13 +900,15 @@ class Engine:
                 self._preempt(victims[-1])
 
     def _begin_chunked(self, req: Request, n: int) -> Optional[_ChunkSpec]:
-        """Admit the QUEUE HEAD with a partial grant: claim a slot, run
-        the same never-fits rejection and prefix-cache lookup as the
-        wave path, and hand back the first chunk for execution. Prefix
-        hits advance the cursor for free (aliased context costs no
-        compute); allocation failures leave the request at the queue
-        head (backpressure). Returns None when nothing was admitted."""
-        assert self.queue and self.queue[0] is req
+        """Admit a WAITING request with a partial grant: claim a slot,
+        run the same never-fits rejection and prefix-cache lookup as the
+        wave path, and hand back the first chunk for execution. The
+        request may sit anywhere in the queue (class-aware policies
+        grant out of FIFO order); it keeps its position on allocation
+        failure (backpressure). Prefix hits advance the cursor for free
+        (aliased context costs no compute). Returns None when nothing
+        was admitted."""
+        assert any(r is req for r in self.queue), req.rid
         toks = self._prefill_tokens(req)
         S = len(toks)
         bs = self.pstate.block_size
@@ -870,7 +917,7 @@ class Engine:
         if self.window:
             need -= min(max((S - self.window + 1) // bs, 0), need - 1)
         if need > self.pstate.n_blocks or S // bs >= width:
-            self.queue.popleft()
+            self._queue_remove(req)
             req.finish_time = self.clock  # rejected: no output
             if self.span_hook:
                 self.span_hook.on_finish(req)
@@ -889,7 +936,7 @@ class Engine:
             matched, ctx = [], 0
         if matched:
             PK.adopt_prefix(self.pstate, slot, matched, ctx)
-        self.queue.popleft()
+        self._queue_remove(req)
         req.slot = slot
         req.prefill_pos = ctx
         if req.prefill_start_time is None:
@@ -1044,10 +1091,10 @@ class Engine:
                                            int(self.pstate.lengths[slot]), 1)
                     break
                 except PK.OutOfBlocks:
-                    victims = (self.sched.victims(self) if self.sched
-                               else [s for s in self._admit_order
-                                     if s in self.active
-                                     or s in self.prefilling])
+                    # victim ORDER is policy (the SLO scheduler shields
+                    # interactive streams by pushing batch slots to the
+                    # tail); the engine just takes the tail
+                    victims = self.sched.victims(self)
                     if len(victims) <= 1:
                         req = self.active[slot]
                         req.finish_time = self.clock  # truncated output
@@ -1268,11 +1315,24 @@ class Engine:
         # cross-host transports/logging); the authoritative copies travel
         # inside the payload: import_blocks restores position from
         # kv["length"], the sampler re-derives the counter from
-        # len(request.generated)
-        return {"request": req, "kv": payload,
+        # len(request.generated). "v" stamps the payload shape — resume
+        # ops reject a mismatch loudly instead of KeyError-ing mid-bind.
+        return {"v": MIGRATION_WIRE_VERSION, "request": req, "kv": payload,
                 "position": payload["length"],
                 "counter": len(req.generated),
                 "phase": phase}
+
+    @staticmethod
+    def _check_payload_version(payload: dict, op: str):
+        """Reject an old- or alien-shape migration payload with a clear
+        error (surfaced as ``RemoteError`` over RPC) rather than letting
+        a missing field KeyError deep inside the bind path."""
+        v = payload.get("v") if isinstance(payload, dict) else None
+        if v != MIGRATION_WIRE_VERSION:
+            raise ValueError(
+                f"{op}: migration payload version {v!r} unsupported "
+                f"(this engine speaks v{MIGRATION_WIRE_VERSION}; "
+                "re-export from a matching peer)")
 
     def resume_request(self, payload: dict) -> bool:
         """Rebind a paused request's blocks into this engine's pool and
@@ -1285,6 +1345,7 @@ class Engine:
         deterministically)."""
         if self.cache_kind != "paged":
             raise ValueError("resume_request needs a paged engine")
+        self._check_payload_version(payload, "resume_request")
         req = payload["request"]
         free = self._free_slots()
         if not free:
@@ -1325,8 +1386,8 @@ class Engine:
             raise ValueError("snapshot_request needs a paged engine")
         req = (self.active.get(slot) or self.prefilling[slot])
         payload = PK.export_blocks(self.pstate, slot)
-        return {"rid": req.rid, "kv": payload, "epoch": payload["epoch"],
-                "position": payload["length"]}
+        return {"v": MIGRATION_WIRE_VERSION, "rid": req.rid, "kv": payload,
+                "epoch": payload["epoch"], "position": payload["length"]}
 
     def prepare_resume(self, snap: dict) -> Optional[int]:
         """Stage a phase-1 snapshot into this pool: import the blocks
@@ -1336,6 +1397,7 @@ class Engine:
         mutating the pool) when no slot or not enough blocks are free."""
         if self.cache_kind != "paged":
             raise ValueError("prepare_resume needs a paged engine")
+        self._check_payload_version(snap, "prepare_resume")
         free = self._free_slots()
         if not free:
             return None
@@ -1355,6 +1417,7 @@ class Engine:
         provide) the staging is rolled back and False returned — the
         caller re-queues the request, which replays deterministically."""
         assert slot in self._staged, f"slot {slot} holds no staged import"
+        self._check_payload_version(payload, "commit_resume")
         req = payload["request"]
         try:
             PK.import_blocks_delta(self.pstate, slot, payload["kv"])

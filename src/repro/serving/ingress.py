@@ -9,7 +9,14 @@ serving/transport.py hand-rolls its RPC frames. Endpoints:
 
 * ``POST /v1/completions`` — the de-facto standard completion API.
   Body: ``{"prompt": [token ids] | "text", "max_tokens", "temperature",
-  "top_k", "seed", "stream"}``. With ``stream: true`` the response is
+  "top_k", "seed", "stream", "slo_class", "deadline_ms"}``, parsed
+  straight into a ``serving.request.RequestSpec`` — the one request
+  shape the whole stack speaks. Bad bodies get a TYPED 400 taxonomy:
+  unknown top-level keys, an unknown ``slo_class`` and a non-positive
+  ``deadline_ms`` each answer with a distinct machine-readable
+  ``error`` code (``unknown_fields`` / ``unknown_slo_class`` /
+  ``bad_deadline``) so clients can tell a typo from a bad value without
+  string-matching free text. With ``stream: true`` the response is
   chunked SSE: one ``data: {"token": t, "index": n}`` event per token,
   flushed AS THE STEP LOOP EMITS IT (not after completion), terminated
   by ``data: [DONE]``. Without, one JSON body after the request
@@ -25,8 +32,10 @@ serving/transport.py hand-rolls its RPC frames. Endpoints:
 * ``GET /metrics`` — Prometheus text exposition (serving/observe.py's
   in-repo registry, no client library): request/429/token counters,
   fleet gauges (tok/s, budget utilization, prefix hit rate, pod size),
-  per-instance queue depth / vacancy / TTFT / ITL histograms, fault
-  counters. Rendered from an IMMUTABLE mirror the pump thread rebuilds
+  per-instance queue depth / vacancy / TTFT / ITL histograms,
+  per-SLO-class TTFT/ITL histograms (``slo_class`` label), the
+  in-force per-instance token budget, fault counters. Rendered from an
+  IMMUTABLE mirror the pump thread rebuilds
   next to ``last_snapshot`` — a scrape never touches the orchestrator.
 * ``GET /debug/flightrec`` — the orchestrator's flight-recorder ring
   (controller votes with inputs, migrations with phase timings,
@@ -51,6 +60,17 @@ instance has work, and pushes token events into those queues via
 never do. Elasticity rides for free: the pump's ``step()`` runs the
 orchestrator's control ticks, so pod grow/shrink happens on the same
 thread that owns the instances.
+
+**Budget governor**: the pump also runs the adaptive half of the
+SLO loop (DESIGN.md §13). ``BudgetGovernor`` periodically reads each
+instance's EXISTING telemetry windows — ``budget_utilization``,
+engine-clock TTFT p95 and queue-delay p95 — and retargets that
+instance's per-step token budget through
+``InstanceHandle.set_token_budget``: grow when the step loop is
+saturated AND requests are queueing (more prefill tokens pack per
+step), shrink when the budget is mostly idle (a smaller budget
+tightens per-step latency). Multiplicative steps with a clamp; every
+change lands in the flight recorder as a ``budget_governor`` event.
 
 **Admission backpressure**: the router only considers instances whose
 queue — including requests accepted here but not yet pumped
@@ -79,6 +99,7 @@ import numpy as np
 from repro.serving import observe as OBS
 from repro.serving.engine import Request
 from repro.serving.instrument import IngressCounters
+from repro.serving.request import RequestSpec, SamplingParams, SpecError
 
 
 def byte_tokens(text: str, vocab_size: int) -> np.ndarray:
@@ -91,7 +112,83 @@ def byte_tokens(text: str, vocab_size: int) -> np.ndarray:
 
 
 class _BadRequest(Exception):
-    """Malformed HTTP or JSON — answered with 400."""
+    """Malformed HTTP or JSON — answered with 400. ``body``, when set,
+    is the exact JSON error body (the typed taxonomy: unknown fields /
+    unknown slo_class / bad deadline); None means the responder's
+    generic 400 body."""
+
+    def __init__(self, body: Optional[dict] = None):
+        super().__init__((body or {}).get("error", "bad request"))
+        self.body = body
+
+
+class BudgetGovernor:
+    """The adaptive token-budget loop (module docstring, DESIGN.md §13).
+
+    Ticked from the pump thread — ``set_token_budget`` is a serving op
+    (an RPC on remote instances) and may only run there. Control law:
+
+    * **grow** (``x grow``) when the window says the step loop is
+      saturated (``budget_utilization >= high_util``) AND requests are
+      actually waiting (queue-delay or TTFT p95 at or above
+      ``delay_steps`` engine steps) — a bigger budget packs more
+      prefill chunk tokens per step, draining the queue;
+    * **shrink** (``x shrink``) when the budget mostly rides empty
+      (``utilization <= low_util``) — a smaller budget tightens
+      per-step wall time, which is ITL for every active stream.
+
+    Multiplicative moves bounded to [min_budget, max_budget]; the
+    engine echoes the budget IN FORCE (phase engines echo 0 and are
+    skipped via their empty ``packed_tokens`` window)."""
+
+    def __init__(self, orch, *, period_s: float = 0.5, grow: float = 1.5,
+                 shrink: float = 0.75, high_util: float = 0.90,
+                 low_util: float = 0.35, delay_steps: float = 4.0,
+                 min_budget: int = 32, max_budget: int = 8192):
+        self.orch = orch
+        self.period_s = period_s
+        self.grow = grow
+        self.shrink = shrink
+        self.high_util = high_util
+        self.low_util = low_util
+        self.delay_steps = delay_steps
+        self.min_budget = min_budget
+        self.max_budget = max_budget
+        self.budgets: Dict[int, int] = {}   # instance -> in-force budget
+        self.adjustments = 0                # lifetime changes applied
+        self._t_last: Optional[float] = None
+
+    def tick(self, now: float) -> bool:
+        """One control decision per alive instance, at most once per
+        ``period_s``. Returns True when a tick ran (tests key on it)."""
+        if self._t_last is not None and now - self._t_last < self.period_s:
+            return False
+        self._t_last = now
+        o = self.orch
+        for i in o._alive():
+            tel = o.telemetry[i]
+            if not tel.budget or not tel.packed_tokens:
+                continue                    # phase engine, or no data yet
+            util = tel.budget_utilization()
+            cur = self.budgets.get(i, tel.budget)
+            delay = max(tel.queue_delay_quantile(0.95),
+                        tel.ttft_quantile(0.95))
+            if util >= self.high_util and delay >= self.delay_steps:
+                new = min(int(cur * self.grow), self.max_budget)
+            elif util <= self.low_util:
+                new = max(int(cur * self.shrink), self.min_budget)
+            else:
+                new = cur
+            if new == cur:
+                continue
+            in_force = o.instances[i].set_token_budget(new)
+            self.budgets[i] = in_force
+            self.adjustments += 1
+            o.flightrec.record(
+                "budget_governor", instance=i, budget=in_force,
+                prev=cur, utilization=round(util, 4),
+                queue_delay_p95=round(delay, 3))
+        return True
 
 
 @dataclasses.dataclass
@@ -113,8 +210,12 @@ class Ingress:
 
     def __init__(self, orch, *, host: str = "127.0.0.1", port: int = 0,
                  model_id: Optional[str] = None,
-                 trace_out: Optional[str] = None):
+                 trace_out: Optional[str] = None,
+                 govern_budget: bool = True):
         self.orch = orch
+        # the adaptive token-budget loop (class docstring); govern_budget
+        # False pins every instance's budget for identity-sensitive runs
+        self.governor = BudgetGovernor(orch) if govern_budget else None
         self.host = host
         self.port = port                   # 0 -> ephemeral; real after start
         self.model_id = model_id or getattr(orch.cfg, "name", None) \
@@ -234,6 +335,8 @@ class Ingress:
                     self._push_streams()
                     moved = True
                 now = time.monotonic()
+                if self.governor is not None:
+                    self.governor.tick(now)
                 if now - t_snap > 0.2 or moved:
                     self.last_snapshot = o.snapshot()
                     # one plain-data mirror per refresh; /metrics (HTTP
@@ -264,10 +367,10 @@ class Ingress:
         moved = False
         while True:
             try:
-                idx, req = self._submit_q.get_nowait()
+                idx, spec = self._submit_q.get_nowait()
             except queue.Empty:
                 return moved
-            self.orch.submit_to(idx, req)
+            self.orch.submit_to(idx, spec)
             with self._lock:
                 n = self._pending.get(idx, 0) - 1
                 if n > 0:
@@ -312,8 +415,13 @@ class Ingress:
                 if parsed is None:          # EOF before a request line
                     return
                 method, path, headers, body = parsed
-            except (_BadRequest, asyncio.IncompleteReadError,
-                    ValueError, UnicodeDecodeError):
+            except _BadRequest as e:
+                self.counters.bad_requests += 1
+                await self._respond(writer, 400,
+                                    e.body or {"error": "bad request"})
+                return
+            except (asyncio.IncompleteReadError, ValueError,
+                    UnicodeDecodeError):
                 self.counters.bad_requests += 1
                 await self._respond(writer, 400, {"error": "bad request"})
                 return
@@ -410,6 +518,9 @@ class Ingress:
     _TTFT_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0)
     _ITL_BUCKETS = (0.001, 0.0025, 0.005, 0.01, 0.025, 0.05,
                     0.1, 0.25, 1.0)
+    # per-class ITL is on the ENGINE clock (mean steps between tokens,
+    # 1.0 = a stream that decoded every step; see instrument.py)
+    _CLASS_ITL_BUCKETS = (1.0, 1.25, 1.5, 2.0, 4.0, 8.0, 16.0)
 
     def _build_mirror(self) -> dict:
         """Plain-data snapshot of everything /metrics exposes, built on
@@ -431,7 +542,12 @@ class Ingress:
                                   / max(h.n_blocks, 1)) if up else 0.0,
                 "tokens_per_s": tel.tokens_per_s(),
                 "ttfts": list(tel.ttfts),
-                "itls": list(tel.step_seconds)})
+                "itls": list(tel.step_seconds),
+                "token_budget": tel.budget,
+                "class_ttfts": {c: list(d)
+                                for c, d in tel.class_ttfts.items()},
+                "class_itls": {c: list(d)
+                               for c, d in tel.class_itls.items()}})
         return {
             "instances": inst,
             "tokens_per_s": snap.tokens_per_s if snap else 0.0,
@@ -507,6 +623,30 @@ class Ingress:
                               "Inter-token latency: wall seconds per "
                               "engine step (rolling window).", e["itls"],
                               self._ITL_BUCKETS, labels=lab)
+                reg.gauge("repro_token_budget",
+                          "Per-step token budget in force (0 = phase "
+                          "scheduler, nothing to govern).",
+                          e["token_budget"], labels=lab)
+                for cls in sorted(e["class_ttfts"]):
+                    reg.histogram(
+                        "repro_class_ttft_steps",
+                        "Per-SLO-class time to first token, "
+                        "engine-clock steps (rolling window).",
+                        e["class_ttfts"][cls], self._TTFT_BUCKETS,
+                        labels={"instance": str(e["idx"]),
+                                "slo_class": cls})
+                for cls in sorted(e["class_itls"]):
+                    reg.histogram(
+                        "repro_class_itl_steps",
+                        "Per-SLO-class mean inter-token gap, "
+                        "engine-clock steps (1.0 = never stalled).",
+                        e["class_itls"][cls], self._CLASS_ITL_BUCKETS,
+                        labels={"instance": str(e["idx"]),
+                                "slo_class": cls})
+        if self.governor is not None:
+            reg.counter("repro_budget_adjustments_total",
+                        "Token-budget retargets applied by the "
+                        "ingress governor.", self.governor.adjustments)
         reg.counter("repro_traces_exported_total",
                     "Finished traces written to the JSONL sink.",
                     self.tracer.exported)
@@ -532,13 +672,33 @@ class Ingress:
         }
 
     # --------------------------------------------------------- completions
-    def _parse_completion(self, body: bytes) -> dict:
+    # the completion body's contract: exactly these top-level keys
+    _BODY_KEYS = frozenset((
+        "prompt", "max_tokens", "temperature", "top_k", "seed",
+        "eos_id", "stream", "slo_class", "deadline_ms"))
+
+    def _parse_completion(self, body: bytes):
+        """Parse one completions body into ``(RequestSpec, stream)``.
+
+        The 400 taxonomy (module docstring): unknown top-level keys
+        answer ``unknown_fields`` (naming them), and ``SpecError`` codes
+        from spec validation pass through verbatim (``unknown_slo_class``
+        / ``bad_deadline``); anything else malformed keeps the generic
+        body. The spec is minted with ``rid=0`` — the real stream id is
+        stamped on after admission (rids are only spent on accepts)."""
         try:
             obj = json.loads(body.decode("utf-8"))
         except (json.JSONDecodeError, UnicodeDecodeError) as e:
             raise _BadRequest from e
         if not isinstance(obj, dict):
             raise _BadRequest
+        unknown = sorted(set(obj) - self._BODY_KEYS)
+        if unknown:
+            raise _BadRequest({
+                "error": "unknown_fields",
+                "detail": ("unknown top-level keys: "
+                           + ", ".join(unknown)),
+                "fields": unknown})
         prompt = obj.get("prompt")
         if isinstance(prompt, str) and prompt:
             toks = byte_tokens(prompt, self.orch.cfg.vocab_size)
@@ -550,36 +710,49 @@ class Ingress:
         if len(toks) > 8192:
             raise _BadRequest
         try:
-            out = {
-                "prompt": toks,
-                "max_tokens": int(obj.get("max_tokens", 16)),
-                "temperature": float(obj.get("temperature", 0.0)),
-                "top_k": int(obj.get("top_k", 0)),
-                "seed": int(obj.get("seed", 0)),
-                "eos_id": (None if obj.get("eos_id") is None
-                           else int(obj["eos_id"])),
-                "stream": bool(obj.get("stream", False)),
-            }
+            spec = RequestSpec(
+                rid=0, prompt=toks,
+                max_tokens=int(obj.get("max_tokens", 16)),
+                sampling=SamplingParams(
+                    temperature=float(obj.get("temperature", 0.0)),
+                    top_k=int(obj.get("top_k", 0)),
+                    seed=int(obj.get("seed", 0))),
+                eos_id=(None if obj.get("eos_id") is None
+                        else int(obj["eos_id"])),
+                slo_class=str(obj.get("slo_class", "standard")),
+                deadline_ms=(None if obj.get("deadline_ms") is None
+                             else float(obj["deadline_ms"])))
+            stream = bool(obj.get("stream", False))
         except (TypeError, ValueError) as e:
             raise _BadRequest from e
-        if not 1 <= out["max_tokens"] <= 4096:
+        if spec.max_tokens > 4096:
             raise _BadRequest
-        return out
+        try:
+            spec.validate()
+        except SpecError as e:
+            if e.code == "malformed":
+                raise _BadRequest from e
+            raise _BadRequest({"error": e.code,
+                               "detail": e.detail}) from e
+        return spec, stream
 
     async def _completions(self, writer, body: bytes):
         t_accept = OBS.server_now()
         try:
-            spec = self._parse_completion(body)
-        except _BadRequest:
+            spec, stream = self._parse_completion(body)
+        except _BadRequest as e:
             self.counters.bad_requests += 1
-            await self._respond(writer, 400,
-                                {"error": "malformed completion request"})
+            await self._respond(
+                writer, 400,
+                e.body or {"error": "malformed completion request"})
             return
         # admission: route on CACHED gauges, charging not-yet-pumped
-        # accepts so a same-tick burst cannot over-admit
+        # accepts so a same-tick burst cannot over-admit. The router
+        # sees the full spec — batch-class traffic gets one seat less
+        # of queue headroom (router._headroom).
         with self._lock:
             t_route = OBS.server_now()
-            decision = self.orch.route(prompt=spec["prompt"],
+            decision = self.orch.route(spec=spec,
                                        pending=dict(self._pending))
             if decision is None:
                 self.counters.rejected_429 += 1
@@ -587,6 +760,7 @@ class Ingress:
                 self._pending[decision.idx] = \
                     self._pending.get(decision.idx, 0) + 1
                 rid = next(self._rids)
+                spec = dataclasses.replace(spec, rid=rid)
                 sess = _Session(rid, asyncio.Queue())
                 self._sessions[rid] = sess
                 self.counters.requests += 1
@@ -602,20 +776,16 @@ class Ingress:
         # open the trace BEFORE the submit queue: the pump attaches its
         # context to the RPC frame, so engine spans record from hook one
         trace_id = self.tracer.begin(
-            rid, t0=t_accept, prompt_tokens=int(len(spec["prompt"])),
-            max_tokens=spec["max_tokens"], stream=spec["stream"])
+            rid, t0=t_accept, prompt_tokens=int(len(spec.prompt)),
+            max_tokens=spec.max_tokens, stream=stream,
+            slo_class=spec.slo_class)
         self.tracer.span(rid, "accept", t_accept, t_route)
         self.tracer.span(rid, "route", t_route,
                          attrs={"instance": decision.idx,
                                 "reason": decision.reason,
                                 "matched_blocks": decision.matched_blocks})
-        req = Request(rid=rid, prompt=spec["prompt"],
-                      max_new_tokens=spec["max_tokens"],
-                      eos_id=spec["eos_id"],
-                      temperature=spec["temperature"],
-                      top_k=spec["top_k"], seed=spec["seed"])
-        self._submit_q.put((decision.idx, req))
-        if spec["stream"]:
+        self._submit_q.put((decision.idx, spec))
+        if stream:
             self.counters.streamed += 1
             await self._stream_response(writer, rid, decision, sess,
                                         trace_id)

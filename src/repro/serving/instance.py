@@ -42,6 +42,7 @@ import jax
 from repro.serving import instrument as INS
 from repro.serving.engine import Engine, Request
 from repro.serving.instrument import EngineTelemetry
+from repro.serving.request import RequestSpec
 
 
 def pristine(req: Request) -> Request:
@@ -75,11 +76,19 @@ class InstanceHandle:
     telemetry: EngineTelemetry
 
     # ------------------------------------------------------ serving ops
-    def submit(self, req: Request, trace: Optional[dict] = None):
-        """Enqueue ``req``; ``trace`` is an optional observe.Tracer
+    def submit(self, spec: RequestSpec, trace: Optional[dict] = None):
+        """Enqueue one request, described by its construction-time
+        ``RequestSpec`` (serving/request.py — the engine mints the
+        mutable ``Request``). ``trace`` is an optional observe.Tracer
         propagation context ({"trace_id", "rid"}) that makes the
         instance record engine-side spans for this request."""
         raise NotImplementedError
+
+    def set_token_budget(self, budget: int) -> int:
+        """Retarget the engine's per-step token budget (the ingress
+        budget governor's knob). Returns the budget now in force; 0
+        means the instance has no budgeted scheduler to govern."""
+        return 0
 
     def step(self) -> List[Request]:
         raise NotImplementedError
@@ -257,10 +266,13 @@ class LocalInstance(InstanceHandle):
         self._recorder = None   # lazy observe.EngineSpanRecorder
 
     # ------------------------------------------------------ serving ops
-    def submit(self, req: Request, trace: Optional[dict] = None):
+    def submit(self, spec: RequestSpec, trace: Optional[dict] = None):
         if trace is not None:
             self.register_trace(trace)
-        self.engine.submit(req)
+        self.engine.submit(spec)
+
+    def set_token_budget(self, budget: int) -> int:
+        return self.engine.set_token_budget(budget)
 
     # ---------------------------------------------------------- tracing
     def register_trace(self, ctx: dict):

@@ -98,6 +98,14 @@ class EngineTelemetry:
         self.budget = 0
         self.ttfts: Deque[float] = deque(maxlen=window)
         self.queue_delays: Deque[float] = deque(maxlen=window)
+        # per-SLO-class rolling windows (class -> deque), populated
+        # lazily so a plane that never sends slo_class pays nothing.
+        # TTFT as above; ITL is the per-finished-request mean
+        # inter-token gap ON THE ENGINE CLOCK — ~1.0 for a stream that
+        # decoded every step, >1 when preemption/budget pressure
+        # stalled it, which is exactly the per-class fairness signal
+        self.class_ttfts: dict = {}
+        self.class_itls: dict = {}
         self.total_tokens = 0
         self.total_finished = 0
         self.preemptions_seen = 0
@@ -121,11 +129,21 @@ class EngineTelemetry:
             self.budget = budget
 
     def record_finished(self, requests: Iterable):
+        w = self.step_seconds.maxlen
         for r in requests:
             self.finished_latencies.append(r.finish_time - r.submit_time)
             self.total_finished += 1
+            cls = getattr(r, "slo_class", "standard")
             if r.first_token_time is not None:
-                self.ttfts.append(r.first_token_time - r.submit_time)
+                ttft = r.first_token_time - r.submit_time
+                self.ttfts.append(ttft)
+                self.class_ttfts.setdefault(
+                    cls, deque(maxlen=w)).append(ttft)
+                n = len(getattr(r, "generated", ()))
+                if n > 1:
+                    itl = (r.finish_time - r.first_token_time) / (n - 1)
+                    self.class_itls.setdefault(
+                        cls, deque(maxlen=w)).append(itl)
             start = getattr(r, "prefill_start_time", None)
             if start is not None:
                 self.queue_delays.append(start - r.submit_time)
@@ -173,6 +191,22 @@ class EngineTelemetry:
             return 0.0
         return float(np.quantile(np.asarray(self.queue_delays), q))
 
+    def class_ttft_quantile(self, cls: str, q: float) -> float:
+        """Per-SLO-class TTFT quantile (0.0 when the class has no
+        finished requests in the window yet)."""
+        d = self.class_ttfts.get(cls)
+        if not d:
+            return 0.0
+        return float(np.quantile(np.asarray(d), q))
+
+    def class_itl_quantile(self, cls: str, q: float) -> float:
+        """Per-SLO-class mean-inter-token-latency quantile (engine
+        clock; 1.0 = never stalled)."""
+        d = self.class_itls.get(cls)
+        if not d:
+            return 0.0
+        return float(np.quantile(np.asarray(d), q))
+
     def tokens_per_s(self) -> float:
         wall = sum(self.step_seconds)
         return sum(self.step_tokens) / wall if wall > 0 else 0.0
@@ -216,7 +250,11 @@ class EngineTelemetry:
                 "packed_tokens": list(self.packed_tokens),
                 "budget": self.budget,
                 "ttfts": list(self.ttfts),
-                "queue_delays": list(self.queue_delays)}
+                "queue_delays": list(self.queue_delays),
+                "class_ttfts": {c: list(d)
+                                for c, d in self.class_ttfts.items()},
+                "class_itls": {c: list(d)
+                               for c, d in self.class_itls.items()}}
 
     def load_state(self, state: dict):
         """Overwrite this telemetry with a serialized snapshot (in place:
@@ -240,6 +278,10 @@ class EngineTelemetry:
         self.ttfts = deque(state.get("ttfts", []), maxlen=w)
         self.queue_delays = deque(state.get("queue_delays", []),
                                   maxlen=w)
+        self.class_ttfts = {c: deque(v, maxlen=w) for c, v
+                            in state.get("class_ttfts", {}).items()}
+        self.class_itls = {c: deque(v, maxlen=w) for c, v
+                           in state.get("class_itls", {}).items()}
 
 
 def timed_step(engine, telemetry: EngineTelemetry):

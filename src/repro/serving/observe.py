@@ -337,7 +337,12 @@ class Tracer:
     def finish(self, rid: int, **attrs) -> Optional[dict]:
         """Close the root span, export the trace as one JSONL line, and
         move it to the finished ring. Returns the record (None if the
-        rid has no live trace)."""
+        rid has no live trace).
+
+        SLO attainment: when the closing attrs carry a ``deadline_ms``
+        (the request's wall-clock completion target), the tracer stamps
+        ``latency_ms`` and ``deadline_met`` from the root span's own
+        extent — the one clock that saw both the accept and the finish."""
         with self._lock:
             rec = self._live.pop(rid, None)
             if rec is None:
@@ -345,6 +350,10 @@ class Tracer:
             del self._by_trace[rec["trace_id"]]
             root = rec["spans"][0]
             root["t1"] = server_now()
+            if attrs.get("deadline_ms") is not None:
+                lat_ms = (root["t1"] - root["t0"]) * 1e3
+                attrs["latency_ms"] = lat_ms
+                attrs["deadline_met"] = bool(lat_ms <= attrs["deadline_ms"])
             root["attrs"].update(attrs)
             self.finished.append(rec)
             self._export(rec)

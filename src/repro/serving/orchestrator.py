@@ -74,6 +74,7 @@ from repro.serving import transport as TR
 from repro.serving.engine import Engine, Request
 from repro.serving.instance import InstanceHandle, LocalInstance
 from repro.serving.instrument import FaultCounters
+from repro.serving.request import RequestSpec
 from repro.serving.router import (PrefixAffinityRouter, RouteDecision,
                                   RouterPolicy)
 
@@ -288,52 +289,57 @@ class Orchestrator:
                 pass
 
     # -------------------------------------------------------------- intake
-    def submit(self, req: Request):
+    def submit(self, spec: RequestSpec):
         """Route through the policy (serving/router.py — default:
         prefix-affinity on the prompt's content-chain keys, falling back
         to most free pool blocks / shortest queue / lowest id) and admit.
+        Takes the construction-time ``RequestSpec`` — the chosen
+        instance's engine mints the mutable ``Request``.
 
         A routed peer that fails DURING the submit (died, or hung past
         its deadline) does not lose the request: the handle mirrors the
         pristine clone before sending, so failing the peer replays the
         clone — with everything else it held — onto a survivor."""
-        self.submit_to(self._route(prompt=req.prompt), req)
+        self.submit_to(self._route(spec=spec), spec)
 
-    def submit_to(self, idx: int, req: Request):
+    def submit_to(self, idx: int, spec: RequestSpec):
         """Admit on a SPECIFIC instance — the ingress routes on its own
-        thread (``route``) and hands (idx, req) to the pump, which must
+        thread (``route``) and hands (idx, spec) to the pump, which must
         not re-route; bookkeeping and failure handling stay here either
         way."""
-        self._home[req.rid] = idx
+        self._home[spec.rid] = idx
         # trace context rides the submit itself (piggybacked on the RPC
         # frame for a remote instance) so engine-side spans record from
         # the request's very first hook
-        trace = self.tracer.ctx(req.rid) if self.tracer else None
+        trace = self.tracer.ctx(spec.rid) if self.tracer else None
         t_obs = time.monotonic()
         try:
             # positional call when untraced: handle subclasses predating
             # the trace kwarg (tests stub the surface) keep working
             if trace is None:
-                self.instances[idx].submit(req)
+                self.instances[idx].submit(spec)
             else:
-                self.instances[idx].submit(req, trace=trace)
+                self.instances[idx].submit(spec, trace=trace)
         except (TR.TransportClosed, TR.RpcTimeout) as e:
             self._fail_instance(idx, hung=isinstance(e, TR.RpcTimeout),
                                 t_obs=t_obs)
 
-    def route(self, prompt=None,
+    def route(self, spec: Optional[RequestSpec] = None, prompt=None,
               pending: Optional[Dict[int, int]] = None
               ) -> Optional[RouteDecision]:
         """Admission-checked routing for the ingress: the policy's full
         verdict, or None when every alive instance is at ``max_queue``
         (counting ``pending`` — accepted-but-not-yet-submitted requests)
-        — the HTTP 429 + Retry-After signal. Reads only cached gauges:
-        safe to call off the orchestrator's thread."""
+        — the HTTP 429 + Retry-After signal. The ``spec`` makes the
+        verdict class-aware (batch traffic is shed one seat early).
+        Reads only cached gauges: safe to call off the orchestrator's
+        thread."""
         alive = self._alive()
         if not alive:
             self.flightrec.record("route", verdict="no-alive-instance")
             return None
-        d = self.router.select(self.instances, alive, prompt=prompt,
+        d = self.router.select(self.instances, alive, spec=spec,
+                               prompt=prompt,
                                pending=pending, max_queue=self.max_queue)
         if d is None:
             self.flightrec.record("route", verdict="shed",
@@ -345,11 +351,11 @@ class Orchestrator:
         return d
 
     def _route(self, among: Optional[List[int]] = None,
-               prompt=None) -> int:
+               prompt=None, spec=None) -> int:
         cands = among if among is not None else self._alive()
         assert cands, "no alive instance to route to"
         return self.router.select(self.instances, cands,
-                                  prompt=prompt).idx
+                                  spec=spec, prompt=prompt).idx
 
     # ------------------------------------------------------------ main loop
     def _step_all(self) -> List[Request]:
@@ -504,8 +510,15 @@ class Orchestrator:
             if spans:
                 self.tracer.ingest(spans)
         for r in fin:
+            # SLO attainment rides the root span: class + deadline are
+            # echoed, and the tracer stamps deadline_met from the root's
+            # own wall-clock extent at close time
             self.tracer.finish(r.rid, instance=self._home.get(r.rid),
-                               tokens=len(r.generated))
+                               tokens=len(r.generated),
+                               slo_class=getattr(r, "slo_class",
+                                                 "standard"),
+                               deadline_ms=getattr(r, "deadline_ms",
+                                                   None))
 
     # ------------------------------------------------------ token streams
     def _collect_streams(self, fin: List[Request]):
@@ -1159,12 +1172,16 @@ class Orchestrator:
         except TR.TransportError:
             pass
         for req in replay:
+            # a replay re-runs the request from scratch: rebuild the
+            # construction-time spec (SLO class and deadline ride along)
+            # and let the survivor's engine mint a fresh Request
+            spec = RequestSpec.from_request(req)
             placed = False
             while not placed:
                 survivors = self._alive()
                 assert survivors, \
                     "every instance died: nothing to recover onto"
-                j = self._route(survivors, prompt=req.prompt)
+                j = self._route(survivors, spec=spec)
                 # re-attach the live trace: the replayed continuation's
                 # spans belong to the SAME tree as the lost ones
                 trace = (self.tracer.ctx(req.rid)
@@ -1172,9 +1189,9 @@ class Orchestrator:
                 t_sub = time.monotonic()
                 try:
                     if trace is None:
-                        self.instances[j].submit(req)
+                        self.instances[j].submit(spec)
                     else:
-                        self.instances[j].submit(req, trace=trace)
+                        self.instances[j].submit(spec, trace=trace)
                 except (TR.TransportClosed, TR.RpcTimeout) as e:
                     # the chosen survivor failed DURING recovery. Its
                     # mirror already holds the clone (mirror-first

@@ -55,6 +55,7 @@ from repro.serving import instrument as INS
 from repro.serving import observe as OBS
 from repro.serving import transport as TR
 from repro.serving.instance import InstanceHandle, pristine
+from repro.serving.request import RequestSpec
 from repro.serving.instrument import EngineTelemetry
 from repro.serving.engine import Request
 
@@ -69,9 +70,12 @@ class EngineServer:
         self.recorder = None   # lazy observe.EngineSpanRecorder
 
     # ---- serving ops
-    def submit(self, req: Request):
-        self.engine.submit(req)
+    def submit(self, spec: RequestSpec):
+        self.engine.submit(spec)
         return len(self.engine.queue)
+
+    def set_token_budget(self, budget: int) -> int:
+        return self.engine.set_token_budget(int(budget))
 
     def step(self):
         done = INS.timed_step(self.engine, self.telemetry)
@@ -213,7 +217,8 @@ class EngineServer:
 
     def dispatch(self) -> dict:
         d = {op: getattr(self, op) for op in (
-            "submit", "step", "apply_plan", "requeue_front", "push_queue",
+            "submit", "set_token_budget", "step", "apply_plan",
+            "requeue_front", "push_queue",
             "drain_queue", "info", "pause_request", "resume_request",
             "snapshot_request", "prepare_resume", "commit_resume",
             "abort_resume", "ping", "heartbeat", "crash",
@@ -408,9 +413,14 @@ class EngineProxy(InstanceHandle):
     # ops piggyback the server's returned depth; migration ops re-pull
     # info — they are rare, the extra round trip is noise), so routing
     # and run-until-done loops never act on a stale zero.
-    def submit(self, req: Request, trace: Optional[dict] = None):
-        self._inflight[req.rid] = pristine(req)
-        self._info["queue_len"] = self._call("submit", req, _trace=trace)
+    def submit(self, spec: RequestSpec, trace: Optional[dict] = None):
+        # the mirror holds the minted-but-never-run Request: pristine by
+        # construction, replayable token-identically after a crash
+        self._inflight[spec.rid] = spec.to_request()
+        self._info["queue_len"] = self._call("submit", spec, _trace=trace)
+
+    def set_token_budget(self, budget: int) -> int:
+        return int(self._call("set_token_budget", int(budget)))
 
     def step(self) -> List[Request]:
         return self.finish_step(self._call("step"))

@@ -1,0 +1,150 @@
+"""The one request representation (``RequestSpec``) and its validation.
+
+Before this module, a request's parameters lived in three divergent
+ad-hoc shapes: the ingress parsed JSON into a loose ``spec`` dict,
+``Engine.submit`` took a fully-formed mutable ``Request``, and the
+migration pause/resume path shipped yet another raw dict. There was no
+principled place to thread an SLO class or a deadline through the
+stack — each new field had to be added to every shape by hand and
+silently fell off whichever path forgot it.
+
+``RequestSpec`` is the construction-time contract everywhere now:
+
+* the HTTP ingress parses a completion body straight into a spec
+  (unknown fields, bad SLO classes and non-positive deadlines are
+  rejected with distinct 400 bodies — see ``SpecError.code``);
+* ``Engine.submit`` accepts ONLY a spec and mints the engine-internal
+  mutable ``Request`` from it (``to_request``), so runtime bookkeeping
+  (generated tokens, slot, timestamps, preemption counters) can never
+  leak into the submission API;
+* the router's admission decision sees the spec (``slo_class`` decides
+  how much queue headroom a request may consume);
+* replay and oracle re-runs rebuild a pristine spec from a live request
+  (``from_request``) instead of hand-rolling ``dataclasses.replace``
+  field lists that rot whenever ``Request`` grows a field.
+
+The spec is immutable (frozen): submitting the same spec to two engines
+can never alias state, which is what makes the crash-replay and
+token-identity oracles trivially safe.
+
+``MIGRATION_WIRE_VERSION`` stamps every pause/snapshot payload the
+engine exports. Resume-side checks reject an old or missing version
+with a clear ``ValueError`` (surfaced as ``RemoteError`` over RPC)
+instead of a ``KeyError`` deep inside ``_bind_resumed``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+# SLO classes, highest priority first. ``interactive`` streams are
+# latency-sensitive (chat turns); ``standard`` is the default;
+# ``batch`` is throughput traffic that may be arbitrarily delayed and
+# is always the first preemption victim.
+SLO_CLASSES = ("interactive", "standard", "batch")
+
+# Version stamped into pause_request / snapshot_request payloads.
+# Bump when the payload shape changes; resume-side ops reject any
+# mismatch so a rolling upgrade fails loudly, not with a KeyError.
+MIGRATION_WIRE_VERSION = 2
+
+
+class SpecError(ValueError):
+    """A request spec failed validation. ``code`` is a stable
+    machine-readable discriminator the ingress maps to its 400
+    taxonomy; ``detail`` is the human sentence."""
+
+    def __init__(self, code: str, detail: str):
+        super().__init__(detail)
+        self.code = code
+        self.detail = detail
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """How to sample the continuation — separated from the spec so the
+    knobs travel (and default) as one unit."""
+    temperature: float = 0.0
+    top_k: int = 0
+    seed: int = 0
+
+    def validate(self):
+        if self.temperature < 0.0:
+            raise SpecError("malformed", f"temperature < 0: {self.temperature}")
+        if self.top_k < 0:
+            raise SpecError("malformed", f"top_k < 0: {self.top_k}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestSpec:
+    """Everything the caller gets to say about one generation request.
+
+    ``rid`` is the caller-assigned stream id (the ingress and serve
+    loops mint them); ``prompt`` is a 1-D int token array. ``deadline_ms``
+    is a wall-clock completion target used for ordering within an SLO
+    class and for attainment accounting — it is not an enforcement
+    mechanism (a missed deadline finishes late, it is not killed)."""
+    rid: int
+    prompt: Union[np.ndarray, Sequence[int]]
+    max_tokens: int = 16
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    eos_id: Optional[int] = None
+    slo_class: str = "standard"
+    deadline_ms: Optional[float] = None
+
+    def validate(self):
+        """Raise ``SpecError`` on any out-of-contract field. Called by
+        ``Engine.submit`` (and by the ingress before routing, so the
+        client sees a typed 400 instead of an engine assertion)."""
+        if len(self.prompt) == 0:
+            raise SpecError("malformed", "empty prompt")
+        if self.max_tokens < 1:
+            raise SpecError("malformed", f"max_tokens < 1: {self.max_tokens}")
+        if self.slo_class not in SLO_CLASSES:
+            raise SpecError(
+                "unknown_slo_class",
+                f"unknown slo_class {self.slo_class!r} "
+                f"(allowed: {', '.join(SLO_CLASSES)})")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise SpecError(
+                "bad_deadline",
+                f"deadline_ms must be positive, got {self.deadline_ms}")
+        self.sampling.validate()
+
+    def to_request(self):
+        """Mint the engine-internal mutable ``Request``. Fresh every
+        call — two engines fed the same spec never share state."""
+        from repro.serving.engine import Request
+        return Request(
+            rid=self.rid,
+            prompt=self.prompt,
+            max_new_tokens=self.max_tokens,
+            eos_id=self.eos_id,
+            temperature=self.sampling.temperature,
+            top_k=self.sampling.top_k,
+            seed=self.sampling.seed,
+            slo_class=self.slo_class,
+            deadline_ms=self.deadline_ms,
+        )
+
+    @classmethod
+    def from_request(cls, req) -> "RequestSpec":
+        """Recover the construction-time spec from a live (possibly
+        finished) ``Request`` — the principled pristine clone used by
+        crash replay and token-identity oracles. A spec passes through
+        unchanged (it is already pristine), so replay worklists may mix
+        live requests and mirrored specs."""
+        if isinstance(req, cls):
+            return req
+        return cls(
+            rid=req.rid,
+            prompt=req.prompt,
+            max_tokens=req.max_new_tokens,
+            sampling=SamplingParams(temperature=req.temperature,
+                                    top_k=req.top_k, seed=req.seed),
+            eos_id=req.eos_id,
+            slo_class=getattr(req, "slo_class", "standard"),
+            deadline_ms=getattr(req, "deadline_ms", None),
+        )

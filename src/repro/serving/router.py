@@ -33,6 +33,14 @@ admissible it returns None and the ingress answers 429 + Retry-After
 instead of queueing unboundedly — load shedding at the front door, not
 OOM at the pool.
 
+**SLO-aware admission**: the decision sees the full ``RequestSpec``
+(serving/request.py), not just the prompt. Batch-class requests get one
+seat LESS of queue headroom per instance: under sustained pressure the
+pod sheds batch traffic a beat before it sheds interactive/standard
+traffic, so the latency classes always find the last seat. (Scheduling
+WITHIN an admitted queue is the engine scheduler's job — the router
+only decides who gets through the door.)
+
 ``RoundRobinRouter`` is the affinity-blind baseline the ingress bench
 measures against (BENCH_ingress.json's >= 1.5x pod-wide hit-rate gate).
 """
@@ -71,13 +79,17 @@ def chain_hexkeys(prompt, block_size: int) -> List[str]:
 
 class RouterPolicy:
     """Interface: pick one of ``among`` (indices into ``handles``) for a
-    prompt, or None when admission must back off. ``pending`` maps
-    instance index -> requests accepted upstream (by the ingress) but
-    not yet visible in ``queue_len`` — the router charges them so a
-    burst cannot over-admit between steps."""
+    request, or None when admission must back off. ``spec`` is the
+    request's ``RequestSpec`` (admission is class-aware — see module
+    docstring); ``prompt`` alone still works for spec-less internal
+    callers (replay, migration re-homing). ``pending`` maps instance
+    index -> requests accepted upstream (by the ingress) but not yet
+    visible in ``queue_len`` — the router charges them so a burst
+    cannot over-admit between steps."""
 
     def select(self, handles: Sequence, among: Sequence[int], *,
-               prompt=None, pending: Optional[Dict[int, int]] = None,
+               spec=None, prompt=None,
+               pending: Optional[Dict[int, int]] = None,
                max_queue: Optional[int] = None) -> Optional[RouteDecision]:
         raise NotImplementedError
 
@@ -88,6 +100,16 @@ def _load(handles, idx: int, pending: Dict[int, int]):
     index — the deterministic tiebreak."""
     h = handles[idx]
     return (-h.free_blocks(), h.queue_len() + pending.get(idx, 0), idx)
+
+
+def _headroom(spec, max_queue) -> Optional[int]:
+    """Class-adjusted admission bound: batch traffic may not take an
+    instance's LAST queue seat (when there is more than one)."""
+    if max_queue is None or spec is None:
+        return max_queue
+    if getattr(spec, "slo_class", "standard") == "batch" and max_queue > 1:
+        return max_queue - 1
+    return max_queue
 
 
 def _admissible(handles, among, pending, max_queue) -> List[int]:
@@ -122,10 +144,13 @@ class PrefixAffinityRouter(RouterPolicy):
             n += 1
         return n
 
-    def select(self, handles, among, *, prompt=None, pending=None,
-               max_queue=None) -> Optional[RouteDecision]:
+    def select(self, handles, among, *, spec=None, prompt=None,
+               pending=None, max_queue=None) -> Optional[RouteDecision]:
         pending = pending or {}
-        cands = _admissible(handles, among, pending, max_queue)
+        if prompt is None and spec is not None:
+            prompt = spec.prompt
+        cands = _admissible(handles, among, pending,
+                            _headroom(spec, max_queue))
         if not cands:
             return None
         best = None
@@ -155,10 +180,11 @@ class VacancyRouter(RouterPolicy):
     behavior, kept as an explicit policy (and the affinity router's
     fallback order)."""
 
-    def select(self, handles, among, *, prompt=None, pending=None,
-               max_queue=None) -> Optional[RouteDecision]:
+    def select(self, handles, among, *, spec=None, prompt=None,
+               pending=None, max_queue=None) -> Optional[RouteDecision]:
         pending = pending or {}
-        cands = _admissible(handles, among, pending, max_queue)
+        cands = _admissible(handles, among, pending,
+                            _headroom(spec, max_queue))
         if not cands:
             return None
         return RouteDecision(min(cands,
@@ -172,10 +198,11 @@ class RoundRobinRouter(RouterPolicy):
     def __init__(self):
         self._next = 0
 
-    def select(self, handles, among, *, prompt=None, pending=None,
-               max_queue=None) -> Optional[RouteDecision]:
+    def select(self, handles, among, *, spec=None, prompt=None,
+               pending=None, max_queue=None) -> Optional[RouteDecision]:
         pending = pending or {}
-        cands = _admissible(handles, among, pending, max_queue)
+        cands = _admissible(handles, among, pending,
+                            _headroom(spec, max_queue))
         if not cands:
             return None
         idx = cands[self._next % len(cands)]

@@ -1,28 +1,41 @@
-"""Token-budget continuous batching policy (Sarathi-Serve / vLLM style).
+"""Pluggable step-scheduling policies over the paged engine.
 
 The engine's original admission was two-phase: a prefill WAVE (whole
-prompts, one bucketed forward) alternating with decode steps. One long
-prompt therefore stalled every in-flight decode for its full prefill,
-and the batch ran under-full on mixed workloads. This module replaces
-the phase split with ONE policy over one queue: every step packs a fixed
-per-step TOKEN BUDGET with
+prompts, one bucketed forward) alternating with decode steps. PR 7
+replaced that with token-budget continuous batching (Sarathi-Serve /
+vLLM style): every step packs a fixed per-step TOKEN BUDGET with
 
 * one token per ACTIVE decode slot (decode-first: a running stream never
   skips a step because of admission work), then
 * prefill CHUNKS for slots already mid-prefill (oldest first — finish
   what was started, so time-to-first-token is monotone per request), then
-* prompt prefixes for WAITING queue heads (FIFO), whole prompts when the
+* prompt prefixes for WAITING requests, whole prompts when the
   remaining budget covers them, otherwise one bounded first chunk.
 
-The scheduler is pure POLICY: ``plan`` reads engine state (active /
-prefilling / queue / pool) and returns grants; it never mutates the
-engine or the pool. The engine executes grants and applies its existing
-mechanisms — block allocation with backpressure (a grant that finds no
-blocks is simply not executed and retries next step), never-fits
-rejection, copy-on-write forks — so the OutOfBlocks semantics of the
-phase engine carry over unchanged. Youngest-first preemption is likewise
-expressed here (``victims``) as an ordering policy over the one
-admission order shared by decoding and prefilling slots.
+This module makes that policy PLUGGABLE. ``SchedulerPolicy`` is the
+interface (``plan`` packs one step, ``victims`` orders preemption), a
+name registry maps ``Engine(scheduler=...)`` strings to classes, and
+three policies ship:
+
+* ``"budget"`` (alias ``"token_budget"``) — the FIFO token-budget
+  packer above, unchanged semantics;
+* ``"phase"`` — the legacy wave/decode loop. Its admission lives in the
+  engine (``_admit_paged``), so ``plan`` is never called; it exists in
+  the registry so the engine resolves every scheduler the same way and
+  still gets a ``victims`` ordering from the policy object;
+* ``"slo"`` — class-aware packing (``SloScheduler``): the budget is
+  split across SLO classes in strict priority order
+  (interactive > standard > batch), with deadline-aware ordering within
+  a class and preemption that victimizes batch work youngest-first
+  before ever touching an interactive stream.
+
+Every policy is pure: ``plan`` reads engine state (active / prefilling /
+queue / pool) and returns grants; it never mutates the engine or the
+pool. The engine executes grants and applies its existing mechanisms —
+block allocation with backpressure (a grant that finds no blocks is
+simply not executed and retries next step), never-fits rejection,
+copy-on-write forks — so the OutOfBlocks semantics of the phase engine
+carry over unchanged.
 
 Non-final chunks are rounded DOWN to a multiple of the block size so a
 persisted prefill cursor always sits on a block boundary: context
@@ -32,14 +45,16 @@ half-written block.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional, Type
+
+from repro.serving.request import SLO_CLASSES
 
 
 @dataclasses.dataclass
 class ChunkGrant:
     """Permission to run ``n_tokens`` of one request's prefill this step.
 
-    ``slot is None`` marks a WAITING request (still at the queue head —
+    ``slot is None`` marks a WAITING request (still in the queue —
     the engine pops it on execution); otherwise the request is already
     mid-prefill in ``slot`` and this is a continuation chunk. ``final``
     says the grant reaches the end of the prompt, so the engine samples
@@ -68,9 +83,75 @@ class StepPlan:
         return self.packed / self.budget if self.budget else 0.0
 
 
-class TokenBudgetScheduler:
+@dataclasses.dataclass
+class SloStepPlan(StepPlan):
+    """A ``StepPlan`` that also reports how the prefill budget was split
+    across SLO classes (``class_tokens[cls]`` = prefill tokens granted
+    to that class this step). The split is an output, not a quota: the
+    policy is strict-priority with spill, so the shares always sum to
+    exactly the granted prefill tokens."""
+    class_tokens: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in SLO_CLASSES})
+
+
+class SchedulerPolicy:
+    """Interface every step scheduler implements. Policies are pure:
+    they read engine state and return orderings; the engine owns all
+    mutation (pops, allocation, preemption)."""
+
+    #: registry key the policy was resolved under
+    name: str = "?"
+    #: True when the engine should drive ``_admit_budget`` (plan-based
+    #: packing); False for the legacy engine-driven phase loop.
+    budgeted: bool = True
+
+    def plan(self, engine) -> StepPlan:
+        raise NotImplementedError
+
+    def victims(self, engine) -> List[int]:
+        """Preemption order under pool pressure: every slot holding
+        blocks (decoding or mid-prefill), preferred victims LAST —
+        the engine preempts from the tail of this list."""
+        raise NotImplementedError
+
+
+# ------------------------------------------------------------- registry
+POLICIES: Dict[str, Type[SchedulerPolicy]] = {}
+
+
+def register_policy(*names: str):
+    """Class decorator: expose a policy under one or more registry
+    names (the first is canonical, the rest are aliases)."""
+    def deco(cls):
+        cls.name = names[0]
+        for n in names:
+            POLICIES[n] = cls
+        return cls
+    return deco
+
+
+def make_scheduler(name: str, *, token_budget: int = 128,
+                   chunk_align: int = 16) -> SchedulerPolicy:
+    """Resolve a registry name to a policy instance. Unknown names
+    raise with the full menu so a typo in ``--scheduler`` fails fast."""
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r} "
+            f"(registered: {', '.join(sorted(POLICIES))})") from None
+    return cls(token_budget=token_budget, chunk_align=chunk_align)
+
+
+def _slo_class(req) -> str:
+    cls = getattr(req, "slo_class", "standard")
+    return cls if cls in SLO_CLASSES else "standard"
+
+
+@register_policy("budget", "token_budget")
+class TokenBudgetScheduler(SchedulerPolicy):
     """The default paged-engine scheduler (``Engine(scheduler=
-    "token_budget")``). ``chunk_align`` is the engine's block size."""
+    "budget")``). ``chunk_align`` is the engine's block size."""
 
     def __init__(self, token_budget: int = 128, chunk_align: int = 16):
         assert token_budget > 0, token_budget
@@ -126,3 +207,123 @@ class TokenBudgetScheduler:
         victims: their cursor resets and the chunks replay."""
         return [s for s in engine._admit_order
                 if s in engine.active or s in engine.prefilling]
+
+
+@register_policy("phase")
+class PhaseScheduler(SchedulerPolicy):
+    """The legacy wave/decode loop, as a registry entry. Admission is
+    engine-driven (``Engine._admit_paged`` / the dense batcher), so the
+    engine never calls ``plan`` — only the preemption ordering is policy
+    here, and it matches the budget scheduler's."""
+
+    budgeted = False
+
+    def __init__(self, token_budget: int = 0, chunk_align: int = 16):
+        # accepted for registry-signature uniformity; the phase loop has
+        # no per-step token budget.
+        self.token_budget = 0
+        self.chunk_align = max(int(chunk_align), 1)
+
+    def plan(self, engine) -> StepPlan:
+        raise NotImplementedError(
+            "phase admission is engine-driven; plan() is never called")
+
+    def victims(self, engine) -> List[int]:
+        return [s for s in engine._admit_order
+                if s in engine.active or s in engine.prefilling]
+
+
+@register_policy("slo")
+class SloScheduler(TokenBudgetScheduler):
+    """Class-aware token-budget packing.
+
+    The step budget is split across SLO classes in STRICT PRIORITY
+    order with spill — interactive work is charged first, standard
+    takes what interactive left, batch prefill chunks are sized from
+    whatever remains. The split is therefore work-conserving (an idle
+    interactive class donates its entire share down), which is what
+    keeps total throughput within a hair of the FIFO packer while
+    interactive TTFT collapses.
+
+    Within one class: continuation chunks first (admit order — finish
+    what was started), then fresh admissions ordered by deadline
+    (earliest ``deadline_ms`` first, deadline-less requests after, FIFO
+    among ties — Python's stable sort gives this for free).
+
+    Fresh admission stops globally the moment any class's next-in-line
+    cannot fit (alignment or budget): lower classes may not steal the
+    free SLOT that the blocked higher-class request needs next step.
+    That is the scheduling half of "interactive is never stalled by
+    batch work"; the preemption half is ``victims`` putting batch slots
+    youngest-first at the preferred end, so pool pressure never evicts
+    an interactive stream while any batch slot still holds blocks."""
+
+    def _deadline_key(self, req):
+        d = getattr(req, "deadline_ms", None)
+        return (0, d) if d is not None else (1, 0.0)
+
+    def plan(self, engine) -> SloStepPlan:
+        n_decode = len(engine.active)
+        remaining = self.token_budget - n_decode
+        grants: List[ChunkGrant] = []
+        class_tokens = {c: 0 for c in SLO_CLASSES}
+        free = len(engine._free_slots())
+        fresh_blocked = False       # a higher class couldn't admit: no
+        partial_used = False        # lower class may take its slot
+        for cls in SLO_CLASSES:
+            if remaining <= 0:
+                break
+            # continuations of this class, oldest first
+            for slot in list(engine._admit_order):
+                req = engine.prefilling.get(slot)
+                if req is None or _slo_class(req) != cls:
+                    continue
+                if remaining <= 0:
+                    break
+                left = engine.prefill_total(req) - req.prefill_pos
+                n = left if left <= remaining else self._align(remaining)
+                if n <= 0:
+                    continue
+                grants.append(ChunkGrant(req, slot, req.prefill_pos, n,
+                                         final=(n == left)))
+                class_tokens[cls] += n
+                remaining -= n
+            # fresh admissions of this class, deadline order (stable)
+            if fresh_blocked or partial_used:
+                continue
+            waiting = [r for r in engine.queue if _slo_class(r) == cls]
+            waiting.sort(key=self._deadline_key)
+            for req in waiting:
+                if free <= 0 or remaining <= 0:
+                    break
+                total = engine.prefill_total(req)
+                n = total if total <= remaining else self._align(remaining)
+                if n <= 0:
+                    fresh_blocked = True
+                    break           # within a class: never skip ahead
+                grants.append(ChunkGrant(req, None, 0, n,
+                                         final=(n == total)))
+                class_tokens[cls] += n
+                remaining -= n
+                free -= 1
+                if n < total:       # at most ONE partial fresh grant
+                    partial_used = True
+                    break
+        return SloStepPlan(n_decode, grants, self.token_budget,
+                           class_tokens)
+
+    def victims(self, engine) -> List[int]:
+        """Preemption order: batch slots are sacrificed youngest-first,
+        then standard, and interactive streams only when nothing else
+        holds blocks. The engine preempts from the TAIL, so the list is
+        [interactive oldest..youngest, standard ..., batch ...]."""
+        held = [s for s in engine._admit_order
+                if s in engine.active or s in engine.prefilling]
+
+        def req_of(s):
+            return engine.active.get(s) or engine.prefilling.get(s)
+
+        rank = {c: i for i, c in enumerate(SLO_CLASSES)}
+        # stable sort: admit order (oldest first) preserved within a
+        # class, batch classes pushed toward the tail
+        return sorted(held, key=lambda s: rank[_slo_class(req_of(s))])

@@ -167,6 +167,11 @@ def _msgpack_default(obj):
     if type(obj).__name__ == "Request":
         import dataclasses
         return {b"__req__": dataclasses.asdict(obj)}
+    if type(obj).__name__ == "RequestSpec":
+        import dataclasses
+        # asdict recurses into the nested SamplingParams; the decode
+        # hook rebuilds it
+        return {b"__spec__": dataclasses.asdict(obj)}
     raise TypeError(f"not msgpack-encodable: {type(obj)!r}")
 
 
@@ -177,6 +182,11 @@ def _msgpack_object_hook(obj: dict):
     if b"__req__" in obj and len(obj) == 1:
         from repro.serving.engine import Request
         return Request(**obj[b"__req__"])
+    if b"__spec__" in obj and len(obj) == 1:
+        from repro.serving.request import RequestSpec, SamplingParams
+        d = dict(obj[b"__spec__"])
+        d["sampling"] = SamplingParams(**d["sampling"])
+        return RequestSpec(**d)
     return obj
 
 

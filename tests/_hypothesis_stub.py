@@ -4,7 +4,7 @@ The test container does not ship ``hypothesis`` (and installing packages is
 off-limits), which made every property-test module fail at *collection* —
 taking the whole tier-1 run down with it. This stub implements just the
 surface the suite uses (``given``, ``settings``, ``strategies.integers/
-floats/lists``) with a deterministic PRNG, so property tests run as plain
+floats/lists/tuples``) with a deterministic PRNG, so property tests run as plain
 randomized tests. When the real package is importable, ``conftest.py``
 leaves it alone and this file is inert.
 """
@@ -30,6 +30,10 @@ def integers(min_value, max_value):
 
 def floats(min_value, max_value):
     return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+
+def tuples(*elements):
+    return _Strategy(lambda r: tuple(e.sample(r) for e in elements))
 
 
 def lists(elements, min_size=0, max_size=10):
@@ -76,6 +80,7 @@ def install(sys_modules):
     strat.integers = integers
     strat.floats = floats
     strat.lists = lists
+    strat.tuples = tuples
     pkg.strategies = strat
     sys_modules["hypothesis"] = pkg
     sys_modules["hypothesis.strategies"] = strat

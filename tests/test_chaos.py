@@ -24,8 +24,9 @@ import pytest
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import faults as FLT
-from repro.serving.engine import Engine, Request
-from repro.serving.instance import LocalInstance, pristine
+from repro.serving.engine import Engine
+from repro.serving.instance import LocalInstance
+from repro.serving.request import RequestSpec, SamplingParams
 from repro.serving.orchestrator import Orchestrator
 
 # benchmarks/ is a root-level namespace package, not on src/
@@ -82,14 +83,17 @@ def test_hung_destination_between_pause_and_commit_rolls_back(tiny):
     replay."""
     from repro.serving.remote_engine import EngineProxy
     cfg, params = tiny
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
-                    max_new_tokens=10, temperature=0.8, top_k=16,
-                    seed=7 + i) for i in range(2)]
+    reqs = [RequestSpec(rid=i,
+                        prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                        max_tokens=10,
+                        sampling=SamplingParams(temperature=0.8, top_k=16,
+                                                seed=7 + i))
+            for i in range(2)]
     ref = {}
     for r in reqs:
         e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-        e.submit(pristine(r))
+        e.submit(r)
         ref[r.rid] = e.run_until_done()[0].generated
 
     local = LocalInstance(Engine(cfg, params, max_batch=2, max_len=64,

@@ -79,7 +79,7 @@ def test_registry_covers_every_emitting_bench():
         "BENCH_chaos.json", "BENCH_distributed.json",
         "BENCH_ingress.json", "BENCH_module_scaling.json",
         "BENCH_observe.json", "BENCH_paged_engine.json",
-        "BENCH_prefix_sharing.json"}
+        "BENCH_prefix_sharing.json", "BENCH_slo.json"}
 
 
 def test_ingress_report_keys_match_the_emitter(tmp_path):

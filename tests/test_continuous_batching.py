@@ -11,8 +11,9 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
 from repro.serving.instrument import count_host_syncs
+from repro.serving.request import RequestSpec, SamplingParams
 from repro.serving.orchestrator import Orchestrator
 
 KEY = jax.random.PRNGKey(0)
@@ -31,8 +32,10 @@ def _prompts(sizes, seed=0, vocab=256):
 
 
 def _reqs(prompts, *, max_new=5, temperature=0.0, top_k=0):
-    return [Request(rid=i, prompt=p, max_new_tokens=max_new,
-                    temperature=temperature, top_k=top_k, seed=100 + i)
+    return [RequestSpec(rid=i, prompt=p, max_tokens=max_new,
+                        sampling=SamplingParams(temperature=temperature,
+                                                top_k=top_k,
+                                                seed=100 + i))
             for i, p in enumerate(prompts)]
 
 
@@ -119,12 +122,10 @@ def test_decode_not_stalled_by_long_prefill(tiny):
     short, long = _prompts([8, 64], seed=4)
     e = Engine(cfg, params, max_batch=2, max_len=96, cache_kind="paged",
                block_size=8, token_budget=24)
-    a = Request(rid=0, prompt=short, max_new_tokens=24)
-    e.submit(a)
+    a = e.submit(RequestSpec(rid=0, prompt=short, max_tokens=24))
     e.step()                      # A prefills whole (8 <= budget)
     assert e.active and a.slot in e.active
-    b = Request(rid=1, prompt=long, max_new_tokens=4)
-    e.submit(b)
+    b = e.submit(RequestSpec(rid=1, prompt=long, max_tokens=4))
     prefill_steps = 0
     while b.first_token_time is None:
         n = len(a.generated)
@@ -151,8 +152,7 @@ def test_mid_prefill_preemption_replays_identically(tiny):
                _reqs([prompt], temperature=0.7, top_k=8))
     e = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
                block_size=8, prefix_sharing=False, token_budget=16)
-    (r,) = _reqs([prompt], temperature=0.7, top_k=8)
-    e.submit(r)
+    r = e.submit(*_reqs([prompt], temperature=0.7, top_k=8))
     e.step()
     slot = r.slot
     assert slot in e.prefilling and 0 < r.prefill_pos < len(prompt)
@@ -173,8 +173,7 @@ def _mid_prefill(cfg, params, prompt, max_len=64):
     e = Engine(cfg, params, max_batch=2, max_len=max_len,
                cache_kind="paged", block_size=8, prefix_sharing=False,
                token_budget=16)
-    (r,) = _reqs([prompt], temperature=0.6, top_k=8)
-    e.submit(r)
+    r = e.submit(*_reqs([prompt], temperature=0.6, top_k=8))
     e.step()
     slot = r.slot
     assert slot in e.prefilling and 0 < r.prefill_pos < len(prompt)

@@ -16,15 +16,14 @@ drives a launch/pod.py inventory deployment through the batched
 control-plane poll, killing a worker mid-tick so the death surfaces
 inside the multiplexed drain rather than from a direct call.
 """
-import dataclasses
-
 import jax
 import numpy as np
 import pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec, SamplingParams
 from repro.serving.instance import LocalInstance
 from repro.serving.orchestrator import Orchestrator
 
@@ -40,18 +39,12 @@ def tiny():
     return cfg, params
 
 
-def _clone(r: Request) -> Request:
-    return dataclasses.replace(r, generated=[], slot=None, submit_time=0.0,
-                               first_token_time=None, finish_time=None,
-                               preemptions=0)
-
-
 def _reference_outputs(cfg, params, requests):
     out = {}
     for r in requests:
         e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-        e.submit(_clone(r))
+        e.submit(r)
         out[r.rid] = e.run_until_done()[0].generated
     return out
 
@@ -64,11 +57,13 @@ def test_two_worker_burst_scale_up_and_overlapped_scale_down(tiny):
     with each worker's telemetry arriving as serialized snapshots."""
     cfg, params = tiny
     rng = np.random.default_rng(3)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(2, cfg.vocab_size,
-                                        size=8 + i % 4).astype(np.int32),
-                    max_new_tokens=8, temperature=0.7 if i % 2 else 0.0,
-                    top_k=8 if i % 2 else 0, seed=11 + i)
+    reqs = [RequestSpec(rid=i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=8 + i % 4).astype(np.int32),
+                        max_tokens=8,
+                        sampling=SamplingParams(
+                            temperature=0.7 if i % 2 else 0.0,
+                            top_k=8 if i % 2 else 0, seed=11 + i))
             for i in range(8)]
     ref = _reference_outputs(cfg, params, reqs)
 
@@ -78,7 +73,7 @@ def test_two_worker_burst_scale_up_and_overlapped_scale_down(tiny):
     try:
         assert not orch.engines     # no local engine anywhere: all-RPC
         for r in reqs[:6]:          # the burst wave
-            orch.submit(_clone(r))
+            orch.submit(r)
         for _ in range(12):
             orch.step()
         # scale-up happened and reached the REMOTE engines (the degree
@@ -87,7 +82,7 @@ def test_two_worker_burst_scale_up_and_overlapped_scale_down(tiny):
         assert sum(orch.plan.p) > cfg.num_layers
 
         for r in reqs[6:]:          # tail traffic, then consolidate
-            orch.submit(_clone(r))
+            orch.submit(r)
         for _ in range(3):
             orch.step()
         src = max((0, 1),
@@ -118,9 +113,12 @@ def test_remote_crash_mid_migration_replays_on_survivor(tiny):
     survivor is a local in-process engine, proving local and remote
     compose behind one InstanceHandle interface."""
     cfg, params = tiny
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
-                    max_new_tokens=10, temperature=0.8, top_k=16,
-                    seed=7 + i) for i in range(3)]
+    reqs = [RequestSpec(rid=i,
+                            prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                            max_tokens=10,
+                            sampling=SamplingParams(temperature=0.8, top_k=16,
+                                                    seed=7 + i))
+                    for i in range(3)]
     ref = _reference_outputs(cfg, params, reqs)
 
     from repro.serving.remote_engine import EngineProxy
@@ -135,7 +133,7 @@ def test_remote_crash_mid_migration_replays_on_survivor(tiny):
         # two active + one queued-ish on the REMOTE instance
         for r in reqs:
             orch._home[r.rid] = 1
-            orch.instances[1].submit(_clone(r))
+            orch.instances[1].submit(r)
         for _ in range(3):
             orch.step()
         assert orch.instances[1].active_rids()
@@ -169,9 +167,12 @@ def test_destination_death_after_pause_replays_at_source(tiny):
     replay: zero drops, token-identical, and recovery fires exactly
     once despite the death being observable from several operations."""
     cfg, params = tiny
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
-                    max_new_tokens=10, temperature=0.8, top_k=16,
-                    seed=7 + i) for i in range(2)]
+    reqs = [RequestSpec(rid=i,
+                            prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                            max_tokens=10,
+                            sampling=SamplingParams(temperature=0.8, top_k=16,
+                                                    seed=7 + i))
+                    for i in range(2)]
     ref = _reference_outputs(cfg, params, reqs)
 
     from repro.serving.remote_engine import EngineProxy
@@ -185,7 +186,7 @@ def test_destination_death_after_pause_replays_at_source(tiny):
     try:
         for r in reqs:
             orch._home[r.rid] = 0
-            orch.instances[0].submit(_clone(r))
+            orch.instances[0].submit(r)
         for _ in range(3):
             orch.step()
         victim_slot = sorted(orch.instances[0].active_rids())[0]
@@ -241,9 +242,12 @@ def test_tcp_pod_kill_mid_tick_replays_through_batched_poll(tiny, tmp_path):
     assert [h.endpoint for h in handles] == \
         [f"tcp://127.0.0.1:{p}" for p in ports]
 
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
-                    max_new_tokens=10, temperature=0.8, top_k=16,
-                    seed=7 + i) for i in range(4)]
+    reqs = [RequestSpec(rid=i,
+                            prompt=np.arange(2 + i, 14 + i, dtype=np.int32),
+                            max_tokens=10,
+                            sampling=SamplingParams(temperature=0.8, top_k=16,
+                                                    seed=7 + i))
+                    for i in range(4)]
     ref = _reference_outputs(cfg, params, reqs)
 
     orch = Orchestrator(cfg, params, handles=handles,
@@ -252,9 +256,9 @@ def test_tcp_pod_kill_mid_tick_replays_through_batched_poll(tiny, tmp_path):
         assert not orch.engines         # all-RPC, nothing in-process
         for r in reqs[:3]:              # load the victim worker
             orch._home[r.rid] = 0
-            orch.instances[0].submit(_clone(r))
+            orch.instances[0].submit(r)
         orch._home[reqs[3].rid] = 1
-        orch.instances[1].submit(_clone(reqs[3]))
+        orch.instances[1].submit(reqs[3])
         for _ in range(3):
             orch.step()
         assert orch.instances[0].active_rids()
@@ -318,15 +322,18 @@ def test_remote_streams_match_local_streams(tiny):
     produces byte-identical token streams — the wire protocol carries
     admissions/sampling state losslessly."""
     cfg, params = tiny
-    reqs = [Request(rid=i, prompt=np.arange(3 + i, 13 + i, dtype=np.int32),
-                    max_new_tokens=6, temperature=0.9, top_k=12,
-                    seed=21 + i) for i in range(3)]
+    reqs = [RequestSpec(rid=i,
+                            prompt=np.arange(3 + i, 13 + i, dtype=np.int32),
+                            max_tokens=6,
+                            sampling=SamplingParams(temperature=0.9, top_k=12,
+                                                    seed=21 + i))
+                    for i in range(3)]
     ref = _reference_outputs(cfg, params, reqs)
     from repro.serving.remote_engine import EngineProxy
     px = EngineProxy(cfg, params, max_batch=3, max_len=64, block_size=8)
     try:
         for r in reqs:
-            px.submit(_clone(r))
+            px.submit(r)
         done = []
         for _ in range(40):
             done += px.step()

@@ -16,7 +16,8 @@ from repro.core.speedup import SpeedupModelConfig, speedup
 from repro.kernels.paged_decode import paged_decode_attention
 from repro.models import transformer as T
 from repro.serving import paged_kv as PK
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec, SamplingParams
 from repro.serving.workload import WorkloadConfig, generate_trace
 from repro.training import optimizer as OPT
 from repro.training import train as TR
@@ -137,7 +138,7 @@ def test_paged_kernel_ragged_block_boundaries():
 def _run_engine(cfg, params, prompts, *, max_new=6, **kw):
     e = Engine(cfg, params, max_batch=2, max_len=64, **kw)
     for i, p in enumerate(prompts):
-        e.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        e.submit(RequestSpec(rid=i, prompt=p, max_tokens=max_new))
     done = e.run_until_done()
     return {r.rid: r.generated for r in done}
 
@@ -177,7 +178,7 @@ def test_paged_engine_out_of_blocks_backpressure():
     e = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
                block_size=8, n_blocks=4)
     for i, p in enumerate(prompts):
-        e.submit(Request(rid=i, prompt=p, max_new_tokens=12))
+        e.submit(RequestSpec(rid=i, prompt=p, max_tokens=12))
     waited = False
     done = []
     for _ in range(400):
@@ -193,10 +194,10 @@ def test_paged_engine_out_of_blocks_backpressure():
     # and it must not take the rest of the admission wave down with it
     e2 = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
                 block_size=8, n_blocks=2)
-    e2.submit(Request(rid=0, prompt=np.arange(2, 40, dtype=np.int32),
-                      max_new_tokens=4))
-    e2.submit(Request(rid=1, prompt=np.arange(2, 8, dtype=np.int32),
-                      max_new_tokens=2))
+    e2.submit(RequestSpec(rid=0, prompt=np.arange(2, 40, dtype=np.int32),
+                      max_tokens=4))
+    e2.submit(RequestSpec(rid=1, prompt=np.arange(2, 8, dtype=np.int32),
+                      max_tokens=2))
     with pytest.raises(PK.OutOfBlocks):
         e2.run_until_done()
     done2 = e2.run_until_done()  # wave-mate survived the rejection
@@ -206,24 +207,24 @@ def test_paged_engine_out_of_blocks_backpressure():
     # truncated output (loud, but the engine stays serviceable)
     e3 = Engine(cfg, params, max_batch=1, max_len=64, cache_kind="paged",
                 block_size=8, n_blocks=2)
-    big = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
-                  max_new_tokens=30)
-    e3.submit(big)
+    big = e3.submit(RequestSpec(rid=0,
+                                prompt=np.arange(2, 10, dtype=np.int32),
+                                max_tokens=30))
     with pytest.raises(PK.OutOfBlocks):
         e3.run_until_done()
     assert big.done and 0 < len(big.generated) < 30
     assert not e3.active and e3.pstate.blocks_in_use() == 0
-    e3.submit(Request(rid=1, prompt=np.arange(2, 8, dtype=np.int32),
-                      max_new_tokens=2))
+    e3.submit(RequestSpec(rid=1, prompt=np.arange(2, 8, dtype=np.int32),
+                      max_tokens=2))
     assert [r.rid for r in e3.run_until_done()] == [1]  # still serviceable
     # prompt == max_len would overflow the block-table row: clean
     # rejection (no IndexError, no leaked block, engine still serviceable)
     e4 = Engine(cfg, params, max_batch=2, max_len=32, cache_kind="paged",
                 block_size=8)
-    e4.submit(Request(rid=0, prompt=np.full(32, 3, np.int32),
-                      max_new_tokens=4))
-    e4.submit(Request(rid=1, prompt=np.full(31, 3, np.int32),  # just fits
-                      max_new_tokens=4))
+    e4.submit(RequestSpec(rid=0, prompt=np.full(32, 3, np.int32),
+                      max_tokens=4))
+    e4.submit(RequestSpec(rid=1, prompt=np.full(31, 3, np.int32),  # just fits
+                      max_tokens=4))
     with pytest.raises(PK.OutOfBlocks):
         e4.run_until_done()
     done4 = e4.run_until_done()
@@ -241,7 +242,7 @@ def test_chunked_prefill_equivalence(arch):
     outs = []
     for chunk in (0, 7):
         e = Engine(cfg, params, max_batch=2, max_len=64, prefill_chunk=chunk)
-        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=4))
+        e.submit(RequestSpec(rid=0, prompt=prompt, max_tokens=4))
         outs.append(e.run_until_done()[0].generated)
     assert outs[0] == outs[1]
 
@@ -253,8 +254,10 @@ def test_sampling_seeded():
     gens = []
     for seed in (1, 1, 2):
         e = Engine(cfg, params, max_batch=1, max_len=64)
-        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=5,
-                         temperature=0.8, top_k=16, seed=seed))
+        e.submit(RequestSpec(rid=0, prompt=prompt, max_tokens=5,
+                             sampling=SamplingParams(temperature=0.8,
+                                                     top_k=16,
+                                                     seed=seed)))
         gens.append(e.run_until_done()[0].generated)
     assert gens[0] == gens[1]
     assert gens[0] != gens[2]

@@ -314,3 +314,155 @@ def test_closing_ingress_rejects_new_intake_with_503(tiny):
     ing._closing = False
     ing.close()
     orch.close()
+
+
+# ------------------------------------------- SLO fields + 400 taxonomy
+def test_slo_completion_accepted_end_to_end(served):
+    """A body carrying slo_class + deadline_ms is parsed into the
+    RequestSpec and served normally — the fields are additive, not a
+    different endpoint."""
+    _, ing = served
+    status, _, resp = _request(
+        ing, "POST", "/v1/completions",
+        body={"prompt": "hello slo", "max_tokens": 4,
+              "slo_class": "interactive", "deadline_ms": 2000})
+    assert status == 200
+    out = json.loads(resp)
+    assert len(out["tokens"]) == 4
+    assert out["usage"]["completion_tokens"] == 4
+
+
+def test_unknown_slo_class_gets_typed_400(served):
+    _, ing = served
+    status, _, resp = _request(
+        ing, "POST", "/v1/completions",
+        body={"prompt": "x", "slo_class": "platinum"})
+    assert status == 400
+    out = json.loads(resp)
+    assert out["error"] == "unknown_slo_class"
+    assert "platinum" in out["detail"]
+    assert "interactive" in out["detail"]       # the menu is in the body
+
+
+def test_bad_deadline_gets_typed_400(served):
+    _, ing = served
+    for bad in (0, -5, -0.1):
+        status, _, resp = _request(
+            ing, "POST", "/v1/completions",
+            body={"prompt": "x", "deadline_ms": bad})
+        assert status == 400
+        out = json.loads(resp)
+        assert out["error"] == "bad_deadline"
+        assert "deadline_ms" in out["detail"]
+
+
+def test_unknown_body_fields_get_typed_400(served):
+    _, ing = served
+    status, _, resp = _request(
+        ing, "POST", "/v1/completions",
+        body={"prompt": "x", "slo": "interactive", "maxTokens": 4})
+    assert status == 400
+    out = json.loads(resp)
+    assert out["error"] == "unknown_fields"
+    assert sorted(out["fields"]) == ["maxTokens", "slo"]
+
+
+def test_taxonomy_bodies_are_distinct(served):
+    """The three typed rejections carry three distinct machine-readable
+    codes — a client can branch without parsing prose."""
+    _, ing = served
+    codes = set()
+    for body in ({"prompt": "x", "slo_class": "nope"},
+                 {"prompt": "x", "deadline_ms": -1},
+                 {"prompt": "x", "bogus_key": 1}):
+        status, _, resp = _request(ing, "POST", "/v1/completions",
+                                   body=body)
+        assert status == 400
+        codes.add(json.loads(resp)["error"])
+    assert codes == {"unknown_slo_class", "bad_deadline",
+                     "unknown_fields"}
+
+
+# ------------------------------------------------- the budget governor
+class _FakeInstance:
+    def __init__(self):
+        self.calls = []
+
+    def set_token_budget(self, budget):
+        self.calls.append(budget)
+        return budget
+
+
+class _FakeRec:
+    def __init__(self):
+        self.events = []
+
+    def record(self, kind, **fields):
+        self.events.append((kind, fields))
+
+
+class _FakeOrch:
+    def __init__(self, tel):
+        self.telemetry = [tel]
+        self.instances = [_FakeInstance()]
+        self.flightrec = _FakeRec()
+
+    def _alive(self):
+        return [0]
+
+
+def _saturated_telemetry(budget=128, packed=None, delay=10.0):
+    from repro.serving.instrument import EngineTelemetry
+    tel = EngineTelemetry()
+    tel.budget = budget
+    tel.packed_tokens.extend([packed if packed is not None else budget] * 8)
+    tel.queue_delays.extend([delay] * 8)
+    return tel
+
+
+def test_budget_governor_grows_under_saturation_and_delay():
+    from repro.serving.ingress import BudgetGovernor
+    orch = _FakeOrch(_saturated_telemetry())
+    gov = BudgetGovernor(orch, period_s=0.5)
+    assert gov.tick(now=10.0)
+    assert orch.instances[0].calls == [192]          # 128 * 1.5
+    assert gov.budgets[0] == 192 and gov.adjustments == 1
+    kind, ev = orch.flightrec.events[0]
+    assert kind == "budget_governor"
+    assert ev["budget"] == 192 and ev["prev"] == 128
+    # rate limit: a second tick inside period_s is a no-op
+    assert not gov.tick(now=10.2)
+    assert gov.adjustments == 1
+
+
+def test_budget_governor_shrinks_when_budget_rides_empty():
+    from repro.serving.ingress import BudgetGovernor
+    orch = _FakeOrch(_saturated_telemetry(budget=128, packed=16,
+                                          delay=0.0))
+    gov = BudgetGovernor(orch, period_s=0.0)
+    assert gov.tick(now=1.0)
+    assert orch.instances[0].calls == [96]           # 128 * 0.75
+    # repeated shrink bottoms out at min_budget, then goes quiet
+    for t in range(2, 20):
+        gov.tick(now=float(t))
+    assert gov.budgets[0] == gov.min_budget
+    last = orch.instances[0].calls[-1]
+    assert last == gov.min_budget
+    n = gov.adjustments
+    gov.tick(now=100.0)
+    assert gov.adjustments == n                      # clamped: no churn
+
+
+def test_budget_governor_skips_phase_engines_and_holds_steady_band():
+    from repro.serving.instrument import EngineTelemetry
+    from repro.serving.ingress import BudgetGovernor
+    # phase engine: no budget, no packed window -> untouched
+    orch = _FakeOrch(EngineTelemetry())
+    gov = BudgetGovernor(orch, period_s=0.0)
+    assert gov.tick(now=1.0)
+    assert orch.instances[0].calls == []
+    # mid-band utilization: saturated but NO queueing -> no grow either
+    orch2 = _FakeOrch(_saturated_telemetry(delay=0.0))
+    gov2 = BudgetGovernor(orch2, period_s=0.0)
+    assert gov2.tick(now=1.0)
+    assert orch2.instances[0].calls == []

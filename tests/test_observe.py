@@ -25,7 +25,7 @@ from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import instrument as INS
 from repro.serving import observe as OBS
-from repro.serving.engine import Request
+from repro.serving.request import RequestSpec
 from repro.serving.ingress import Ingress
 from repro.serving.orchestrator import Orchestrator
 
@@ -360,8 +360,9 @@ def test_local_completion_produces_connected_trace(tiny):
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8,
                         tracer=OBS.Tracer(), telemetry_every=10_000)
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
-                    max_new_tokens=6) for i in range(3)]
+    reqs = [RequestSpec(rid=i,
+                        prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                        max_tokens=6) for i in range(3)]
     for r in reqs:
         orch.tracer.begin(r.rid, prompt_tokens=len(r.prompt))
         orch.submit(r)
@@ -384,13 +385,14 @@ def test_mid_decode_migration_appends_hop_span(tiny):
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8, n_blocks=24,
                         tracer=OBS.Tracer(), telemetry_every=10_000)
-    req = Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
-                  max_new_tokens=10)
+    req = RequestSpec(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                      max_tokens=10)
     orch.tracer.begin(req.rid)
     orch.submit_to(0, req)
     for _ in range(4):
         orch.step()
-    assert len(req.generated) >= 2               # mid-decode
+    live = next(r for r in orch.engines[0].active.values() if r.rid == 0)
+    assert len(live.generated) >= 2              # mid-decode
     recs = orch.migrate_requests(0, 1)
     assert len(recs) == 1 and recs[0].resumed
     orch.run_until_done()
@@ -420,8 +422,8 @@ def test_flight_recorder_captures_controller_inputs(tiny):
     cfg, params = tiny
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8, telemetry_every=10_000)
-    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
-                  max_new_tokens=4)
+    req = RequestSpec(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                      max_tokens=4)
     orch.submit(req)
     orch.run_until_done()
     orch.control_tick()
@@ -560,8 +562,8 @@ def test_remote_trace_skew_corrected_over_tcp(tiny):
         del os.environ["REPRO_RPC_TRANSPORT"]
     try:
         assert abs(orch.instances[0].clock_offset - 7.5) < 1.0
-        req = Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
-                      max_new_tokens=6)
+        req = RequestSpec(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                          max_tokens=6)
         orch.tracer.begin(req.rid)
         orch.submit(req)
         orch.run_until_done()

@@ -17,8 +17,9 @@ from repro.core.migration import estimate_cost
 from repro.core.monitor import MetricsSnapshot
 from repro.models import transformer as T
 from repro.serving import paged_kv as PK
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
 from repro.serving.orchestrator import Orchestrator
+from repro.serving.request import RequestSpec, SamplingParams
 
 KEY = jax.random.PRNGKey(0)
 
@@ -31,15 +32,16 @@ def tiny():
 
 
 def _reference_outputs(cfg, params, requests):
-    """Unmigrated oracle: each request solo on a fresh paged engine."""
+    """Unmigrated oracle: each request solo on a fresh paged engine.
+    Accepts specs or live Requests — the spec IS the pristine clone."""
     out = {}
     for r in requests:
+        spec = (r if isinstance(r, RequestSpec)
+                else RequestSpec.from_request(r))
         e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-        e.submit(dataclasses.replace(
-            r, generated=[], slot=None, submit_time=0.0,
-            first_token_time=None, finish_time=None, preemptions=0))
-        out[r.rid] = e.run_until_done()[0].generated
+        e.submit(spec)
+        out[spec.rid] = e.run_until_done()[0].generated
     return out
 
 
@@ -99,17 +101,22 @@ def test_migration_token_identical(tiny, temperature, top_k):
     the full token sequence equals the unmigrated run — greedy AND
     sampled (counter-based Gumbel keys travel with the request)."""
     cfg, params = tiny
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
-                    max_new_tokens=10, temperature=temperature,
-                    top_k=top_k, seed=7 + i) for i in range(2)]
-    ref = _reference_outputs(cfg, params, reqs)
+    specs = [RequestSpec(rid=i,
+                         prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                         max_tokens=10,
+                         sampling=SamplingParams(temperature=temperature,
+                                                 top_k=top_k,
+                                                 seed=7 + i))
+             for i in range(2)]
+    ref = _reference_outputs(cfg, params, specs)
 
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8, n_blocks=24,
                         telemetry_every=10_000)  # control loop quiesced
-    for r in reqs:
-        orch._home[r.rid] = 0
-        orch.engines[0].submit(r)               # force both onto A
+    reqs = []
+    for spec in specs:
+        orch._home[spec.rid] = 0
+        reqs.append(orch.engines[0].submit(spec))  # force both onto A
     for _ in range(4):                          # decode a few tokens on A
         orch.step()
     assert all(len(r.generated) >= 2 for r in reqs)
@@ -127,14 +134,14 @@ def test_migration_full_destination_replays(tiny):
     re-queued there (never dropped) and the replayed continuation is
     still token-identical."""
     cfg, params = tiny
-    req = Request(rid=0, prompt=np.arange(2, 18, dtype=np.int32),
-                  max_new_tokens=8)
-    ref = _reference_outputs(cfg, params, [req])
+    spec = RequestSpec(rid=0, prompt=np.arange(2, 18, dtype=np.int32),
+                       max_tokens=8)
+    ref = _reference_outputs(cfg, params, [spec])
 
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=1,
                         max_len=64, block_size=8, n_blocks=24,
                         telemetry_every=10_000)
-    orch.engines[0].submit(req)
+    orch.engines[0].submit(spec)
     for _ in range(3):
         orch.step()
     # shrink B's pool under the payload size: resume must fail cleanly
@@ -159,10 +166,11 @@ def test_burst_scale_up_then_drain_scale_down(tiny):
                         max_len=64, block_size=8, n_blocks=32,
                         slo_latency=30.0, telemetry_every=2)
     rng = np.random.default_rng(3)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(2, cfg.vocab_size,
-                                        size=6 + i % 5).astype(np.int32),
-                    max_new_tokens=8) for i in range(10)]
+    reqs = [RequestSpec(rid=i,
+                        prompt=rng.integers(2, cfg.vocab_size,
+                                            size=6 + i % 5)
+                        .astype(np.int32),
+                        max_tokens=8) for i in range(10)]
     for r in reqs[:6]:          # the burst wave
         orch.submit(r)
     for _ in range(12):
@@ -203,9 +211,9 @@ def test_controller_scale_down_triggers_block_migration(tiny):
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8, n_blocks=32,
                         slo_latency=5.0, telemetry_every=10_000)
-    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
-                  max_new_tokens=16)
-    orch.engines[0].submit(req)
+    orch.engines[0].submit(
+        RequestSpec(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                    max_tokens=16))
     orch._home[0] = 0
     for _ in range(3):
         orch.step()
@@ -236,17 +244,22 @@ def test_overlapped_migration_token_identical(tiny, temperature, top_k):
     the single step in which its delta is copied (phase 2 runs between
     engine steps by construction)."""
     cfg, params = tiny
-    reqs = [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
-                    max_new_tokens=14, temperature=temperature,
-                    top_k=top_k, seed=7 + i) for i in range(2)]
-    ref = _reference_outputs(cfg, params, reqs)
+    specs = [RequestSpec(rid=i,
+                         prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                         max_tokens=14,
+                         sampling=SamplingParams(temperature=temperature,
+                                                 top_k=top_k,
+                                                 seed=7 + i))
+             for i in range(2)]
+    ref = _reference_outputs(cfg, params, specs)
 
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8, n_blocks=24,
                         telemetry_every=10_000)
-    for r in reqs:
-        orch._home[r.rid] = 0
-        orch.engines[0].submit(r)
+    reqs = []
+    for spec in specs:
+        orch._home[spec.rid] = 0
+        reqs.append(orch.engines[0].submit(spec))
     for _ in range(4):
         orch.step()
     gen_before = {r.rid: len(r.generated) for r in reqs}
@@ -273,12 +286,12 @@ def test_overlapped_migration_victim_finishes_during_overlap(tiny):
     aborts its staging cleanly: nothing moves, nothing leaks, nothing
     drops."""
     cfg, params = tiny
-    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
-                  max_new_tokens=4)
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=1,
                         max_len=64, block_size=8, n_blocks=24,
                         telemetry_every=10_000)
-    orch.engines[0].submit(req)
+    req = orch.engines[0].submit(
+        RequestSpec(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
+                    max_tokens=4))
     orch.step()                       # admitted (+1 admission token)
     ticket = orch.begin_migration(0, 1, req.slot)
     for _ in range(6):                # finishes at the source meanwhile
@@ -296,13 +309,13 @@ def test_overlapped_migration_staging_failure_replays(tiny):
     and the replayed continuation is token-identical — zero-drop under
     pressure."""
     cfg, params = tiny
-    req = Request(rid=0, prompt=np.arange(2, 18, dtype=np.int32),
-                  max_new_tokens=8)
-    ref = _reference_outputs(cfg, params, [req])
+    spec = RequestSpec(rid=0, prompt=np.arange(2, 18, dtype=np.int32),
+                       max_tokens=8)
+    ref = _reference_outputs(cfg, params, [spec])
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=1,
                         max_len=64, block_size=8, n_blocks=24,
                         telemetry_every=10_000)
-    orch.engines[0].submit(req)
+    orch.engines[0].submit(spec)
     for _ in range(3):
         orch.step()
     orch.engines[1].pstate.free = orch.engines[1].pstate.free[:1]
@@ -331,10 +344,10 @@ def test_control_tick_iterates_scale_down_phases(tiny):
     # two short requests finish fast (latency > 0 > SLO: the violation
     # signal) while two long ones stay mid-decode (the migrants)
     for i, max_new in enumerate((2, 2, 30, 30)):
-        req = Request(rid=i, prompt=np.arange(2, 10, dtype=np.int32),
-                      max_new_tokens=max_new)
         orch._home[i] = 0
-        orch.engines[0].submit(req)
+        orch.engines[0].submit(
+            RequestSpec(rid=i, prompt=np.arange(2, 10, dtype=np.int32),
+                        max_tokens=max_new))
     for _ in range(5):
         orch.step()
     assert any(r.done for r in orch.finished)
@@ -362,9 +375,9 @@ def test_control_tick_burst_stops_when_nothing_moves(tiny):
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
                         max_len=64, block_size=8, n_blocks=32,
                         slo_latency=1e-9, telemetry_every=10_000)
-    req = Request(rid=0, prompt=np.arange(2, 10, dtype=np.int32),
-                  max_new_tokens=2)
-    orch.submit(req)
+    orch.submit(RequestSpec(rid=0,
+                            prompt=np.arange(2, 10, dtype=np.int32),
+                            max_tokens=2))
     orch.run_until_done()             # finished: nothing active anywhere
     hist0 = len(orch.monitor.history)
     action = orch.control_tick()
@@ -391,7 +404,7 @@ def test_swa_paged_matches_dense_across_window_boundary(tiny):
                    cache_kind=kind,
                    **({"block_size": 4} if kind == "paged" else {}))
         for i, p in enumerate(prompts):
-            e.submit(Request(rid=i, prompt=p, max_new_tokens=10))
+            e.submit(RequestSpec(rid=i, prompt=p, max_tokens=10))
         done = e.run_until_done()
         return {r.rid: r.generated for r in done}, e
 
@@ -416,7 +429,7 @@ def test_swa_paged_admits_prompt_longer_than_window(tiny):
     def run(kind, **kw):
         e = Engine(swa_cfg, params, max_batch=1, max_len=64, swa=True,
                    cache_kind=kind, **kw)
-        e.submit(Request(rid=0, prompt=prompt, max_new_tokens=6))
+        e.submit(RequestSpec(rid=0, prompt=prompt, max_tokens=6))
         return e.run_until_done()[0].generated, e
 
     # default n_blocks is window-sized (5 blocks at block_size=4): the
@@ -436,8 +449,8 @@ def test_swa_paged_frees_leading_blocks(tiny):
     swa_cfg = dataclasses.replace(cfg, sliding_window=8)
     e = Engine(swa_cfg, params, max_batch=1, max_len=64, swa=True,
                cache_kind="paged", block_size=4, n_blocks=16)
-    e.submit(Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
-                     max_new_tokens=24))
+    e.submit(RequestSpec(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                     max_tokens=24))
     max_live = 0
     while e.queue or e.active:
         e.step()
@@ -460,7 +473,7 @@ def test_prefill_bucketing_bounds_executables(tiny):
         e = Engine(cfg, params, max_batch=8, max_len=64, cache_kind=kind,
                    **({"block_size": 8} if kind == "paged" else {}))
         for i, p in enumerate(prompts):
-            e.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+            e.submit(RequestSpec(rid=i, prompt=p, max_tokens=4))
         done = e.run_until_done()
         return {r.rid: r.generated for r in done}, e
 
@@ -482,12 +495,12 @@ def test_apply_plan_is_token_invariant(tiny):
     prompt = np.arange(2, 10, dtype=np.int32)
     ref_e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-    ref_e.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    ref_e.submit(RequestSpec(rid=0, prompt=prompt, max_tokens=10))
     ref = ref_e.run_until_done()[0].generated
 
     e = Engine(cfg, params, max_batch=1, max_len=64, cache_kind="paged",
                block_size=8)
-    e.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    e.submit(RequestSpec(rid=0, prompt=prompt, max_tokens=10))
     out = []
     for i in range(40):
         if i == 3:      # scale up mid-decode

@@ -194,7 +194,6 @@ def test_pod_deadline_reaps_spawned_but_unadopted_children(monkeypatch):
 # orchestrator's grow/shrink MECHANISM on real engines: a runtime-spawned
 # worker takes routed traffic, a drained worker hands its streams off
 # token-identically, and the flap guard keeps a booting worker alive.
-import dataclasses
 import time as _time
 
 from repro.core.cluster import Cluster
@@ -272,7 +271,8 @@ import pytest as _pytest
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec
 from repro.serving.orchestrator import Orchestrator
 from repro.launch.pod import make_worker_factory
 
@@ -296,10 +296,10 @@ def _elastic_orch(cfg, params, n=1, **pod_kw):
 
 def _reqs(n, max_new=6, plen=12):
     rng = np.random.default_rng(3)
-    return [Request(rid=100 + i,
-                    prompt=rng.integers(2, 1000, size=plen)
-                    .astype(np.int32),
-                    max_new_tokens=max_new) for i in range(n)]
+    return [RequestSpec(rid=100 + i,
+                        prompt=rng.integers(2, 1000, size=plen)
+                        .astype(np.int32),
+                        max_tokens=max_new) for i in range(n)]
 
 
 def _solo_reference(cfg, params, requests):
@@ -307,9 +307,7 @@ def _solo_reference(cfg, params, requests):
     for r in requests:
         e = Engine(cfg, params, max_batch=1, cache_kind="paged",
                    max_len=64, block_size=8)
-        e.submit(dataclasses.replace(
-            r, generated=[], slot=None, submit_time=0.0,
-            first_token_time=None, finish_time=None, preemptions=0))
+        e.submit(r)
         out[r.rid] = e.run_until_done()[0].generated
     return out
 

@@ -8,8 +8,6 @@ AND sampled), and use measurably fewer pool blocks. Orchestrator-level:
 scale-down migration of streams holding shared blocks stays zero-drop
 and token-identical.
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,18 +16,11 @@ import pytest
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import paged_kv as PK
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
 from repro.serving.orchestrator import Orchestrator
+from repro.serving.request import RequestSpec, SamplingParams
 
 KEY = jax.random.PRNGKey(0)
-
-
-def _clone(r: Request) -> Request:
-    """Fresh copy with per-run mutable state reset (dataclasses.replace
-    alone would SHARE the generated list across runs)."""
-    return dataclasses.replace(r, generated=[], slot=None, submit_time=0.0,
-                               first_token_time=None, finish_time=None,
-                               preemptions=0)
 
 
 @pytest.fixture(scope="module")
@@ -184,15 +175,18 @@ def test_export_import_carries_prefix_keys(tiny):
 
 
 # ----------------------------------------------------------- engine level
-def _shared_prompt_requests(cfg, n, sys_len=24, temp=0.0, top_k=0):
+def _shared_prompt_requests(cfg, n, sys_len=24, temp=0.0, top_k=0,
+                            max_new=6):
     rng = np.random.default_rng(7)
     sys_prompt = rng.integers(2, cfg.vocab_size, size=sys_len).astype(np.int32)
     reqs = []
     for i in range(n):
         user = rng.integers(2, cfg.vocab_size, size=3 + i).astype(np.int32)
-        reqs.append(Request(rid=i, prompt=np.concatenate([sys_prompt, user]),
-                            max_new_tokens=6, temperature=temp, top_k=top_k,
-                            seed=5 + i))
+        reqs.append(RequestSpec(
+            rid=i, prompt=np.concatenate([sys_prompt, user]),
+            max_tokens=max_new,
+            sampling=SamplingParams(temperature=temp, top_k=top_k,
+                                    seed=5 + i)))
     return reqs
 
 
@@ -238,7 +232,7 @@ def test_aligned_duplicate_prompt_triggers_cow(tiny):
         2, cfg.vocab_size, size=16).astype(np.int32)
 
     def dup():
-        return [Request(rid=i, prompt=prompt.copy(), max_new_tokens=5)
+        return [RequestSpec(rid=i, prompt=prompt.copy(), max_tokens=5)
                 for i in range(2)]
 
     on, _, eng = _run_engine(cfg, params, dup(), share=True)
@@ -254,13 +248,11 @@ def test_sharing_with_preemption_replays_identically(tiny):
     eviction + cache-hit on re-admission keep outputs identical to an
     unconstrained pool."""
     cfg, params = tiny
-    reqs = _shared_prompt_requests(cfg, 4, sys_len=16)
-    for r in reqs:
-        r.max_new_tokens = 16
-    big, _, _ = _run_engine(cfg, params, [_clone(r) for r in reqs],
+    reqs = _shared_prompt_requests(cfg, 4, sys_len=16, max_new=16)
+    big, _, _ = _run_engine(cfg, params, list(reqs),
                             share=True)
     # a pool too small for all four: forces preemption mid-decode
-    small, _, eng = _run_engine(cfg, params, [_clone(r) for r in reqs],
+    small, _, eng = _run_engine(cfg, params, list(reqs),
                                 share=True, n_blocks=11)
     assert small == big
     assert eng.preempt_count > 0, "scenario exercised no preemption"
@@ -298,14 +290,14 @@ def test_hit_admits_under_pressure_that_stalls_cold_request(tiny):
         eng = Engine(cfg, params, max_batch=2, max_len=64,
                      cache_kind="paged", block_size=8, n_blocks=5,
                      prefix_sharing=share)
-        eng.submit(Request(rid=0,
+        eng.submit(RequestSpec(rid=0,
                            prompt=np.concatenate([sys_prompt, users[0]]),
-                           max_new_tokens=3))
+                           max_tokens=3))
         eng.step()                         # rid 0 admitted, holds 3 blocks
         assert 0 in {r.rid for r in eng.active.values()}
-        eng.submit(Request(rid=1,
+        eng.submit(RequestSpec(rid=1,
                            prompt=np.concatenate([sys_prompt, users[1]]),
-                           max_new_tokens=3))
+                           max_tokens=3))
         eng.step()
         admitted = 1 in {r.rid for r in eng.active.values()}
         done = eng.run_until_done()
@@ -326,20 +318,22 @@ def test_migration_of_shared_blocks_token_identical(tiny):
     cfg, params = tiny
     rng = np.random.default_rng(11)
     sys_prompt = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
-    reqs = [Request(rid=i,
-                    prompt=np.concatenate(
-                        [sys_prompt,
-                         rng.integers(2, cfg.vocab_size,
-                                      size=4 + i).astype(np.int32)]),
-                    max_new_tokens=10, temperature=0.8, top_k=16,
-                    seed=3 + i) for i in range(2)]
+    reqs = [RequestSpec(rid=i,
+                        prompt=np.concatenate(
+                            [sys_prompt,
+                             rng.integers(2, cfg.vocab_size,
+                                          size=4 + i).astype(np.int32)]),
+                        max_tokens=10,
+                        sampling=SamplingParams(temperature=0.8, top_k=16,
+                                                seed=3 + i))
+            for i in range(2)]
 
     # unmigrated oracle: each request solo on a fresh engine
     ref = {}
     for r in reqs:
         e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-        e.submit(_clone(r))
+        e.submit(r)
         ref[r.rid] = e.run_until_done()[0].generated
 
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
@@ -416,18 +410,20 @@ def test_migration_dedupe_end_to_end_token_identical(tiny):
     cfg, params = tiny
     rng = np.random.default_rng(13)
     sys_prompt = rng.integers(2, cfg.vocab_size, size=16).astype(np.int32)
-    reqs = [Request(rid=i,
-                    prompt=np.concatenate(
-                        [sys_prompt,
-                         rng.integers(2, cfg.vocab_size,
-                                      size=4 + i).astype(np.int32)]),
-                    max_new_tokens=8, temperature=0.8, top_k=16,
-                    seed=3 + i) for i in range(2)]
+    reqs = [RequestSpec(rid=i,
+                        prompt=np.concatenate(
+                            [sys_prompt,
+                             rng.integers(2, cfg.vocab_size,
+                                          size=4 + i).astype(np.int32)]),
+                        max_tokens=8,
+                        sampling=SamplingParams(temperature=0.8, top_k=16,
+                                                seed=3 + i))
+            for i in range(2)]
     ref = {}
     for r in reqs:
         e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-        e.submit(_clone(r))
+        e.submit(r)
         ref[r.rid] = e.run_until_done()[0].generated
 
     orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
@@ -465,16 +461,16 @@ def test_hit_suffix_prefills_are_batched(tiny):
     sys_prompt = rng.integers(2, cfg.vocab_size, size=24).astype(np.int32)
     # suffix lengths 6..8 share the pow2 bucket 8 AND the context bucket:
     # one wave => first request misses, three wave-mates hit as a group
-    reqs = [Request(rid=i,
+    reqs = [RequestSpec(rid=i,
                     prompt=np.concatenate(
                         [sys_prompt,
                          rng.integers(2, cfg.vocab_size,
                                       size=5 + i).astype(np.int32)]),
-                    max_new_tokens=4)
+                    max_tokens=4)
             for i in range(4)]
-    on, _, eng = _run_engine(cfg, params, [_clone(r) for r in reqs],
+    on, _, eng = _run_engine(cfg, params, list(reqs),
                              share=True)
-    off, _, _ = _run_engine(cfg, params, [_clone(r) for r in reqs],
+    off, _, _ = _run_engine(cfg, params, list(reqs),
                             share=False)
     assert on == off
     grouped = [(G, S) for G, S in eng._prefill_shapes if G >= 2 and S <= 16]

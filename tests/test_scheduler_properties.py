@@ -1,6 +1,7 @@
 """Property tests for the token-budget scheduler's invariants
 (serving/scheduler.py) over GENERATED engine states and multi-step
-traces:
+traces, for both the FIFO ``TokenBudgetScheduler`` and the class-aware
+``SloScheduler``:
 
 * decode-never-stalled — every active slot is charged exactly one token
   before any prefill work, no matter the queue pressure;
@@ -14,7 +15,7 @@ The scheduler is pure policy over a narrow engine surface, so the tests
 drive it with a fake engine — no JAX, no pools. Runs under the real
 ``hypothesis`` package when importable (the nightly CI job) and under
 tests/_hypothesis_stub.py otherwise (tier-1): only ``given``/
-``settings`` and the integers/floats/lists strategies are used.
+``settings`` and the integers/floats/lists/tuples strategies are used.
 """
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -178,3 +179,183 @@ def test_trace_drains_with_invariants_held(budget, align, prefill_totals,
         assert progressed, "scheduler stalled with work outstanding"
     assert not (eng.active or eng.prefilling or eng.queue)
     assert len(done) == len(prefill_totals) + len(queue_totals)
+
+
+# ===================================================== SLO scheduler
+# The SloScheduler shares the budget packer's mechanics, so everything
+# above still holds for it; these tests pin the CLASS-aware invariants:
+# strict-priority splits that sum to the granted prefill, interactive
+# never stalled behind batch admissions, stable deadline ordering, and
+# batch-first preemption.
+
+CLASSES = ("interactive", "standard", "batch")
+
+
+def _slo_req(total, cls_i, dl):
+    r = FakeReq(total)
+    r.slo_class = CLASSES[cls_i]
+    r.deadline_ms = None if dl == 0 else float(dl * 100)
+    return r
+
+
+def _mk_slo(budget, align, actives, prefilling, queue):
+    """actives: [cls_i]; prefilling: [(total, cls_i)]; queue:
+    [(total, cls_i, dl)] — dl 0 means deadline-less."""
+    from repro.serving.scheduler import SloScheduler
+    eng = FakeEngine(len(actives) + len(prefilling) + 2, 0, [], [])
+    for s, cls_i in enumerate(actives):
+        eng.active[s] = _slo_req(1, cls_i, 0)
+        eng._admit_order.append(s)
+    slot = len(actives)
+    for i, (total, cls_i) in enumerate(prefilling):
+        r = _slo_req(total, cls_i, 0)
+        pos = min((i % 3) * align, max(total - 1, 0))
+        r.prefill_pos = pos - pos % align
+        eng.prefilling[slot] = r
+        eng._admit_order.append(slot)
+        slot += 1
+    eng.queue = [_slo_req(t, c, d) for t, c, d in queue]
+    return SloScheduler(budget, chunk_align=align), eng
+
+
+SLO_WORKLOADS = dict(
+    budget=st.integers(1, 256),
+    align=st.integers(1, 32),
+    actives=st.lists(st.integers(0, 2), min_size=0, max_size=8),
+    prefilling=st.lists(
+        st.tuples(st.integers(1, 300), st.integers(0, 2)),
+        min_size=0, max_size=6),
+    queue=st.lists(
+        st.tuples(st.integers(1, 300), st.integers(0, 2),
+                  st.integers(0, 5)),
+        min_size=0, max_size=8),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(**SLO_WORKLOADS)
+def test_slo_single_step_invariants(budget, align, actives, prefilling,
+                                    queue):
+    sched, eng = _mk_slo(budget, align, actives, prefilling, queue)
+    plan = sched.plan(eng)
+
+    # decode never stalled — regardless of class mix or queue pressure
+    assert plan.n_decode == len(eng.active)
+    granted = sum(g.n_tokens for g in plan.grants)
+    assert granted <= max(0, budget - plan.n_decode)
+
+    # the class split is an exact account of the granted prefill
+    assert sum(plan.class_tokens.values()) == granted
+    assert all(v >= 0 for v in plan.class_tokens.values())
+
+    # chunk mechanics carry over from the budget packer
+    fresh = [g for g in plan.grants if g.slot is None]
+    for g in plan.grants:
+        assert g.n_tokens >= 1
+        total = eng.prefill_total(g.req)
+        assert g.start + g.n_tokens <= total
+        assert g.final == (g.start + g.n_tokens == total)
+        if not g.final:
+            assert g.n_tokens % align == 0
+    assert sum(1 for g in fresh if not g.final) <= 1
+    assert len(fresh) <= len(eng._free_slots())
+
+    # strict priority: a fresh grant for a class means every waiting
+    # request of every HIGHER class was admitted this step — batch can
+    # never jump an interactive request stuck at the head of its class
+    fresh_rids = {g.req.rid for g in fresh}
+    for i, cls in enumerate(CLASSES):
+        if any(g.slot is None and g.req.slo_class == cls
+               for g in plan.grants):
+            for higher in CLASSES[:i]:
+                assert all(r.rid in fresh_rids for r in eng.queue
+                           if r.slo_class == higher), \
+                    f"{cls} admitted past waiting {higher} work"
+
+    # deadline ordering within a class is stable: granted fresh
+    # requests appear earliest-deadline first, deadline-less last,
+    # FIFO among ties
+    for cls in CLASSES:
+        cls_fresh = [g.req for g in fresh if g.req.slo_class == cls]
+        keys = [sched._deadline_key(r) for r in cls_fresh]
+        assert keys == sorted(keys), f"{cls} fresh grants out of order"
+
+    # preemption: the tail of victims() is always the youngest batch
+    # work; an interactive slot never outranks any batch slot
+    vs = sched.victims(eng)
+
+    def cls_of(s):
+        r = eng.active.get(s) or eng.prefilling.get(s)
+        return CLASSES.index(r.slo_class)
+
+    assert [cls_of(s) for s in vs] == sorted(cls_of(s) for s in vs)
+    for i, cls in enumerate(CLASSES):
+        same = [s for s in vs if cls_of(s) == i]
+        order = [s for s in eng._admit_order if s in same]
+        assert same == order, "admit order not preserved within class"
+
+
+def test_slo_interactive_decode_never_stalled_by_batch_backlog():
+    """Deterministic pin of the headline invariant: interactive decodes
+    get their token even when a batch prefill backlog could absorb the
+    whole budget many times over."""
+    sched, eng = _mk_slo(
+        16, 8,
+        actives=[0, 0, 0],                       # 3 interactive decodes
+        prefilling=[(300, 2), (300, 2)],         # huge batch backlog
+        queue=[(300, 2, 0)] * 4)
+    plan = sched.plan(eng)
+    assert plan.n_decode == 3
+    assert sum(g.n_tokens for g in plan.grants) <= 16 - 3
+    assert plan.class_tokens["interactive"] == 0
+
+
+def test_slo_batch_spill_is_work_conserving():
+    """An idle interactive class donates its whole share down: with no
+    interactive/standard work at all, batch gets the full leftover."""
+    sched, eng = _mk_slo(64, 8, actives=[], prefilling=[],
+                         queue=[(24, 2, 0), (24, 2, 0)])
+    plan = sched.plan(eng)
+    assert plan.class_tokens["batch"] == 48
+    assert all(g.final for g in plan.grants)
+
+
+@settings(max_examples=25, deadline=None)
+@given(budget=st.integers(8, 128), align=st.integers(1, 16),
+       queue=st.lists(
+           st.tuples(st.integers(1, 200), st.integers(0, 2),
+                     st.integers(0, 5)),
+           min_size=1, max_size=8))
+def test_slo_trace_drains(budget, align, queue):
+    """Liveness under the class-aware packer: mixed-class traces drain
+    completely — strict priority starves nothing forever because
+    admitted work always finishes and frees its slot."""
+    budget = max(budget, align)
+    sched, eng = _mk_slo(budget, align, [], [], queue)
+    decoded = {}
+    next_slot = 1000
+    for step in range(10_000):
+        if not (eng.active or eng.prefilling or eng.queue):
+            break
+        plan = sched.plan(eng)
+        assert plan.n_decode == len(eng.active)
+        for slot, r in list(eng.active.items()):
+            decoded[r.rid] = decoded.get(r.rid, 0) + 1
+            if decoded[r.rid] >= 4:
+                del eng.active[slot]
+                eng._admit_order.remove(slot)
+        progressed = bool(plan.n_decode)
+        for g in plan.grants:
+            slot = g.slot
+            if slot is None:
+                eng.queue.remove(g.req)
+                slot = next_slot = next_slot + 1
+                eng.prefilling[slot] = g.req
+                eng._admit_order.append(slot)
+            g.req.prefill_pos += g.n_tokens
+            if g.final:
+                del eng.prefilling[slot]
+                eng.active[slot] = g.req
+            progressed = True
+        assert progressed, "slo scheduler stalled with work outstanding"
+    assert not (eng.active or eng.prefilling or eng.queue)

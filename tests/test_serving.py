@@ -7,7 +7,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import kvcache as KV
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec
 from repro.serving.simulator import SimConfig, simulate
 from repro.serving.workload import WorkloadConfig, generate
 
@@ -20,7 +21,7 @@ def test_engine_matches_direct_decode():
     rng = np.random.default_rng(0)
     prompt = rng.integers(2, cfg.vocab_size, size=8).astype(np.int32)
     eng = Engine(cfg, params, max_batch=2, max_len=64)
-    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    eng.submit(RequestSpec(rid=0, prompt=prompt, max_tokens=5))
     out = eng.run_until_done()[0].generated
 
     cache = T.init_cache(cfg, 1, 64, "float32")
@@ -47,12 +48,12 @@ def test_engine_interleaved_batching_isolated():
     solo = []
     for i, p in enumerate(prompts):
         e = Engine(cfg, params, max_batch=1, max_len=64)
-        e.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        e.submit(RequestSpec(rid=i, prompt=p, max_tokens=4))
         solo.append(e.run_until_done()[0].generated)
     # run together with 2 slots (forces queueing + slot reuse)
     e = Engine(cfg, params, max_batch=2, max_len=64)
     for i, p in enumerate(prompts):
-        e.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        e.submit(RequestSpec(rid=i, prompt=p, max_tokens=4))
     done = {r.rid: r.generated for r in e.run_until_done()}
     for i in range(4):
         assert done[i] == solo[i], f"request {i} perturbed by batching"
@@ -60,15 +61,15 @@ def test_engine_interleaved_batching_isolated():
 
 @pytest.mark.parametrize("cache_kind", ["dense", "paged"])
 def test_first_token_can_finish_request(cache_kind):
-    """max_new_tokens=1 is satisfied by the admission-sampled token: the
+    """max_tokens=1 is satisfied by the admission-sampled token: the
     request retires without ever occupying a decode slot."""
     cfg = get_config("tinyllama-1.1b").reduced()
     params = T.init_params(cfg, KEY, "float32")
     kw = {"block_size": 8} if cache_kind == "paged" else {}
     eng = Engine(cfg, params, max_batch=2, max_len=64,
                  cache_kind=cache_kind, **kw)
-    eng.submit(Request(rid=0, prompt=np.arange(2, 10).astype(np.int32),
-                       max_new_tokens=1))
+    eng.submit(RequestSpec(rid=0, prompt=np.arange(2, 10).astype(np.int32),
+                       max_tokens=1))
     done = eng.run_until_done()
     assert len(done) == 1 and len(done[0].generated) == 1
     assert not eng.active

@@ -1,0 +1,209 @@
+"""SLO plumbing end-to-end: the ``RequestSpec`` fields (``slo_class``,
+``deadline_ms``) must SURVIVE every path a request can take — engine
+admission, preemption + replay, mid-prefill migration between
+instances, and the versioned pause/resume wire payload — while the
+token stream stays identical to the solo-engine oracle.
+
+Also pins the migration payload versioning contract: an old- or
+alien-shape payload is rejected with a clear ``ValueError`` naming the
+version (a ``RemoteError`` over RPC), never a ``KeyError`` from deep
+inside the bind path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving.engine import Engine
+from repro.serving.orchestrator import Orchestrator
+from repro.serving.request import (MIGRATION_WIRE_VERSION, RequestSpec,
+                                   SamplingParams, SpecError)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tinyllama-1.1b").reduced()
+    return cfg, T.init_params(cfg, KEY, "float32")
+
+
+def _reference(cfg, params, specs):
+    out = {}
+    for s in specs:
+        e = Engine(cfg, params, max_batch=1, max_len=64,
+                   cache_kind="paged", block_size=8)
+        e.submit(s)
+        out[s.rid] = e.run_until_done()[0].generated
+    return out
+
+
+# --------------------------------------------------- spec round trips
+def test_spec_fields_round_trip_through_live_request():
+    spec = RequestSpec(rid=7, prompt=np.arange(2, 10, dtype=np.int32),
+                       max_tokens=5, slo_class="interactive",
+                       deadline_ms=500.0,
+                       sampling=SamplingParams(temperature=0.7, top_k=4,
+                                               seed=3))
+    req = spec.to_request()
+    assert req.slo_class == "interactive" and req.deadline_ms == 500.0
+    back = RequestSpec.from_request(req)
+    assert (back.rid, back.max_tokens, back.slo_class,
+            back.deadline_ms) == (7, 5, "interactive", 500.0)
+    assert back.sampling == spec.sampling
+    assert np.array_equal(back.prompt, spec.prompt)
+    # a spec is already pristine: from_request passes it through
+    assert RequestSpec.from_request(spec) is spec
+
+
+def test_spec_validation_codes():
+    base = dict(rid=0, prompt=np.arange(2, 6, dtype=np.int32))
+    with pytest.raises(SpecError) as e:
+        RequestSpec(slo_class="gold", **base).validate()
+    assert e.value.code == "unknown_slo_class"
+    with pytest.raises(SpecError) as e:
+        RequestSpec(deadline_ms=0, **base).validate()
+    assert e.value.code == "bad_deadline"
+    with pytest.raises(SpecError) as e:
+        RequestSpec(rid=0, prompt=np.zeros(0, dtype=np.int32)).validate()
+    assert e.value.code == "malformed"
+
+
+# ------------------------------------------- survival under preemption
+def test_slo_class_survives_preemption_token_identically(tiny):
+    """Pool pressure on an ``slo``-scheduled engine: preemption lands
+    on BATCH streams only, the victims replay token-identically, and
+    every finished request still carries its class and deadline."""
+    cfg, params = tiny
+    specs = [RequestSpec(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                         max_tokens=16, slo_class="interactive",
+                         deadline_ms=1000.0,
+                         sampling=SamplingParams(temperature=0.7,
+                                                 top_k=8, seed=11))]
+    specs += [RequestSpec(rid=i,
+                          prompt=np.arange(3 + i, 13 + i, dtype=np.int32),
+                          max_tokens=16, slo_class="batch",
+                          sampling=SamplingParams(temperature=0.7,
+                                                  top_k=8, seed=20 + i))
+              for i in range(1, 4)]
+    ref = _reference(cfg, params, specs)
+
+    # 12 blocks for 4 streams needing ~4 each: guaranteed pressure
+    e = Engine(cfg, params, max_batch=4, max_len=64, cache_kind="paged",
+               block_size=8, n_blocks=12, prefix_sharing=False,
+               scheduler="slo", token_budget=48)
+    live = [e.submit(s) for s in specs]
+    done = {r.rid: r for r in e.run_until_done()}
+    assert {r.rid: r.generated for r in done.values()} == ref
+    assert sum(r.preemptions for r in live) > 0, \
+        "workload did not exercise preemption"
+    # the victims policy never touched the interactive stream
+    assert done[0].preemptions == 0
+    for r in done.values():
+        assert r.slo_class == ("interactive" if r.rid == 0 else "batch")
+    assert done[0].deadline_ms == 1000.0
+
+
+# ----------------------------------------- survival across migration
+def test_slo_survives_mid_prefill_migration_token_identically(tiny):
+    """A chunked prefill paused MID-PROMPT, migrated to a second
+    instance, resumed there: the class/deadline arrive intact on the
+    destination's live request and the stream is token-identical."""
+    cfg, params = tiny
+    spec = RequestSpec(rid=0, prompt=np.arange(2, 42, dtype=np.int32),
+                       max_tokens=8, slo_class="interactive",
+                       deadline_ms=750.0,
+                       sampling=SamplingParams(temperature=0.6, top_k=8,
+                                               seed=5))
+    ref = _reference(cfg, params, [spec])
+
+    orch = Orchestrator(cfg, params, n_instances=2, max_batch=2,
+                        max_len=64, block_size=8, n_blocks=24,
+                        telemetry_every=10_000, scheduler="slo",
+                        token_budget=16)
+    orch._home[spec.rid] = 0
+    req = orch.engines[0].submit(spec)
+    orch.step()
+    assert req.slot in orch.engines[0].prefilling
+    assert 0 < req.prefill_pos < len(spec.prompt)      # genuinely mid
+
+    recs = orch.migrate_requests(0, 1)
+    assert len(recs) == 1 and recs[0].resumed
+    moved = next(r for r in
+                 list(orch.engines[1].active.values())
+                 + list(orch.engines[1].prefilling.values())
+                 + list(orch.engines[1].queue) if r.rid == 0)
+    assert moved.slo_class == "interactive"
+    assert moved.deadline_ms == 750.0
+
+    done = {r.rid: r.generated for r in orch.run_until_done()}
+    assert done == ref
+    assert orch.dropped == 0
+    orch.close()
+
+
+# --------------------------------------- versioned migration payloads
+def _paused_payload(tiny):
+    cfg, params = tiny
+    e = Engine(cfg, params, max_batch=2, max_len=64, cache_kind="paged",
+               block_size=8)
+    req = e.submit(RequestSpec(rid=0,
+                               prompt=np.arange(2, 12, dtype=np.int32),
+                               max_tokens=8, slo_class="batch"))
+    for _ in range(3):
+        e.step()
+    assert req.slot is not None
+    return e, e.pause_request(req.slot)
+
+
+def test_migration_payload_is_version_stamped(tiny):
+    _, payload = _paused_payload(tiny)
+    assert payload["v"] == MIGRATION_WIRE_VERSION
+    assert payload["request"].slo_class == "batch"
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda p: {k: v for k, v in p.items() if k != "v"},   # pre-version
+    lambda p: dict(p, v=1),                               # old version
+    lambda p: dict(p, v=MIGRATION_WIRE_VERSION + 1),      # future
+])
+def test_old_shape_payload_rejected_with_clear_error(tiny, mutate):
+    e, payload = _paused_payload(tiny)
+    bad = mutate(payload)
+    with pytest.raises(ValueError, match="migration payload version"):
+        e.resume_request(bad)
+    with pytest.raises(ValueError, match="migration payload version"):
+        e.prepare_resume(bad)
+    # the rejection left the pool untouched: the GOOD payload still
+    # resumes and decodes to completion
+    assert e.resume_request(payload)
+    (done,) = e.run_until_done()
+    assert done.rid == 0 and len(done.generated) == 8
+
+
+@pytest.mark.slow
+def test_old_shape_payload_rejected_over_rpc(tiny):
+    """The same rejection through a REAL spawned engine server: the
+    ValueError crosses the wire as RemoteError carrying the version
+    message — not a KeyError, not a dead worker."""
+    cfg, params = tiny
+    from repro.serving import transport as TR
+    from repro.serving.remote_engine import EngineProxy
+    _, payload = _paused_payload(tiny)
+    px = EngineProxy(cfg, params, max_batch=2, max_len=64, block_size=8)
+    try:
+        with pytest.raises(TR.RemoteError,
+                           match="migration payload version"):
+            px.resume_request({k: v for k, v in payload.items()
+                               if k != "v"})
+        assert px.alive()                    # the worker survived it
+        assert px.resume_request(payload)
+        done = []
+        for _ in range(40):
+            done += px.step()
+            if done:
+                break
+        assert done and done[0].rid == 0
+    finally:
+        px.close()

@@ -18,7 +18,8 @@ import pytest
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import transport as TR
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec, SamplingParams
 from repro.serving.instance import InstanceHandle, LocalInstance, pristine
 from repro.serving.instrument import EngineTelemetry
 from repro.serving.orchestrator import Orchestrator, RespawnPolicy
@@ -44,15 +45,18 @@ def _reference(cfg, params, requests):
     for r in requests:
         e = Engine(cfg, params, max_batch=1, max_len=64,
                    cache_kind="paged", block_size=8)
-        e.submit(pristine(r))
+        e.submit(r)
         out[r.rid] = e.run_until_done()[0].generated
     return out
 
 
 def _reqs(n, max_new=8):
-    return [Request(rid=i, prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
-                    max_new_tokens=max_new, temperature=0.7, top_k=8,
-                    seed=7 + i) for i in range(n)]
+    return [RequestSpec(rid=i,
+                        prompt=np.arange(2 + i, 12 + i, dtype=np.int32),
+                        max_tokens=max_new,
+                        sampling=SamplingParams(temperature=0.7, top_k=8,
+                                                seed=7 + i))
+            for i in range(n)]
 
 
 def _pump(orch, until, deadline_s=10.0):
@@ -134,8 +138,10 @@ def test_killed_worker_is_replayed_respawned_and_readmitted(tiny):
     assert [e["label"] for e in spawned] == ["w1~r1"]
     assert spawned[0]["downtime_s"] >= policy.backoff_base
     # re-admission is real: the replacement serves a pinned stream
-    post = Request(rid=10, prompt=np.arange(2, 12, dtype=np.int32),
-                   max_new_tokens=6, temperature=0.7, top_k=8, seed=17)
+    post = RequestSpec(rid=10, prompt=np.arange(2, 12, dtype=np.int32),
+                       max_tokens=6,
+                       sampling=SamplingParams(temperature=0.7, top_k=8,
+                                               seed=17))
     post_ref = _reference(cfg, params, [post])
     orch.instances[1].submit(post)
     orch._home[10] = 1
@@ -224,15 +230,15 @@ class SilentRemote(InstanceHandle):
         self._conn.close()
 
     # ---------------------------------------------------- serving ops
-    def submit(self, req):
-        self._mirror.append(pristine(req))   # mirror-first, then wire
+    def submit(self, spec, trace=None):
+        self._mirror.append(spec)            # mirror-first, then wire
         self._rpc.call_async("submit")       # vanishes into the hole
 
     def step_async(self):
         return self._rpc.call_async("step")
 
     def inflight_requests(self):
-        return [pristine(r) for r in self._mirror]
+        return list(self._mirror)
 
     # --------------------------------------- gauges the router reads
     def queue_len(self):
@@ -268,8 +274,10 @@ def test_hung_peer_is_classified_quarantined_and_replayed(tiny):
     silent = SilentRemote()
     orch = Orchestrator(cfg, params, handles=[local, silent],
                         telemetry_every=10_000, rpc_deadline=deadline)
-    req = Request(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
-                  max_new_tokens=6, temperature=0.7, top_k=8, seed=9)
+    req = RequestSpec(rid=0, prompt=np.arange(2, 12, dtype=np.int32),
+                      max_tokens=6,
+                      sampling=SamplingParams(temperature=0.7, top_k=8,
+                                              seed=9))
     ref = _reference(cfg, params, [req])
     orch.submit(req)
     assert orch._home[0] == 1          # vacancy routing chose the peer

@@ -16,7 +16,8 @@ from repro.core.monitor import MetricsSnapshot, Monitor
 from repro.core.plan import PlacementPlan
 from repro.core.speedup import speedup_homo
 from repro.models import transformer as T
-from repro.serving.engine import Engine, Request
+from repro.serving.engine import Engine
+from repro.serving.request import RequestSpec, SamplingParams
 from repro.serving.simulator import SimConfig, simulate
 from repro.serving.workload import WorkloadConfig
 
@@ -65,10 +66,10 @@ def test_full_serving_session_with_scaling():
     rng = np.random.default_rng(0)
     n = 10
     for i in range(n):
-        eng.submit(Request(rid=i,
+        eng.submit(RequestSpec(rid=i,
                            prompt=rng.integers(2, cfg.vocab_size,
                                                size=8).astype(np.int32),
-                           max_new_tokens=5))
+                           max_tokens=5))
     done = eng.run_until_done()
     assert len(done) == n
     assert all(len(r.generated) == 5 for r in done)
@@ -84,13 +85,13 @@ def test_full_serving_session_paged():
     rng = np.random.default_rng(0)
     n = 8
     for i in range(n):
-        eng.submit(Request(rid=i,
-                           prompt=rng.integers(2, cfg.vocab_size,
-                                               size=6 + i % 3)
-                           .astype(np.int32),
-                           max_new_tokens=5,
-                           temperature=0.8 if i % 2 else 0.0,
-                           top_k=16, seed=i))
+        eng.submit(RequestSpec(
+            rid=i,
+            prompt=rng.integers(2, cfg.vocab_size,
+                                size=6 + i % 3).astype(np.int32),
+            max_tokens=5,
+            sampling=SamplingParams(temperature=0.8 if i % 2 else 0.0,
+                                    top_k=16, seed=i)))
     done = eng.run_until_done()
     assert len(done) == n
     assert all(len(r.generated) == 5 for r in done)
@@ -112,9 +113,9 @@ def test_engine_single_host_sync_per_step(cache_kind):
                  cache_kind=cache_kind, **kw)
     rng = np.random.default_rng(1)
     for i in range(4):
-        eng.submit(Request(rid=i,
+        eng.submit(RequestSpec(rid=i,
                            prompt=rng.integers(2, cfg.vocab_size, size=7)
-                           .astype(np.int32), max_new_tokens=16))
+                           .astype(np.int32), max_tokens=16))
     eng.step()  # admissions (prefill syncs allowed here)
     for _ in range(4):  # steady-state decode
         with count_host_syncs() as c:
